@@ -1,0 +1,68 @@
+"""Shared benchmark setup mirroring the paper's §5.2 testbed:
+
+  * 6 GPU workers in equal proportion: H100 NVL 94GB / RTX4090 48GB /
+    RTX4090 24GB (Vast.ai Oct-2025-style pricing in the cost model);
+  * exponentially decaying arrivals 6 -> 0.6 qpm;
+  * Group A: 200 agentic workflows, batch 24;
+  * Group B: adds SFT/DPO/PPO pipelines, batch 12.
+
+All experiments run the REAL control-plane code on the virtual-time
+simulator; numbers are deterministic per seed.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.autoscaler import AutoscalerConfig
+from repro.core.backends import KubernetesBackend, VastAiBackend
+from repro.core.control_plane import EngineConfig, FlowMeshEngine
+from repro.core.scheduler import POLICIES
+from repro.core.simulator import SimExecutor
+from repro.core.workloads import WorkloadCfg, WorkloadGen
+
+TESTBED_6 = ["h100-nvl-94g", "h100-nvl-94g", "rtx4090-48g", "rtx4090-48g",
+             "rtx4090-24g", "rtx4090-24g"]
+
+
+def build_engine(policy_name: str = "flowmesh", *, elastic: bool | None = None,
+                 workers: list[str] | None = None, seed: int = 0,
+                 backend=None, max_workers: int = 12,
+                 policy=None, engine_cfg: EngineConfig | None = None,
+                 ) -> FlowMeshEngine:
+    policy = policy or POLICIES[policy_name]()
+    if elastic is None:
+        elastic = policy_name == "flowmesh"
+    eng = FlowMeshEngine(
+        policy=policy,
+        executor=SimExecutor(seed=seed + 17),
+        backend=backend or KubernetesBackend(),
+        autoscaler=AutoscalerConfig(enabled=elastic, max_workers=max_workers,
+                                    idle_timeout_s=90.0, tick_s=10.0),
+        config=engine_cfg or EngineConfig(seed=seed),
+    )
+    eng.bootstrap_workers(workers if workers is not None else TESTBED_6)
+    return eng
+
+
+def submit_workload(eng: FlowMeshEngine, *, group: str, n: int, seed: int = 0,
+                    horizon_s: float = 3600.0, batch: int | None = None,
+                    ) -> None:
+    batch = batch or (24 if group == "A" else 12)
+    gen = WorkloadGen(WorkloadCfg(seed=seed, max_batch=batch))
+    for t, dag in gen.make_workload(group, n, horizon_s=horizon_s):
+        eng.submit(dag, at=t)
+
+
+def run_experiment(policy_name: str, *, group: str = "A", n: int = 200,
+                   seed: int = 0, horizon_s: float = 3600.0,
+                   **engine_kw):
+    eng = build_engine(policy_name, seed=seed, **engine_kw)
+    submit_workload(eng, group=group, n=n, seed=seed, horizon_s=horizon_s)
+    t0 = time.perf_counter()
+    tel = eng.run()
+    wall = time.perf_counter() - t0
+    return eng, tel, wall
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

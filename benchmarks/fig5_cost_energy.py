@@ -1,0 +1,74 @@
+"""Figure 5: total cost & energy + CDP/EDP, FlowMesh vs MF/DS/DR.
+
+Paper claims to validate: cost reduced 1.8-3.8x, energy 1.3-2.0x,
+CDP/EDP 2-10x better, at similar or better latency.
+"""
+from __future__ import annotations
+
+from .common import csv_line, run_experiment
+
+SYSTEMS = ["flowmesh", "mf", "ds", "dr"]
+
+
+def run(n: int = 200, seed: int = 0, group: str = "A") -> dict:
+    rows = {}
+    for name in SYSTEMS:
+        eng, tel, wall = run_experiment(name, group=group, n=n, seed=seed,
+                                horizon_s=1500.0)
+        s = tel.summary()
+        rows[name] = {
+            "cost_usd": s["total_cost_usd"],
+            "energy_kj": s["total_energy_kj"],
+            "cdp": s["cdp"],
+            "edp_kjs": s["edp_kjs"],
+            "avg_latency_s": s["avg_latency_s"],
+            "dedup_savings": s["dedup_savings"],
+            "wall_s": round(wall, 2),
+        }
+    fm = rows["flowmesh"]
+    best_base_cost = min(rows[b]["cost_usd"] for b in SYSTEMS[1:])
+    worst_base_cost = max(rows[b]["cost_usd"] for b in SYSTEMS[1:])
+    rows["ratios"] = {
+        "cost_reduction_min":
+            round(best_base_cost / max(fm["cost_usd"], 1e-9), 2),
+        "cost_reduction_max":
+            round(worst_base_cost / max(fm["cost_usd"], 1e-9), 2),
+        "energy_reduction_min": round(
+            min(rows[b]["energy_kj"] for b in SYSTEMS[1:])
+            / max(fm["energy_kj"], 1e-9), 2),
+        "energy_reduction_max": round(
+            max(rows[b]["energy_kj"] for b in SYSTEMS[1:])
+            / max(fm["energy_kj"], 1e-9), 2),
+        "cdp_improvement_max": round(
+            max(rows[b]["cdp"] for b in SYSTEMS[1:])
+            / max(fm["cdp"], 1e-9), 2),
+        "edp_improvement_max": round(
+            max(rows[b]["edp_kjs"] for b in SYSTEMS[1:])
+            / max(fm["edp_kjs"], 1e-9), 2),
+    }
+    return rows
+
+
+def main(fast: bool = False) -> list[str]:
+    rows = run(n=60 if fast else 200)
+    lines = []
+    for name in SYSTEMS:
+        r = rows[name]
+        lines.append(csv_line(
+            f"fig5.{name}", r["wall_s"] * 1e6 / max(1, 1),
+            f"cost=${r['cost_usd']};energy={r['energy_kj']}kJ;"
+            f"cdp={r['cdp']};edp={r['edp_kjs']};lat={r['avg_latency_s']}s"))
+    t = rows["ratios"]
+    lines.append(csv_line(
+        "fig5.ratios", 0.0,
+        f"cost_red={t['cost_reduction_min']}-{t['cost_reduction_max']}x"
+        f"(paper:1.8-3.8x);energy_red={t['energy_reduction_min']}-"
+        f"{t['energy_reduction_max']}x(paper:1.3-2.0x);"
+        f"cdp_up={t['cdp_improvement_max']}x;edp_up={t['edp_improvement_max']}x"
+        f"(paper:2-10x)"))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

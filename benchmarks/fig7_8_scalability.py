@@ -1,0 +1,74 @@
+"""Figures 7+8: Kubernetes-cluster scalability — completed tasks/min and
+queueing time vs worker count (8 -> 48 H100 nodes, 64 concurrent tenants).
+
+Paper: Group A 17 -> 32 tasks/min (8 -> 48 workers); Group B 13 -> 26;
+queueing 400 s -> 150 s; sub-linear scaling.
+"""
+from __future__ import annotations
+
+from .common import csv_line, run_experiment
+
+
+def run(seed: int = 0, n: int = 192, counts=(8, 16, 32, 48)) -> dict:
+    """Paper setup: 64 CONCURRENT submissions keep the queue saturated —
+    throughput is capacity-bound, so it scales (sub-linearly) with workers
+    and queueing time falls as the pool grows."""
+    from repro.core.workloads import WorkloadCfg, WorkloadGen
+
+    from .common import build_engine
+
+    out: dict = {}
+    for group in ("A", "B"):
+        rows = {}
+        for k in counts:
+            eng = build_engine("flowmesh", seed=seed, elastic=False,
+                               workers=["h100-nvl-94g"] * k)
+            gen = WorkloadGen(WorkloadCfg(
+                seed=seed, max_batch=24 if group == "A" else 12))
+            sample = (gen.sample_group_a if group == "A"
+                      else gen.sample_group_b)
+            # waves of 64 concurrent tenants; next wave as the queue drains
+            for wave in range(n // 64):
+                for _ in range(64):
+                    eng.submit(sample(), at=wave * 120.0)
+            tel = eng.run()
+            span = max(max(tel.dag_completions), 1.0) \
+                if tel.dag_completions else 1.0
+            rows[k] = {
+                "tasks_per_min": round(60.0 * tel.n_tasks / span, 1),
+                "queue_s": round(tel.avg_queue_wait, 1),
+                "lat_s": round(tel.avg_latency, 1),
+            }
+        out[group] = rows
+    return out
+
+
+def main(fast: bool = False) -> list[str]:
+    rows = run(n=64 if fast else 192,
+               counts=(8, 48) if fast else (8, 16, 32, 48))
+    lines = []
+    for group, r in rows.items():
+        ks = sorted(r)
+        tp = {k: r[k]["tasks_per_min"] for k in ks}
+        q = {k: r[k]["queue_s"] for k in ks}
+        scaling = round(tp[ks[-1]] / max(tp[ks[0]], 1e-9), 2)
+        sub_linear = tp[ks[-1]] / max(tp[ks[0]], 1e-9) < ks[-1] / ks[0]
+        queue_drops = q[ks[-1]] <= q[ks[0]]
+        note = ""
+        if scaling < 1.1:
+            note = (";note=consolidation collapses the burst - pool "
+                    "saturates at arrival rate even at 8 workers")
+        lines.append(csv_line(
+            f"fig7.group{group}", 0.0,
+            ";".join(f"w{k}={tp[k]}tpm" for k in ks)
+            + f";scaling={scaling}x;sub_linear={sub_linear}" + note))
+        lines.append(csv_line(
+            f"fig8.group{group}", 0.0,
+            ";".join(f"w{k}={q[k]}s" for k in ks)
+            + f";queue_drops_with_scale={queue_drops}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

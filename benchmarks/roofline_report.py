@@ -1,0 +1,64 @@
+"""Roofline table: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) terms."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_line
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        if "__" not in os.path.basename(path):
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if d.get("tag"):
+            continue           # perf-iteration variants excluded from table
+        cells.append(d)
+    return cells
+
+
+def main(fast: bool = False) -> list[str]:
+    lines = []
+    cells = load_cells()
+    if not cells:
+        return [csv_line("roofline.missing", 0.0,
+                         "run `python -m repro.launch.dryrun --all` first")]
+    n_ok = n_skip = n_err = 0
+    for d in cells:
+        name = f"roofline.{d['arch']}.{d['shape']}.{d.get('mesh','?')}"
+        if d.get("status") == "skipped":
+            n_skip += 1
+            lines.append(csv_line(name, 0.0, f"SKIP:{d['reason'][:60]}"))
+            continue
+        if d.get("status") != "ok":
+            n_err += 1
+            lines.append(csv_line(name, 0.0,
+                                  f"ERROR:{d.get('error','?')[:60]}"))
+            continue
+        n_ok += 1
+        lines.append(csv_line(
+            name, d["bound_s"] * 1e6,
+            f"dom={d['dominant']};comp={d['compute_s'] * 1e3:.1f}ms;"
+            f"mem={d['memory_s'] * 1e3:.1f}ms;"
+            f"coll={d['collective_s'] * 1e3:.1f}ms;"
+            f"frac={d['roofline_fraction']:.3f};"
+            f"useful={d['useful_fraction']:.2f};"
+            f"GB/dev={d.get('tpu_bytes_per_device', 0) / 1e9:.1f};"
+            f"fits={d.get('fits_v5e')}"))
+    lines.append(csv_line("roofline.summary", 0.0,
+                          f"ok={n_ok};skipped={n_skip};errors={n_err}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

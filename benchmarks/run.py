@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + roofline/kernels.
+Prints ``name,us_per_call,derived`` CSV. ``--fast`` shrinks workloads."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings")
+    args = ap.parse_args()
+
+    from . import (fig5_cost_energy, fig6_latency_workers, fig7_8_scalability,
+                   fig9_elasticity, kernel_micro, roofline_report,
+                   table3_ablation, table4_robustness)
+    modules = [fig5_cost_energy, fig6_latency_workers, table3_ablation,
+               table4_robustness, fig7_8_scalability, fig9_elasticity,
+               kernel_micro, roofline_report]
+    if args.only:
+        keys = args.only.split(",")
+        modules = [m for m in modules if any(k in m.__name__ for k in keys)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        t0 = time.perf_counter()
+        try:
+            for line in mod.main(fast=args.fast):
+                print(line)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}")
+            failures += 1
+        dt = time.perf_counter() - t0
+        print(f"{mod.__name__}.wall,{dt * 1e6:.0f},seconds={dt:.1f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,73 @@
+"""Table 4: robustness under worker crash and wrong resource specification.
+
+Paper: crash -> +13.3% avg latency, 30.0 s detection;
+       wrong spec -> +5.1% latency, 8.6 s detection.
+"""
+from __future__ import annotations
+
+from repro.core.scheduler import FlowMeshScheduler
+from repro.core.simulator import FaultInjector
+from repro.core.workloads import WorkloadCfg, WorkloadGen
+
+from .common import build_engine, csv_line, submit_workload
+
+
+def run(n: int = 80, seed: int = 0) -> dict:
+    # healthy reference on a BUSY cluster (arrivals compressed to 600 s)
+    eng = build_engine("flowmesh", seed=seed, elastic=False)
+    submit_workload(eng, group="A", n=n, seed=seed, horizon_s=600.0)
+    base = eng.run()
+
+    # --- worker crash at t=120 s (paper: kill one H100 after 2 min) ---
+    eng2 = build_engine("flowmesh", seed=seed, elastic=False)
+    submit_workload(eng2, group="A", n=n, seed=seed, horizon_s=600.0)
+    FaultInjector.crash_worker(eng2, at_s=120.0, index=0)
+    crash = eng2.run()
+    crash_detect = [d for _, w, d in crash.failures_detected
+                    if not w.endswith("resource_shortage")]
+
+    # --- wrong resource spec (isolated, as §5.3: one multi-stage workflow)
+    eng3 = build_engine("flowmesh", seed=seed, elastic=False,
+                        policy=FlowMeshScheduler(w_c=2.0),
+                        workers=["rtx4090-24g", "h100-nvl-94g"])
+    gen = WorkloadGen(WorkloadCfg(seed=seed + 999))
+    bad = gen.sft_pipeline()
+    bad.ops["sft"].model_id = "llama-3.2-3b"
+    bad.ops["sft"].params["lora"] = False
+    FaultInjector.understate_vram(bad, "sft", claimed_gb=8.0)
+    eng3.submit(bad, at=0.0)
+    wrong = eng3.run()
+    wrong_detect = [d for t, w, d in wrong.failures_detected
+                    if "resource_shortage" in w]
+
+    return {
+        "base_lat": base.avg_latency,
+        "crash_lat_up_pct": round(
+            100 * (crash.avg_latency / max(base.avg_latency, 1e-9) - 1), 1),
+        "crash_detect_s": round(sum(crash_detect) / len(crash_detect), 1)
+            if crash_detect else None,
+        "crash_completed": crash.n_tasks == n,
+        "wrong_detect_s": round(sum(wrong_detect) / len(wrong_detect), 1)
+            if wrong_detect else None,
+        "wrong_completed": wrong.n_tasks == 1,
+        "wrong_retries": wrong.retries,
+    }
+
+
+def main(fast: bool = False) -> list[str]:
+    r = run(n=30 if fast else 80)
+    return [
+        csv_line("table4.worker_crash", 0.0,
+                 f"latency_up={r['crash_lat_up_pct']}%(paper:+13.3%);"
+                 f"detect={r['crash_detect_s']}s(paper:30.0s);"
+                 f"all_completed={r['crash_completed']}"),
+        csv_line("table4.wrong_spec", 0.0,
+                 f"detect={r['wrong_detect_s']}s(paper:8.6s);"
+                 f"retries={r['wrong_retries']};"
+                 f"all_completed={r['wrong_completed']}"),
+    ]
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,54 @@
+"""Regenerate the §Dry-run/§Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json. Prints markdown to stdout."""
+import glob
+import json
+import os
+import sys
+
+DIR = "experiments/dryrun"
+
+
+def rows(mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DIR, f"*{mesh}.json"))):
+        d = json.load(open(p))
+        if d.get("tag"):
+            continue
+        out.append(d)
+    return out
+
+
+def fmt_ms(x):
+    return f"{x * 1e3:.1f}"
+
+
+def table(mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | dom | compute ms | memory ms | coll ms | "
+          "kernel-adj mem ms | frac | frac(kadj) | useful | GB/dev (TPU) | "
+          "fits v5e |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows(mesh):
+        if d.get("status") == "skipped":
+            print(f"| {d['arch']} | {d['shape']} | — | — | — | — | — | — |"
+                  f" — | — | SKIP: sub-quadratic-only cell |")
+            continue
+        if d.get("status") != "ok":
+            print(f"| {d['arch']} | {d['shape']} | ERR | | | | | | | |"
+                  f" {d.get('error','')[:40]} |")
+            continue
+        print(
+            f"| {d['arch']} | {d['shape']} | {d['dominant'][:4]} | "
+            f"{fmt_ms(d['compute_s'])} | {fmt_ms(d['memory_s'])} | "
+            f"{fmt_ms(d['collective_s'])} | "
+            f"{fmt_ms(d.get('memory_kernel_s', d['memory_s']))} | "
+            f"{d['roofline_fraction']:.3f} | "
+            f"{d.get('roofline_fraction_kernel', 0):.3f} | "
+            f"{d['useful_fraction']:.2f} | "
+            f"{d.get('tpu_bytes_per_device', 0) / 1e9:.1f} | "
+            f"{'Y' if d.get('fits_v5e') else 'NO'} |")
+
+
+if __name__ == "__main__":
+    for mesh in ("pod16x16", "pod2x16x16"):
+        table(mesh)

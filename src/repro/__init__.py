@@ -1,0 +1,2 @@
+"""repro: FlowMesh reproduction - multi-tenant LLM workflow fabric in JAX."""
+__version__ = "1.0.0"

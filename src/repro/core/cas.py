@@ -1,0 +1,154 @@
+"""Content-addressable store (CAS) — the data plane's source of truth.
+
+Every artifact (model checkpoints, adapters, tokenizers, rollout samples,
+reward scores, eval traces) is immutable and named by the hash of its bytes.
+Properties the fabric relies on (§3.2–3.3):
+
+  * at-most-once publication: ``publish`` is idempotent — the first write wins,
+    duplicate/speculative completions are discarded by content identity;
+  * provenance: downstream stages receive immutable hashes, never pointers;
+  * retry safety: a retried operator re-reads the exact same inputs.
+
+Backends: in-memory dict (simulation / tests) and a directory on disk
+(checkpoints, examples). Both enforce immutability.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+from typing import Any, Iterator
+
+from .identity import content_hash
+
+
+class IntegrityError(RuntimeError):
+    pass
+
+
+class CAS:
+    """In-memory content-addressable store with byte-accounting."""
+
+    def __init__(self) -> None:
+        self._blobs: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.puts = 0            # write attempts
+        self.dedup_hits = 0      # writes skipped because content already present
+        self.gets = 0
+        self.bytes_written = 0
+
+    # -- raw byte interface -------------------------------------------------
+    def put_bytes(self, data: bytes) -> str:
+        key = content_hash(data)
+        with self._lock:
+            self.puts += 1
+            if key not in self._blobs:
+                self._blobs[key] = data
+                self.bytes_written += len(data)
+            else:
+                self.dedup_hits += 1
+        return key
+
+    def get_bytes(self, key: str) -> bytes:
+        with self._lock:
+            self.gets += 1
+            try:
+                return self._blobs[key]
+            except KeyError:
+                raise KeyError(f"CAS miss: {key}") from None
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._blobs
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    def keys(self) -> Iterator[str]:
+        return iter(list(self._blobs))
+
+    def size_of(self, key: str) -> int:
+        return len(self._blobs[key])
+
+    # -- object interface (pickle round-trip) --------------------------------
+    def put(self, obj: Any) -> str:
+        return self.put_bytes(pickle.dumps(obj, protocol=4))
+
+    def get(self, key: str) -> Any:
+        return pickle.loads(self.get_bytes(key))
+
+    # -- at-most-once publication --------------------------------------------
+    def publish(self, data: bytes) -> tuple[str, bool]:
+        """Returns (key, won). ``won`` is False when an identical artifact was
+        already published (late speculative replica -> discarded)."""
+        key = content_hash(data)
+        with self._lock:
+            self.puts += 1
+            if key in self._blobs:
+                self.dedup_hits += 1
+                return key, False
+            self._blobs[key] = data
+            self.bytes_written += len(data)
+            return key, True
+
+
+class DiskCAS(CAS):
+    """Directory-backed CAS (used for checkpoints and cross-process examples).
+
+    Layout: <root>/<hash[:2]>/<hash>. Writes are atomic (tmp + rename) so a
+    preempted worker can never corrupt a published artifact.
+    """
+
+    def __init__(self, root: str) -> None:
+        super().__init__()
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key)
+
+    def put_bytes(self, data: bytes) -> str:
+        key = content_hash(data)
+        path = self._path(key)
+        with self._lock:
+            self.puts += 1
+            if os.path.exists(path):
+                self.dedup_hits += 1
+                return key
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)  # atomic publication
+            self.bytes_written += len(data)
+        return key
+
+    def get_bytes(self, key: str) -> bytes:
+        with self._lock:
+            self.gets += 1
+        path = self._path(key)
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            raise KeyError(f"CAS miss: {key}") from None
+        if content_hash(data) != key:
+            raise IntegrityError(f"corrupt artifact {key}")
+        return data
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def keys(self) -> Iterator[str]:
+        for sub in os.listdir(self.root):
+            subdir = os.path.join(self.root, sub)
+            if os.path.isdir(subdir):
+                for k in os.listdir(subdir):
+                    if not k.endswith(tuple(f".tmp.{''}",)) and ".tmp." not in k:
+                        yield k
+
+    def publish(self, data: bytes) -> tuple[str, bool]:
+        key = content_hash(data)
+        existed = key in self
+        self.put_bytes(data)
+        return key, not existed

@@ -1,0 +1,449 @@
+"""FlowMesh engine: global control plane + elastic data plane.
+
+One discrete-event engine drives both simulated (virtual-time, analytic cost)
+and real (JAX compute, measured durations) execution — the control-plane
+logic (consolidation, Eq. 1 scheduling, continuous admission, watchdog
+recovery, speculation, autoscaling) is byte-identical across modes and across
+scheduler policies, which is what makes the baseline comparisons fair.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+import statistics
+from dataclasses import dataclass, field
+from typing import Any
+
+from .autoscaler import Autoscaler, AutoscalerConfig
+from .backends import KubernetesBackend, Provisioner
+from .cas import CAS
+from .consolidation import ReadyPool
+from .cost_model import DEVICE_CLASSES, model_vram_gb
+from .dag import OpState, OperatorSpec, OpType, TRAINING_TYPES, WorkflowDAG
+from .scheduler import (FlowMeshScheduler, SchedulerPolicy, estimate_exec,
+                        feasible, vram_needed_gb)
+from .telemetry import Telemetry
+from .worker import (DispatchBatch, ExecResult, ExecutionGroup, Executor,
+                     Worker, WorkerState)
+
+
+# ---------------------------------------------------------------------------
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: Any = field(compare=False, default=None)
+
+
+@dataclass
+class EngineConfig:
+    heartbeat_s: float = 10.0
+    watchdog_s: float = 30.0          # paper: detection after one full period
+    speculation: bool = True
+    spec_check_s: float = 15.0
+    spec_factor: float = 2.5          # replicate when > factor * median
+    max_attempts: int = 4
+    #: admission coalescing window: same-instant ready ops form one slice
+    dispatch_window_s: float = 0.25
+    #: virtual-time stall guard: abort if no progress for this long
+    stall_limit_s: float = 1800.0
+    seed: int = 0
+
+
+class FlowMeshEngine:
+    def __init__(self, *, policy: SchedulerPolicy | None = None,
+                 executor: Executor, cas: CAS | None = None,
+                 backend: Provisioner | None = None,
+                 autoscaler: AutoscalerConfig | None = None,
+                 config: EngineConfig | None = None) -> None:
+        self.policy = policy or FlowMeshScheduler()
+        self.executor = executor
+        self.cas = cas or CAS()
+        self.backend = backend or KubernetesBackend()
+        self.cfg = config or EngineConfig()
+        self.autoscaler = Autoscaler(autoscaler or AutoscalerConfig(),
+                                     self.backend)
+        self.rng = random.Random(self.cfg.seed)
+
+        self.now = 0.0
+        self._seq = itertools.count()
+        self._events: list[_Event] = []
+        self.dags: dict[str, WorkflowDAG] = {}
+        self.pool = ReadyPool()
+        self.workers: dict[str, Worker] = {}
+        self.result_index: dict[str, str] = {}     # H_task -> output hash
+        self.telemetry = Telemetry()
+        self._service_times: dict[str, list[float]] = {}   # h_exec -> durations
+        self._unfinished = 0
+        self._recurring_started = False
+        self._arrival_horizon = 0.0
+        self._dispatch_pending = False
+        self._last_progress = 0.0
+        self.stalled = False
+
+    # ------------------------------------------------------------- events --
+    def _push(self, t: float, kind: str, payload: Any = None) -> None:
+        heapq.heappush(self._events, _Event(t, next(self._seq), kind, payload))
+
+    # ---------------------------------------------------------- public API --
+    def bootstrap_workers(self, device_classes: list[str], *,
+                          backend_name: str = "static") -> list[str]:
+        """Provision a static pool, ACTIVE at t=0 (used by fixed-pool
+        experiments and the elasticity-disabled ablation)."""
+        ids = []
+        for cls in device_classes:
+            dev = DEVICE_CLASSES[cls]
+            wid = f"{backend_name}-{cls}-{len(self.workers)}"
+            w = Worker(wid, dev, now=self.now,
+                       perf_noise=self.rng.uniform(0.92, 1.12),
+                       backend=backend_name)
+            w.state = WorkerState.ACTIVE
+            w.idle_since = self.now
+            self.workers[wid] = w
+            ids.append(wid)
+        return ids
+
+    def submit(self, dag: WorkflowDAG, at: float = 0.0) -> None:
+        if self.policy.monolithic:
+            dag = self._monolithize(dag)
+        dag.submitted_at = at
+        self._unfinished += 1
+        self._arrival_horizon = max(self._arrival_horizon, at)
+        self._push(at, "arrival", dag)
+
+    def inject_crash(self, worker_id_or_index, at: float) -> None:
+        self._push(at, "crash", worker_id_or_index)
+
+    def run(self, until: float | None = None) -> Telemetry:
+        if not self._recurring_started:
+            self._recurring_started = True
+            self._push(self.now + self.cfg.heartbeat_s, "heartbeat")
+            self._push(self.now + self.cfg.watchdog_s, "watchdog")
+            self._push(self.now + self.autoscaler.cfg.tick_s, "autoscale")
+            if self.cfg.speculation:
+                self._push(self.now + self.cfg.spec_check_s, "spec_check")
+        while self._events:
+            if self._unfinished == 0 and self.now >= self._arrival_horizon:
+                break
+            ev = heapq.heappop(self._events)
+            if until is not None and ev.time > until:
+                break
+            self.now = ev.time
+            if (self._unfinished and
+                    self.now - self._last_progress > self.cfg.stall_limit_s):
+                # starvation: pending work that no lane can ever serve
+                self.stalled = True
+                break
+            getattr(self, f"_on_{ev.kind}")(ev.payload)
+        self._finalize()
+        return self.telemetry
+
+    # ------------------------------------------------------------ handlers --
+    def _on_arrival(self, dag: WorkflowDAG) -> None:
+        self.dags[dag.dag_id] = dag
+        self._last_progress = self.now
+        self._refresh_and_offer(dag)
+        self._schedule_dispatch()
+
+    def _on_worker_ready(self, wid: str) -> None:
+        w = self.workers.get(wid)
+        if w is None or w.state is WorkerState.DEAD:
+            return
+        w.state = WorkerState.ACTIVE
+        w.idle_since = self.now
+        self._last_progress = self.now
+        self.autoscaler.pending_leases = max(0, self.autoscaler.pending_leases - 1)
+        self._schedule_dispatch()
+
+    def _on_heartbeat(self, _=None) -> None:
+        for w in self.workers.values():
+            if w.state in (WorkerState.ACTIVE, WorkerState.DRAINING) and \
+                    not getattr(w, "crashed", False):
+                w.last_heartbeat = self.now
+        if self._unfinished:
+            self._push(self.now + self.cfg.heartbeat_s, "heartbeat")
+
+    def _on_crash(self, which) -> None:
+        w = None
+        if isinstance(which, int):
+            active = [x for x in self.workers.values()
+                      if x.state is WorkerState.ACTIVE]
+            # fault injection prefers a BUSY worker (a crash of an idle node
+            # loses nothing; the paper's scenario kills one mid-flight)
+            busy = [x for x in active if x.current is not None]
+            pool = busy or active
+            if pool:
+                w = pool[which % len(pool)]
+        else:
+            w = self.workers.get(which)
+        if w is None:
+            return
+        w.crashed = True
+        w.crashed_at = self.now   # heartbeats stop; watchdog will detect
+
+    def _on_watchdog(self, _=None) -> None:
+        for w in list(self.workers.values()):
+            if w.state is not WorkerState.ACTIVE:
+                continue
+            if self.now - w.last_heartbeat >= self.cfg.watchdog_s:
+                self._fail_worker(w)
+        if self._unfinished:
+            self._push(self.now + self.cfg.watchdog_s, "watchdog")
+        self._schedule_dispatch()
+
+    def _fail_worker(self, w: Worker) -> None:
+        """Crash path: atomically return RUNNING work to READY (§3.3)."""
+        crashed_at = getattr(w, "crashed_at", self.now)
+        self.telemetry.failures_detected.append(
+            (self.now, w.worker_id, self.now - crashed_at))
+        w.state = WorkerState.DEAD
+        w.meter.retired_at = self.now
+        requeued = 0
+        batches = w.drain()
+        if w.current is not None:
+            batches.append(w.current)
+            w.current = None
+        for b in batches:
+            for g in b.groups:
+                g.running_on.discard(w.worker_id)
+                if not g.done and not g.running_on:
+                    self.pool.requeue(g)
+                    requeued += 1
+        self.telemetry.retries += requeued
+        self.backend.terminate(w.worker_id, self.now)
+
+    def _on_autoscale(self, _=None) -> None:
+        pending = self.pool.pending_by_exec()
+        oldest = self.pool.oldest_wait
+        age = (self.now - oldest) if oldest != float("inf") else 0.0
+        decision = self.autoscaler.decide(
+            now=self.now, pending=pending, workers=self.workers.values(),
+            oldest_wait_age=age)
+        for offer in decision.leases:
+            wid, ready_at = self.backend.lease(offer, self.now)
+            w = Worker(wid, offer.dev, now=self.now,
+                       perf_noise=self.rng.uniform(0.92, 1.12),
+                       backend=self.backend.name)
+            self.workers[wid] = w
+            self.autoscaler.pending_leases += 1
+            self._push(ready_at, "worker_ready", wid)
+        for wid in decision.retire:
+            w = self.workers.get(wid)
+            if w and w.state is WorkerState.ACTIVE and w.current is None:
+                w.state = WorkerState.DEAD
+                w.meter.retired_at = self.now
+                self.backend.terminate(wid, self.now)
+        n_active = sum(1 for w in self.workers.values()
+                       if w.state is WorkerState.ACTIVE)
+        self.telemetry.scaling_trace.append(
+            (self.now, n_active, self.pool.depth))
+        if self._unfinished:
+            self._push(self.now + self.autoscaler.cfg.tick_s, "autoscale")
+
+    def _on_spec_check(self, _=None) -> None:
+        for g in self.pool.running_groups():
+            h = g.h_exec
+            hist = self._service_times.get(h)
+            if not hist or len(g.running_on) >= 2 or g.dispatch_at is None:
+                continue
+            med = statistics.median(hist)
+            if self.now - g.dispatch_at > self.cfg.spec_factor * med + 5.0:
+                self._launch_replica(g)
+        if self._unfinished and self.cfg.speculation:
+            self._push(self.now + self.cfg.spec_check_s, "spec_check")
+
+    def _launch_replica(self, g: ExecutionGroup) -> None:
+        cands = [w for w in self.workers.values()
+                 if w.can_admit() and w.worker_id not in g.running_on
+                 and feasible(g.spec, w)]
+        if not cands:
+            return
+        w = max(cands, key=lambda w: w.dev.flops * (2.0 if w.is_hot_for(
+            g.spec.h_model) else 1.0))
+        batch = DispatchBatch(batch_id=-1, h_exec=g.h_exec, groups=[g],
+                              worker_id=w.worker_id, admitted_at=self.now,
+                              speculative=True)
+        g.running_on.add(w.worker_id)
+        g.attempts += 1
+        self.telemetry.speculative_launches += 1
+        w.admit(batch)
+        if w.current is None:
+            self._start_next(w)
+
+    # ------------------------------------------------------- dispatch path --
+    def _refresh_and_offer(self, dag: WorkflowDAG) -> None:
+        for name in dag.refresh_ready(self.cas):
+            self._offer(dag, name)
+
+    def _offer(self, dag: WorkflowDAG, op_name: str) -> None:
+        disp, group = self.pool.offer(
+            dag, op_name, now=self.now, result_index=self.result_index,
+            dedup=self.policy.dedup)
+        if disp == "cached":
+            # instant completion from the result index (dedup across time)
+            out = self.result_index[dag.h_task[op_name]]
+            self.telemetry.dedup_savings += 1
+            dag.state[op_name] = OpState.COMPLETED
+            dag.complete(op_name, out, executed=False, worker=None,
+                         now=self.now)
+            self._after_complete(dag)
+
+    def _after_complete(self, dag: WorkflowDAG) -> None:
+        if dag.done:
+            self._unfinished -= 1
+            lat = dag.latency or 0.0
+            self.telemetry.dag_latencies.append(lat)
+            self.telemetry.dag_completions.append(self.now)
+        else:
+            self._refresh_and_offer(dag)
+
+    def _schedule_dispatch(self) -> None:
+        if not self._dispatch_pending:
+            self._dispatch_pending = True
+            self._push(self.now + self.cfg.dispatch_window_s, "dispatch")
+
+    def _on_dispatch(self, _=None) -> None:
+        self._dispatch_pending = False
+        self._try_dispatch()
+
+    def _try_dispatch(self) -> None:
+        pending = self.pool.pending_by_exec()
+        if not pending:
+            return
+        active = [w for w in self.workers.values()
+                  if w.state is WorkerState.ACTIVE
+                  and not getattr(w, "crashed", False)]
+        proposals = self.policy.schedule(pending, active, self.now)
+        for p in proposals:
+            batch = p.to_batch(self.now)
+            for g in p.groups:
+                if g.dispatch_at is None:
+                    self.telemetry.op_queue_waits.append(self.now - g.ready_at)
+                g.dispatch_at = self.now
+                g.running_on.add(p.worker.worker_id)
+                g.attempts += 1
+            p.worker.admit(batch)
+            if p.worker.current is None:
+                self._start_next(p.worker)
+
+    def _start_next(self, w: Worker) -> None:
+        batch = w.next_batch()
+        if batch is None:
+            w.current = None
+            w.idle_since = self.now
+            return
+        w.current = batch
+        spec = batch.groups[0].spec
+        hot = (not spec.model_id) or w.is_hot_for(spec.h_model)
+        result = self.executor.execute(batch, w, self.cas)
+        dur = (result.duration_s + result.load_s) * w.perf_noise
+        if result.load_s > 0:
+            self.telemetry.model_loads += 1
+        elif spec.model_id:
+            self.telemetry.hot_hits += 1
+        if spec.model_id and not result.failed:
+            w.make_resident(spec.h_model, spec.model_id)
+        for g in batch.groups:
+            w.local_cache.update(g.input_hashes)
+        w.meter.note_active(dur)
+        w.busy_until = self.now + dur
+        self.telemetry.total_flops += result.flops
+        self._push(w.busy_until, "batch_done", (w.worker_id, batch, result, dur))
+
+    def _on_batch_done(self, payload) -> None:
+        wid, batch, result, dur = payload
+        self._last_progress = self.now
+        w = self.workers.get(wid)
+        if w is None or w.state is WorkerState.DEAD:
+            return   # worker failed mid-flight; groups were requeued
+        spec = batch.groups[0].spec
+
+        if result.failed:
+            # e.g. wrong resource spec: worker proactively reports shortage;
+            # control plane corrects the demand hint and resubmits (§5.3)
+            self.telemetry.retries += len(batch.groups)
+            self.telemetry.failures_detected.append(
+                (self.now, f"{wid}:{result.failure}", dur))
+            for g in batch.groups:
+                g.running_on.discard(wid)
+                if result.failure == "resource_shortage":
+                    actual = g.spec.params.get("actual_vram_gb")
+                    if actual:
+                        g.spec.params["min_vram_gb"] = float(actual)
+                if not g.done and not g.running_on and g.attempts < self.cfg.max_attempts:
+                    self.pool.requeue(g)
+            w.current = None
+            self._start_next(w)
+            self._schedule_dispatch()
+            return
+
+        self._service_times.setdefault(batch.h_exec, []).append(dur)
+        self.telemetry.executions += 1
+        self.telemetry.batch_sizes.append(
+            sum(g.fanout for g in batch.groups))
+        for g, out in zip(batch.groups, result.outputs):
+            key, won = self.cas.publish(out)
+            w.local_cache.add(key)
+            if g.done:
+                # a speculative rival already published — discard by identity
+                self.telemetry.speculative_discards += 1
+                continue
+            g.running_on.discard(wid)
+            self.result_index[g.h_task] = key
+            self.pool.finish(g)
+            savings = g.fanout - 1
+            if savings > 0:
+                self.telemetry.dedup_savings += savings
+            self.telemetry.op_service_times.append(dur)
+            touched = set()
+            for inst in g.consumers:
+                dag = self.dags[inst.dag_id]
+                dag.complete(inst.op_name, key,
+                             executed=(inst is g.consumers[0]),
+                             worker=wid, now=self.now)
+                touched.add(inst.dag_id)
+            for d in touched:
+                self._after_complete(self.dags[d])
+        w.current = None
+        self._start_next(w)
+        self._schedule_dispatch()
+
+    # ------------------------------------------------------------ finalize --
+    def _finalize(self) -> None:
+        cost = energy = 0.0
+        for w in self.workers.values():
+            d, j = w.meter.totals(self.now)
+            cost += d
+            energy += j
+        self.telemetry.total_cost = cost
+        self.telemetry.total_energy_j = energy
+
+    # ----------------------------------------------------------- MF helper --
+    def _monolithize(self, dag: WorkflowDAG) -> WorkflowDAG:
+        """MF baseline: the whole workflow as ONE opaque block-resource job."""
+        ops = dag._topo_order()
+        serial = [{
+            "op_type": o.op_type.value, "model_id": o.model_id,
+            "tokens_in": o.tokens_in, "tokens_out": o.tokens_out,
+            "train_tokens": o.train_tokens,
+            "lora": bool(o.params.get("lora", False)),
+        } for o in ops]
+        vram = max((vram_needed_gb(o) for o in ops), default=0.0)
+        rank = {"cpu": 0, "gpu.small": 1, "gpu.medium": 2, "gpu.large": 3,
+                "gpu.xlarge": 4}
+        rc = max((o.resource_class for o in ops),
+                 key=lambda r: rank.get(r, 0), default="gpu.small")
+        biggest = max(ops, key=lambda o: vram_needed_gb(o))
+        mono = OperatorSpec(
+            name="__mono__", op_type=OpType.AGGREGATE,
+            model_id=biggest.model_id, params={
+                "monolithic_ops": serial, "min_vram_gb": vram,
+                # unique per dag: monolithic jobs are opaque, never dedup
+                "dag": dag.dag_id,
+            },
+            inputs=[f"workload:{dag.dag_id}"], resource_class=rc)
+        return WorkflowDAG([mono], tenant=dag.tenant,
+                           dag_id=dag.dag_id, submitted_at=dag.submitted_at,
+                           metadata=dag.metadata)

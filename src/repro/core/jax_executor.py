@@ -1,0 +1,106 @@
+"""JaxExecutor: the fabric's workers running REAL JAX compute.
+
+The virtual-time SimExecutor answers "what would this cost on an H100 fleet";
+this executor actually runs the operators — generation through the
+continuous-batching ServingEngine, SFT/DPO/PPO through the training substrate
+— on a tiny LM (CPU container). Durations are measured wall-clock, outputs
+are deterministic functions of the inputs (greedy decode, seeded data), so
+dedup/speculation/CAS semantics hold bit-exactly.
+
+One executor instance plays the role of the container image: per-worker
+runtime state (loaded engines keyed by h_model) mirrors the worker's
+resident-model set.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+
+from .identity import digest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import build_model
+from repro.train.data import DataConfig, SyntheticLM, preference_batch
+from repro.train.losses import dpo_loss, ppo_loss
+from repro.train.optimizer import OptimizerConfig, build_optimizer
+from repro.train.train_step import build_train_step, init_train_state
+
+from .dag import OpType
+from .worker import DispatchBatch, ExecResult, Executor, Worker
+
+
+class JaxExecutor(Executor):
+    def __init__(self, *, arch: str = "smollm-135m", seed: int = 0,
+                 train_steps_per_op: int = 3, gen_tokens: int = 8) -> None:
+        cfg = get_config(arch).reduced(n_layers=2, d_model=64,
+                                       vocab_size=256, d_ff=128)
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.key(seed))
+        self.train_steps_per_op = train_steps_per_op
+        self.gen_tokens = gen_tokens
+        self.opt = build_optimizer(OptimizerConfig(peak_lr=1e-3, warmup=2))
+        self._train_step = jax.jit(build_train_step(self.model, self.opt))
+        self._engines: dict[str, object] = {}     # worker_id -> ServingEngine
+
+    # ------------------------------------------------------------------
+    def _prompt_from(self, hashes: tuple[str, ...], length: int = 12):
+        # stable across processes (python's hash() is randomized)
+        seed = int(digest("prompt", *hashes)[:8], 16)
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, self.cfg.vocab_size, length).astype(np.int32)
+
+    def _engine_for(self, worker: Worker):
+        from repro.serve.engine import ServingEngine
+        eng = self._engines.get(worker.worker_id)
+        if eng is None:
+            eng = ServingEngine(self.model, self.params, n_slots=4,
+                                max_len=256)
+            self._engines[worker.worker_id] = eng
+        return eng
+
+    # ------------------------------------------------------------------
+    def execute(self, batch: DispatchBatch, worker: Worker, cas) -> ExecResult:
+        t0 = time.perf_counter()
+        spec = batch.groups[0].spec
+        cold = bool(spec.model_id) and not worker.is_hot_for(spec.h_model)
+        outputs = []
+        if spec.op_type in (OpType.GENERATE, OpType.SCORE, OpType.EVAL):
+            from repro.serve.engine import Request
+            eng = self._engine_for(worker)
+            reqs = [Request(self._prompt_from(g.input_hashes),
+                            max_new_tokens=self.gen_tokens, temperature=0.0)
+                    for g in batch.groups]
+            done = {r.req_id: r for r in eng.run(list(reqs))}
+            for r in reqs:
+                outputs.append(pickle.dumps(
+                    {"op": spec.op_type.value,
+                     "tokens": done[r.req_id].generated}))
+        elif spec.op_type in (OpType.SFT, OpType.DPO, OpType.PPO):
+            state = init_train_state(self.model, self.opt, jax.random.key(1))
+            data = SyntheticLM(DataConfig(
+                self.cfg.vocab_size, 32, 4,
+                seed=int(digest("data", spec.name)[:6], 16)))
+            losses = []
+            for i in range(self.train_steps_per_op):
+                state, m = self._train_step(state, data.batch(i))
+                losses.append(float(m["loss"]))
+            for g in batch.groups:
+                outputs.append(pickle.dumps(
+                    {"op": spec.op_type.value, "losses": losses,
+                     "inputs": g.input_hashes}))
+        else:   # TOOL / DATA_PREP / AGGREGATE: deterministic transform
+            for g in batch.groups:
+                payload = [cas.get_bytes(h)[:64] for h in g.input_hashes
+                           if h in cas]
+                outputs.append(pickle.dumps(
+                    {"op": spec.op_type.value,
+                     "digest": [bytes(p) for p in payload]}))
+        dur = time.perf_counter() - t0
+        load_s = 0.15 if cold else 0.0     # weight upload for a tiny model
+        return ExecResult(outputs=outputs, duration_s=dur, load_s=load_s,
+                          flops=0.0)

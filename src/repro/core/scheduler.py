@@ -1,0 +1,312 @@
+"""Control-plane scheduling policies.
+
+FlowMeshScheduler implements the paper's single scalar utility (Eq. 1):
+
+    U(j, B) = w_t * T_eff(j, B) - w_c * C(j) + w_l * G_loc(j, B)
+
+over feasible (worker, batch) candidates, where B is the next slice of the
+compatible set S(H_exec) to admit into worker j's live queue Q_j(H_exec).
+Baseline policies (first-fit / static routing / round-robin) share the same
+interface so the engine code is identical across systems.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from .cost_model import (DEVICE_CLASSES, DeviceClass, RESOURCE_CLASSES,
+                         cpu_op_time_s, inference_time_s, load_time_s,
+                         model_vram_gb, train_time_s)
+from .dag import BATCHABLE_TYPES, TRAINING_TYPES, OpType, OperatorSpec
+from .worker import DispatchBatch, ExecutionGroup, Worker
+
+_batch_seq = itertools.count()
+
+
+# ---------------------------------------------------------------------------
+# Shared work estimator (also used by SimExecutor as simulation ground truth)
+# ---------------------------------------------------------------------------
+def estimate_exec(spec: OperatorSpec, batch: int, dev: DeviceClass, *,
+                  hot: bool) -> tuple[float, float, float]:
+    """Predict (duration_s, load_s, flops) of a batch of ``batch`` compatible
+    operators on device class ``dev``."""
+    load_s = 0.0
+    if spec.model_id and not hot:
+        load_s = load_time_s(spec.model_id, dev)
+    #: per-RUN overhead (scheduler round-trip, tokenization, engine admission)
+    #: — paid once per batched run, so consolidation amortizes it
+    overhead = 3.0 if spec.model_id else 0.0
+    if spec.op_type in BATCHABLE_TYPES:
+        dur, flops, _ = inference_time_s(
+            spec.model_id, dev, batch=batch,
+            tokens_in=spec.tokens_in, tokens_out=spec.tokens_out)
+    elif spec.op_type in TRAINING_TYPES:
+        lora = bool(spec.params.get("lora", False))
+        dur, flops = train_time_s(
+            spec.model_id, dev, tokens=spec.train_tokens * max(1, batch),
+            lora=lora)
+        # PPO-style stages interleave rollout+update; add inference share
+        if spec.op_type is OpType.PPO:
+            gdur, gflops, _ = inference_time_s(
+                spec.model_id, dev, batch=max(1, batch),
+                tokens_in=spec.tokens_in, tokens_out=spec.tokens_out)
+            dur, flops = dur + gdur, flops + gflops
+    else:  # CPU-side ops: tool calls, data prep, aggregation
+        dur, flops = cpu_op_time_s(spec.op_type.value, batch), 0.0
+    return dur + overhead, load_s, flops
+
+
+def vram_needed_gb(spec: OperatorSpec) -> float:
+    if not spec.model_id:
+        return 0.0
+    # honor the tenant's (possibly wrong!) hint when present — §5.3 robustness
+    hint = spec.params.get("min_vram_gb")
+    if hint is not None:
+        return float(hint)
+    return model_vram_gb(spec.model_id,
+                         training=spec.op_type in TRAINING_TYPES,
+                         lora=bool(spec.params.get("lora", False)))
+
+
+def feasible(spec: OperatorSpec, worker: Worker) -> bool:
+    dev = worker.dev
+    min_vram = RESOURCE_CLASSES.get(spec.resource_class, 0.0)
+    if spec.resource_class != "cpu" or spec.model_id:
+        if dev.vram_gb < max(min_vram, vram_needed_gb(spec)):
+            return False
+    aff = spec.params.get("affinity")
+    if aff and dev.name not in aff and worker.backend not in aff:
+        return False
+    anti = spec.params.get("anti_affinity")
+    if anti and (dev.name in anti or worker.backend in anti):
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class Proposal:
+    worker: Worker
+    h_exec: str
+    groups: list[ExecutionGroup]
+    utility: float
+    speculative: bool = False
+
+    def to_batch(self, now: float) -> DispatchBatch:
+        return DispatchBatch(batch_id=next(_batch_seq), h_exec=self.h_exec,
+                             groups=self.groups, worker_id=self.worker.worker_id,
+                             admitted_at=now, speculative=self.speculative)
+
+
+class SchedulerPolicy:
+    """Interface. ``dedup``/``max_batch`` gate consolidation for baselines."""
+    name = "base"
+    dedup = True
+    monolithic = False
+
+    def max_batch(self, spec: OperatorSpec) -> int:
+        return int(spec.params.get("max_batch", 24))
+
+    def schedule(self, pending: dict[str, list[ExecutionGroup]],
+                 workers: Sequence[Worker], now: float) -> list[Proposal]:
+        raise NotImplementedError
+
+
+_MAX_PRICE = max(d.price_hr for d in DEVICE_CLASSES.values())
+
+
+class FlowMeshScheduler(SchedulerPolicy):
+    """Decompose + consolidate, utility-driven (the paper's system)."""
+    name = "flowmesh"
+    dedup = True
+
+    def __init__(self, w_t: float = 1.0, w_c: float = 0.5, w_l: float = 0.5,
+                 *, reference_dev: DeviceClass | None = None) -> None:
+        self.w_t, self.w_c, self.w_l = w_t, w_c, w_l
+        self.ref = reference_dev or DEVICE_CLASSES["h100-nvl-94g"]
+
+    # -- Eq. 1 terms ---------------------------------------------------------
+    def t_eff(self, spec: OperatorSpec, batch: int, w: Worker, hot: bool) -> float:
+        dur, load_s, _ = estimate_exec(spec, batch, w.dev, hot=hot)
+        ref_dur, _, _ = estimate_exec(spec, batch, self.ref, hot=True)
+        total = dur + load_s
+        return (ref_dur / total) if total > 0 else 1.0   # normalized throughput
+
+    @staticmethod
+    def c(w: Worker) -> float:
+        return w.dev.price_hr / _MAX_PRICE
+
+    @staticmethod
+    def g_loc(spec: OperatorSpec, groups: list[ExecutionGroup], w: Worker) -> float:
+        gain = 0.0
+        if not spec.model_id or w.is_hot_for(spec.h_model):
+            gain += 1.0
+        hashes = [h for g in groups for h in g.input_hashes]
+        if hashes:
+            cached = sum(1 for h in hashes if h in w.local_cache)
+            gain += 0.25 * cached / len(hashes)
+        if spec.h_exec() in w.served_execs:
+            gain += 0.25      # hot lane: runtime state (KV/adapters) resident
+        return gain
+
+    def utility(self, spec: OperatorSpec, groups: list[ExecutionGroup],
+                w: Worker) -> float:
+        hot = (not spec.model_id) or w.is_hot_for(spec.h_model)
+        return (self.w_t * self.t_eff(spec, len(groups), w, hot)
+                - self.w_c * self.c(w)
+                + self.w_l * self.g_loc(spec, groups, w))
+
+    # -- candidate enumeration -----------------------------------------------
+    def schedule(self, pending, workers, now):
+        proposals: list[Proposal] = []
+        admittable = [w for w in workers if w.can_admit()]
+        # mutable view of remaining capacity per worker this round
+        slots = {w.worker_id: (w.MAX_QUEUED_SLICES - w.queued_slices())
+                 for w in admittable}
+        remaining = {h: list(gs) for h, gs in pending.items()}
+        while True:
+            best: Proposal | None = None
+            for h_exec, groups in remaining.items():
+                if not groups:
+                    continue
+                spec = groups[0].spec
+                cap = self.max_batch(spec)
+                batch = sorted(groups, key=lambda g: g.ready_at)[:cap]
+                for w in admittable:
+                    if slots[w.worker_id] <= 0 or not feasible(spec, w):
+                        continue
+                    u = self.utility(spec, batch, w)
+                    if best is None or u > best.utility:
+                        best = Proposal(w, h_exec, batch, u)
+            if best is None:
+                break
+            proposals.append(best)
+            slots[best.worker.worker_id] -= 1
+            rem = remaining[best.h_exec]
+            for g in best.groups:
+                rem.remove(g)
+        return proposals
+
+
+class RoundRobinScheduler(SchedulerPolicy):
+    """DR baseline: decompose + round-robin, no consolidation, no batching."""
+    name = "round_robin"
+    dedup = False
+
+    def __init__(self) -> None:
+        self._rr = 0
+
+    def max_batch(self, spec: OperatorSpec) -> int:
+        return 1
+
+    def schedule(self, pending, workers, now):
+        proposals = []
+        admittable = [w for w in workers if w.can_admit()]
+        if not admittable:
+            return proposals
+        slots = {w.worker_id: (w.MAX_QUEUED_SLICES - w.queued_slices())
+                 for w in admittable}
+        flat = [g for gs in pending.values() for g in gs]
+        flat.sort(key=lambda g: g.ready_at)
+        for g in flat:
+            placed = False
+            for k in range(len(admittable)):
+                w = admittable[(self._rr + k) % len(admittable)]
+                if slots[w.worker_id] > 0 and feasible(g.spec, w):
+                    proposals.append(Proposal(w, g.h_exec, [g], 0.0))
+                    slots[w.worker_id] -= 1
+                    self._rr = (self._rr + k + 1) % len(admittable)
+                    placed = True
+                    break
+            if not placed:
+                continue
+        return proposals
+
+
+#: op-type -> designated worker role for the DS (JellyBean-style) baseline
+_STATIC_ROLES: dict[OpType, str] = {
+    OpType.GENERATE: "inference", OpType.SCORE: "inference",
+    OpType.EVAL: "inference", OpType.SFT: "training", OpType.DPO: "training",
+    OpType.PPO: "training", OpType.TOOL: "aux", OpType.DATA_PREP: "aux",
+    OpType.AGGREGATE: "aux",
+}
+
+
+def static_role_of(worker: Worker) -> str:
+    """DS designates workers by class: big-VRAM -> training, GPUs -> inference,
+    CPU -> aux. Fixed for the worker's lifetime (static routing)."""
+    if worker.dev.vram_gb >= 80:
+        return "training"
+    if worker.dev.vram_gb > 0:
+        return "inference"
+    return "aux"
+
+
+class StaticRoutingScheduler(SchedulerPolicy):
+    """DS baseline: decompose + static functional routing (JellyBean)."""
+    name = "static"
+    dedup = False
+
+    def max_batch(self, spec: OperatorSpec) -> int:
+        return 1
+
+    def schedule(self, pending, workers, now):
+        proposals = []
+        slots = {w.worker_id: (w.MAX_QUEUED_SLICES - w.queued_slices())
+                 for w in workers if w.can_admit()}
+        flat = sorted((g for gs in pending.values() for g in gs),
+                      key=lambda g: g.ready_at)
+        for g in flat:
+            role = _STATIC_ROLES.get(g.spec.op_type, "aux")
+            # least-loaded designated worker that is feasible
+            cands = [w for w in workers
+                     if w.can_admit() and slots.get(w.worker_id, 0) > 0
+                     and static_role_of(w) == role and feasible(g.spec, w)]
+            if not cands:
+                # aux ops may fall back to any feasible worker (JellyBean
+                # co-locates lightweight ops); GPU ops must wait
+                if role == "aux":
+                    cands = [w for w in workers
+                             if w.can_admit() and slots.get(w.worker_id, 0) > 0
+                             and feasible(g.spec, w)]
+                if not cands:
+                    continue
+            w = min(cands, key=lambda w: w.queued_slices())
+            proposals.append(Proposal(w, g.h_exec, [g], 0.0))
+            slots[w.worker_id] -= 1
+        return proposals
+
+
+class FirstFitScheduler(SchedulerPolicy):
+    """MF baseline: Monolithic + First-Fit. The engine submits each workflow
+    as ONE opaque operator (no decomposition); this policy just first-fits it
+    onto the first feasible idle worker."""
+    name = "first_fit"
+    dedup = False
+    monolithic = True
+
+    def max_batch(self, spec: OperatorSpec) -> int:
+        return 1
+
+    def schedule(self, pending, workers, now):
+        proposals = []
+        busy: set[str] = set()
+        flat = sorted((g for gs in pending.values() for g in gs),
+                      key=lambda g: g.ready_at)
+        for g in flat:
+            for w in workers:   # first fit, stable order
+                if (w.worker_id not in busy and w.can_admit()
+                        and w.queued_slices() == 0 and feasible(g.spec, w)):
+                    proposals.append(Proposal(w, g.h_exec, [g], 0.0))
+                    busy.add(w.worker_id)
+                    break
+        return proposals
+
+
+POLICIES: dict[str, Callable[[], SchedulerPolicy]] = {
+    "flowmesh": FlowMeshScheduler,
+    "mf": FirstFitScheduler,
+    "ds": StaticRoutingScheduler,
+    "dr": RoundRobinScheduler,
+}

@@ -1,0 +1,91 @@
+"""Fabric-wide metrics: latency, queueing, cost, energy, CDP/EDP (§5.2).
+
+CDP = (Total Cost / #Tasks) * AvgTime ; EDP analogously with energy —
+following Roloff et al. 2017 as cited by the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Telemetry:
+    # per-DAG ("task" in the paper's metric = one workflow)
+    dag_latencies: list[float] = field(default_factory=list)
+    dag_completions: list[float] = field(default_factory=list)   # times
+    # per-operator
+    op_queue_waits: list[float] = field(default_factory=list)
+    op_service_times: list[float] = field(default_factory=list)
+    # consolidation
+    executions: int = 0
+    dedup_savings: int = 0          # op-instances satisfied without execution
+    batch_sizes: list[int] = field(default_factory=list)
+    model_loads: int = 0
+    hot_hits: int = 0
+    speculative_launches: int = 0
+    speculative_discards: int = 0
+    retries: int = 0
+    failures_detected: list[tuple[float, str, float]] = field(default_factory=list)
+    # $ / J (finalized from worker meters at end of run)
+    total_cost: float = 0.0
+    total_energy_j: float = 0.0
+    total_flops: float = 0.0
+    # autoscaler trace: (t, active_workers, pending_depth, arriving_rate)
+    scaling_trace: list[tuple[float, int, int]] = field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_tasks(self) -> int:
+        return len(self.dag_latencies)
+
+    @property
+    def avg_latency(self) -> float:
+        return (sum(self.dag_latencies) / len(self.dag_latencies)
+                if self.dag_latencies else 0.0)
+
+    @property
+    def p95_latency(self) -> float:
+        if not self.dag_latencies:
+            return 0.0
+        xs = sorted(self.dag_latencies)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+    @property
+    def avg_queue_wait(self) -> float:
+        return (sum(self.op_queue_waits) / len(self.op_queue_waits)
+                if self.op_queue_waits else 0.0)
+
+    @property
+    def cdp(self) -> float:
+        if not self.n_tasks:
+            return 0.0
+        return (self.total_cost / self.n_tasks) * self.avg_latency
+
+    @property
+    def edp(self) -> float:
+        if not self.n_tasks:
+            return 0.0
+        return (self.total_energy_j / self.n_tasks) * self.avg_latency
+
+    def throughput_per_min(self, horizon_s: float) -> float:
+        return 60.0 * self.n_tasks / horizon_s if horizon_s > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "tasks": self.n_tasks,
+            "avg_latency_s": round(self.avg_latency, 2),
+            "p95_latency_s": round(self.p95_latency, 2),
+            "avg_queue_wait_s": round(self.avg_queue_wait, 2),
+            "total_cost_usd": round(self.total_cost, 4),
+            "total_energy_kj": round(self.total_energy_j / 1e3, 2),
+            "cdp": round(self.cdp, 4),
+            "edp_kjs": round(self.edp / 1e3, 2),
+            "executions": self.executions,
+            "dedup_savings": self.dedup_savings,
+            "mean_batch": round(sum(self.batch_sizes) / len(self.batch_sizes), 2)
+                          if self.batch_sizes else 0.0,
+            "model_loads": self.model_loads,
+            "hot_hits": self.hot_hits,
+            "retries": self.retries,
+            "spec_launches": self.speculative_launches,
+        }

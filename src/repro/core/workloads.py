@@ -1,0 +1,299 @@
+"""Test workloads (§5.1): Group A (agentic inference, 5 DAG topologies) and
+Group B (A + SFT/DPO/PPO post-training pipelines), with the paper's datasets
+(GSM8K / MMLU / TruthfulQA) represented as shared prompt pools.
+
+Cross-tenant overlap is the whole point: tenants iterate on variants of the
+same base models over overlapping data, so SFT stages and reward/eval passes
+collide by H_task (dedup) or by H_exec (batching) exactly as §2 describes.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+
+from .dag import OperatorSpec, OpType, Ref, WorkflowDAG
+
+BASE_MODELS = ["llama-3.2-1b", "llama-3.2-3b", "llama-3.1-8b"]
+REWARD_MODELS = ["reward-1b", "reward-3b"]
+DATASETS = ["gsm8k", "mmlu", "truthfulqa"]
+
+
+def _rc(model_id: str, *, training: bool = False) -> str:
+    if training and model_id.endswith("8b"):
+        return "gpu.xlarge"
+    if model_id.endswith("8b") or training:
+        return "gpu.large" if training else "gpu.medium"
+    return "gpu.small"
+
+
+@dataclass
+class WorkloadCfg:
+    seed: int = 0
+    n_tenants: int = 8
+    #: probability a workflow reuses a "popular" shared prompt shard
+    overlap: float = 0.6
+    n_prompt_shards: int = 12
+    max_batch: int = 24
+
+
+class WorkloadGen:
+    def __init__(self, cfg: WorkloadCfg | None = None) -> None:
+        self.cfg = cfg or WorkloadCfg()
+        self.rng = random.Random(self.cfg.seed)
+
+    # ------------------------------------------------------------------
+    def _prompt_shard(self, dataset: str) -> str:
+        """Zipf-ish shared shards: hot shards collide across tenants."""
+        if self.rng.random() < self.cfg.overlap:
+            k = min(int(self.rng.paretovariate(1.2)), 3)   # hot few
+        else:
+            k = self.rng.randrange(self.cfg.n_prompt_shards)
+        return f"{dataset}/shard-{k}"
+
+    def _tenant(self) -> str:
+        return f"tenant-{self.rng.randrange(self.cfg.n_tenants)}"
+
+    def _mb(self) -> dict:
+        return {"max_batch": self.cfg.max_batch}
+
+    # --------------------------- Group A topologies -----------------------
+    def reasoning_chain(self) -> WorkflowDAG:
+        m = self.rng.choice(BASE_MODELS)
+        d = self.rng.choice(DATASETS)
+        shard = self._prompt_shard(d)
+        ops = [
+            OperatorSpec("plan", OpType.GENERATE, m, params=self._mb(),
+                         inputs=[shard], tokens_in=1024, tokens_out=768,
+                         resource_class=_rc(m)),
+            OperatorSpec("tool", OpType.TOOL, inputs=[Ref("plan")],
+                         resource_class="cpu"),
+            OperatorSpec("summarize", OpType.GENERATE, m, params=self._mb(),
+                         inputs=[Ref("tool"), shard], tokens_in=1536,
+                         tokens_out=768, resource_class=_rc(m)),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "reasoning_chain"})
+
+    def rag(self) -> WorkflowDAG:
+        m = self.rng.choice(BASE_MODELS)
+        d = self.rng.choice(DATASETS)
+        shard = self._prompt_shard(d)
+        ops = [
+            OperatorSpec("retrieve", OpType.TOOL, inputs=[shard],
+                         resource_class="cpu"),
+            OperatorSpec("generate", OpType.GENERATE, m, params=self._mb(),
+                         inputs=[Ref("retrieve")], tokens_in=2048,
+                         tokens_out=768, resource_class=_rc(m)),
+            OperatorSpec("judge", OpType.SCORE,
+                         self.rng.choice(REWARD_MODELS), params=self._mb(),
+                         inputs=[Ref("generate")], tokens_in=1024,
+                         tokens_out=8, resource_class="gpu.small"),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(), metadata={"kind": "rag"})
+
+    def multi_agent(self) -> WorkflowDAG:
+        m1, m2 = self.rng.sample(BASE_MODELS, 2)
+        d = self.rng.choice(DATASETS)
+        shard = self._prompt_shard(d)
+        ops = [
+            OperatorSpec("agent_a", OpType.GENERATE, m1, params=self._mb(),
+                         inputs=[shard], tokens_in=1024, tokens_out=1024,
+                         resource_class=_rc(m1)),
+            OperatorSpec("agent_b", OpType.GENERATE, m2, params=self._mb(),
+                         inputs=[shard], tokens_in=1024, tokens_out=1024,
+                         resource_class=_rc(m2)),
+            OperatorSpec("merge", OpType.AGGREGATE,
+                         inputs=[Ref("agent_a"), Ref("agent_b")],
+                         resource_class="cpu"),
+            OperatorSpec("final", OpType.GENERATE, m1, params=self._mb(),
+                         inputs=[Ref("merge")], tokens_in=2048,
+                         tokens_out=768, resource_class=_rc(m1)),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "multi_agent"})
+
+    def reflection(self) -> WorkflowDAG:
+        m = self.rng.choice(BASE_MODELS)
+        rm = self.rng.choice(REWARD_MODELS)
+        shard = self._prompt_shard(self.rng.choice(DATASETS))
+        ops = [
+            OperatorSpec("draft", OpType.GENERATE, m, params=self._mb(),
+                         inputs=[shard], tokens_in=1024, tokens_out=1024,
+                         resource_class=_rc(m)),
+            OperatorSpec("critique", OpType.SCORE, rm, params=self._mb(),
+                         inputs=[Ref("draft")], tokens_in=896, tokens_out=64,
+                         resource_class="gpu.small"),
+            OperatorSpec("revise", OpType.GENERATE, m, params=self._mb(),
+                         inputs=[Ref("draft"), Ref("critique")],
+                         tokens_in=1024, tokens_out=384,
+                         resource_class=_rc(m)),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "reflection"})
+
+    def map_reduce(self) -> WorkflowDAG:
+        m = self.rng.choice(BASE_MODELS)
+        d = self.rng.choice(DATASETS)
+        ops = [OperatorSpec("prep", OpType.DATA_PREP,
+                            inputs=[self._prompt_shard(d)],
+                            resource_class="cpu")]
+        for i in range(3):
+            ops.append(OperatorSpec(
+                f"map_{i}", OpType.GENERATE, m, params=self._mb(),
+                inputs=[Ref("prep"), f"slice-{i}"], tokens_in=1280,
+                tokens_out=768, resource_class=_rc(m)))
+        ops.append(OperatorSpec(
+            "reduce", OpType.AGGREGATE,
+            inputs=[Ref(f"map_{i}") for i in range(3)], resource_class="cpu"))
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "map_reduce"})
+
+    GROUP_A = ("reasoning_chain", "rag", "multi_agent", "reflection",
+               "map_reduce")
+
+    def sample_group_a(self) -> WorkflowDAG:
+        return getattr(self, self.rng.choice(self.GROUP_A))()
+
+    # --------------------------- Group B pipelines ------------------------
+    def sft_pipeline(self) -> WorkflowDAG:
+        m = self.rng.choice(BASE_MODELS)
+        d = self.rng.choice(DATASETS)
+        shard = self._prompt_shard(d)
+        lora = self.rng.random() < 0.6
+        ops = [
+            OperatorSpec("prep", OpType.DATA_PREP, inputs=[shard],
+                         resource_class="cpu"),
+            # tenants fine-tuning the same base on the same shard collide here
+            OperatorSpec("sft", OpType.SFT, m,
+                         params={"lora": lora, "lr": 1e-5, "epochs": 1,
+                                 "max_batch": 12},
+                         inputs=[Ref("prep")], train_tokens=6_000_000,
+                         resource_class=_rc(m, training=True)),
+            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
+                         inputs=[Ref("sft"), f"{d}/holdout"],
+                         tokens_in=2048, tokens_out=128,
+                         resource_class=_rc(m)),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "sft"})
+
+    def dpo_pipeline(self) -> WorkflowDAG:
+        m = self.rng.choice(BASE_MODELS)
+        d = self.rng.choice(DATASETS)
+        shard = self._prompt_shard(d)
+        ops = [
+            OperatorSpec("prep", OpType.DATA_PREP, inputs=[shard],
+                         resource_class="cpu"),
+            OperatorSpec("pairs", OpType.GENERATE, m,
+                         params={"max_batch": 12}, inputs=[Ref("prep")],
+                         tokens_in=1024, tokens_out=1536,
+                         resource_class=_rc(m)),
+            OperatorSpec("dpo", OpType.DPO, m,
+                         params={"beta": 0.1, "lr": 5e-6, "max_batch": 12},
+                         inputs=[Ref("pairs")], train_tokens=4_000_000,
+                         resource_class=_rc(m, training=True)),
+            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
+                         inputs=[Ref("dpo"), f"{d}/holdout"],
+                         tokens_in=2048, tokens_out=128,
+                         resource_class=_rc(m)),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "dpo"})
+
+    def ppo_pipeline(self) -> WorkflowDAG:
+        m = self.rng.choice(BASE_MODELS)
+        rm = self.rng.choice(REWARD_MODELS)
+        d = self.rng.choice(DATASETS)
+        shard = self._prompt_shard(d)
+        ops = [
+            OperatorSpec("rollout", OpType.GENERATE, m,
+                         params={"max_batch": 12}, inputs=[shard],
+                         tokens_in=1024, tokens_out=1536,
+                         resource_class=_rc(m)),
+            # reward inference over overlapping batches: prime dedup target
+            OperatorSpec("reward", OpType.SCORE, rm,
+                         params={"max_batch": 12}, inputs=[Ref("rollout")],
+                         tokens_in=1024, tokens_out=8,
+                         resource_class="gpu.small"),
+            OperatorSpec("collect", OpType.AGGREGATE,
+                         inputs=[Ref("rollout"), Ref("reward")],
+                         resource_class="cpu"),
+            OperatorSpec("ppo", OpType.PPO, m,
+                         params={"clip": 0.2, "lr": 1e-6, "max_batch": 12},
+                         inputs=[Ref("collect")], train_tokens=2_400_000,
+                         tokens_in=512, tokens_out=128,
+                         resource_class=_rc(m, training=True)),
+            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
+                         inputs=[Ref("ppo"), f"{d}/holdout"],
+                         tokens_in=2048, tokens_out=128,
+                         resource_class=_rc(m)),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "ppo"})
+
+    def rlhf_full(self) -> WorkflowDAG:
+        """SFT -> rollout -> reward -> PPO -> eval (Fig. 2's full loop)."""
+        m = self.rng.choice(BASE_MODELS)
+        rm = self.rng.choice(REWARD_MODELS)
+        d = self.rng.choice(DATASETS)
+        shard = self._prompt_shard(d)
+        ops = [
+            OperatorSpec("prep", OpType.DATA_PREP, inputs=[shard],
+                         resource_class="cpu"),
+            OperatorSpec("sft", OpType.SFT, m,
+                         params={"lora": True, "lr": 1e-5, "max_batch": 12},
+                         inputs=[Ref("prep")], train_tokens=6_000_000,
+                         resource_class=_rc(m, training=True)),
+            OperatorSpec("rollout", OpType.GENERATE, m,
+                         params={"max_batch": 12},
+                         inputs=[Ref("sft"), shard], tokens_in=512,
+                         tokens_out=512, resource_class=_rc(m)),
+            OperatorSpec("reward", OpType.SCORE, rm,
+                         params={"max_batch": 12}, inputs=[Ref("rollout")],
+                         tokens_in=1024, tokens_out=8,
+                         resource_class="gpu.small"),
+            OperatorSpec("ppo", OpType.PPO, m,
+                         params={"clip": 0.2, "lr": 1e-6, "max_batch": 12},
+                         inputs=[Ref("rollout"), Ref("reward")],
+                         train_tokens=2_400_000, tokens_in=512, tokens_out=128,
+                         resource_class=_rc(m, training=True)),
+            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
+                         inputs=[Ref("ppo"), f"{d}/holdout"],
+                         tokens_in=2048, tokens_out=128,
+                         resource_class=_rc(m)),
+        ]
+        return WorkflowDAG(ops, tenant=self._tenant(),
+                           metadata={"kind": "rlhf"})
+
+    GROUP_B_EXTRA = ("sft_pipeline", "dpo_pipeline", "ppo_pipeline",
+                     "rlhf_full")
+
+    def sample_group_b(self) -> WorkflowDAG:
+        # Group B = Group A workflows + the four post-training pipelines
+        kind = self.rng.choice(self.GROUP_A + self.GROUP_B_EXTRA)
+        return getattr(self, kind)()
+
+    # --------------------------- arrival process --------------------------
+    def arrivals(self, n: int, *, rate0_qpm: float = 6.0,
+                 rate1_qpm: float = 0.6, horizon_s: float = 3600.0,
+                 ) -> list[float]:
+        """Exponentially decaying Poisson arrivals 6 -> 0.6 qpm (§5.2),
+        generated by thinning."""
+        tau = horizon_s / math.log(rate0_qpm / rate1_qpm)
+        lam_max = rate0_qpm / 60.0
+        out: list[float] = []
+        t = 0.0
+        while len(out) < n:
+            t += self.rng.expovariate(lam_max)
+            # decays 6 -> 0.6 qpm over the horizon, then holds at the floor
+            lam_t = max(rate1_qpm, rate0_qpm * math.exp(-t / tau)) / 60.0
+            if self.rng.random() < lam_t / lam_max:
+                out.append(t)
+        return out
+
+    def make_workload(self, group: str, n: int, **arrival_kw,
+                      ) -> list[tuple[float, WorkflowDAG]]:
+        times = self.arrivals(n, **arrival_kw)
+        sample = self.sample_group_a if group == "A" else self.sample_group_b
+        return [(t, sample()) for t in times]

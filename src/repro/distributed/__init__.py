@@ -1,0 +1,3 @@
+# NOTE: no eager submodule imports — sharding.py imports model structures
+# while models import logical.py (activation constraints); importing either
+# explicitly avoids the cycle.

@@ -1,0 +1,54 @@
+"""Int8 error-feedback gradient compression (distributed-optimization trick).
+
+At multi-pod scale the cross-pod (DCN) gradient all-reduce is the slowest
+collective; quantizing gradients to int8 with per-tensor scales cuts that
+traffic 4x vs fp32 / 2x vs bf16. Error feedback (residual accumulation)
+keeps the compression UNBIASED OVER TIME: the quantization error of step t
+is added back into step t+1's gradient, so SGD-style convergence is
+preserved (Seide et al. 2014; Karimireddy et al. 2019).
+
+Usage: pass ``make_error_feedback_compressor()`` as the ``compress=`` hook of
+build_train_step. The simulated quantize/dequantize round-trip happens where
+the all-reduce would — under pjit the compiler places the collective on the
+int8 tensor when the hook wraps it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_error_feedback_compressor():
+    """(grads, residual) -> (compressed_grads, new_residual) hook."""
+
+    def compress(grads, residual):
+        if residual is None:
+            residual = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            q, scale = quantize_int8(corrected)
+            deq = dequantize_int8(q, scale)
+            new_r = corrected - deq          # error feedback
+            return deq.astype(g.dtype), new_r
+
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_r = treedef.flatten_up_to(residual)
+        outs = [one(g, r) for g, r in zip(leaves_g, leaves_r)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+                jax.tree.unflatten(treedef, [o[1] for o in outs]))
+
+    return compress

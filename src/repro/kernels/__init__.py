@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the fabric's compute hot-spots:
+
+  * flash_attention  — prefill (compute-bound, MXU)
+  * decode_attention — continuous-batching steady state (HBM-bound)
+  * ssd_scan         — mamba2/zamba2 chunked state-space scan
+
+Each has a pure-jnp oracle in ref.py and a dispatching wrapper in ops.py.
+"""
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "decode_attention", "flash_attention", "ssd_scan"]

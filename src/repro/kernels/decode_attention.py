@@ -1,0 +1,115 @@
+"""Pallas TPU decode attention: one new token vs a long slot-contiguous KV
+cache, GQA, per-sequence valid lengths.
+
+This is the steady-state op of the fabric's continuous-batching workers —
+purely memory-bound (arithmetic intensity ~ 2 FLOPs/byte), so the tiling goal
+is streaming the KV cache HBM->VMEM in (blk_k, hd) tiles exactly once while
+the (g, hd) query tile for the kv-head group stays resident. Grid
+(B, Hkv, S/blk_k); the kv dimension is sequential and carries the online-
+softmax state (m, l, acc) for the whole head-group tile in VMEM.
+
+Invalid cache positions (>= length[b]) are masked, so one compiled kernel
+serves every request mix in the engine's slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, blk_k: int, n_k: int,
+                   scale: float):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    # skip kv blocks entirely past the valid prefix (saves HBM reads — this
+    # is the decode analogue of causal block-skip)
+    @pl.when(ki * blk_k < length)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * scale       # (g, hd)
+        k = k_ref[...].astype(jnp.float32)               # (blk_k, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (g, blk_k)
+        kpos = ki * blk_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, blk_k: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, hd); k/v: (B, S, Hkv, hd); lengths: (B,) int32.
+    Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k.shape
+    g = Hq // Hkv
+    blk_k = min(blk_k, S)
+    assert S % blk_k == 0
+    n_k = S // blk_k
+    scale = 1.0 / (hd ** 0.5)
+
+    qt = q.reshape(B, Hkv, g, hd)
+    kt = k.transpose(0, 2, 1, 3)          # (B, Hkv, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, blk_k=blk_k, n_k=n_k,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,            # lengths land in SMEM
+        grid=(B, Hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((None, None, g, hd),
+                         lambda b, h, ki, *_: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, blk_k, hd),
+                         lambda b, h, ki, *_: (b, h, ki, 0)),
+            pl.BlockSpec((None, None, blk_k, hd),
+                         lambda b, h, ki, *_: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, hd),
+                               lambda b, h, ki, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qt, kt, vt)
+    return out.reshape(B, Hq, hd)

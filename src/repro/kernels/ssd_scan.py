@@ -1,0 +1,109 @@
+"""Pallas TPU SSD (Mamba2) chunked scan.
+
+Grid (B, H, T/Q): each program handles one Q-token chunk of one head. The
+chunk dimension is sequential ("arbitrary") and carries the (N, P) SSM state
+in VMEM scratch across chunks — the inter-chunk recurrence never touches HBM.
+Intra-chunk work is three MXU matmuls on (Q, N)x(N, Q), (Q, Q)x(Q, P) and
+(N, Q)x(Q, P) tiles plus exp/cumsum on the VPU — exactly the state-space-
+duality split: quadratic-but-tiny inside the chunk, linear across chunks.
+
+Inputs are pre-projected (the surrounding block computes u = dt*x and
+loga = dt*A): u (B,T,H,P), loga (B,T,H), Bm/Cm (B,T,N) shared across heads
+(G=1 groups). Output y (B,T,H,P) and final state (B,H,N,P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(u_ref, loga_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[...].astype(jnp.float32)              # (Q, P)
+    loga = loga_ref[...].astype(jnp.float32)        # (Q,)
+    Bc = b_ref[...].astype(jnp.float32)             # (Q, N)
+    Cc = c_ref[...].astype(jnp.float32)             # (Q, N)
+    Q = u.shape[0]
+
+    cum = jnp.cumsum(loga)                          # (Q,)
+    # intra-chunk: causal decay matrix L[i,j] = exp(cum_i - cum_j), i >= j
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    CB = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    y_intra = jax.lax.dot_general(CB * L, u, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                          # (N, P)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cc, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S_c = B^T (u * decay_to_end); h' = total_decay*h + S_c
+    decay_end = jnp.exp(cum[-1] - cum)              # (Q,)
+    S_c = jax.lax.dot_general(Bc, u * decay_end[:, None],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = state * jnp.exp(cum[-1]) + S_c
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        state_out_ref[...] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(u: jax.Array, loga: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
+             chunk: int = 128, interpret: bool = False,
+             ) -> tuple[jax.Array, jax.Array]:
+    """u: (B,T,H,P); loga: (B,T,H); Bm/Cm: (B,T,N).
+    Returns (y (B,T,H,P), final_state (B,H,N,P))."""
+    B, T, H, P = u.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+
+    ut = u.transpose(0, 2, 1, 3)                    # (B, H, T, P)
+    lt = loga.transpose(0, 2, 1)                    # (B, H, T)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, P),
+                         lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, chunk),
+                         lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((None, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, chunk, P),
+                         lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, P), u.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(ut, lt, Bm, Cm)
+    return y.transpose(0, 2, 1, 3), state

@@ -1,0 +1,3 @@
+# launch layer: mesh construction, dry-run, drivers. NOTE: dryrun must be
+# executed as a module (python -m repro.launch.dryrun) so its XLA_FLAGS
+# device-count override precedes jax initialization.

@@ -1,0 +1,126 @@
+"""Exact semantic FLOP/byte accounting from the jaxpr.
+
+Why not compiled.cost_analysis()? XLA's HloCostAnalysis counts a while-loop
+BODY ONCE — scan-over-layers models are undercounted by a factor of
+n_layers. The jaxpr still has the scan structure with its static trip count,
+so walking it gives exact dot FLOPs including remat recompute (the backward
+jaxpr contains recomputation explicitly after jax.checkpoint).
+
+FLOPs counted: dot_general (2*m*n*k*batch), conv (none used). Elementwise /
+reduction ops are counted at 1 FLOP/element — they matter for byte traffic
+more than FLOPs. Gathers/scatters/dynamic-slices contribute bytes.
+
+Bytes counted (HBM-traffic proxy): for every counted op, operand + result
+sizes (global, semantic). Fusion on real hardware reduces this; the proxy is
+an upper bound that is consistent across cells, which is what the roofline
+COMPARISON needs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax import core
+
+_ELEMENTWISE_COST = 1.0
+
+
+def _nbytes(aval) -> int:
+    try:
+        return math.prod(aval.shape) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = math.prod(a.shape[i] for i in lb) if lb else 1
+    k = math.prod(a.shape[i] for i in lc) if lc else 1
+    m = math.prod(a.shape[i] for i in range(a.ndim)
+                  if i not in set(lc) | set(lb))
+    n = math.prod(b.shape[i] for i in range(b.ndim)
+                  if i not in set(rc) | set(rb))
+    return 2.0 * batch * m * n * k
+
+
+#: ops that hit HBM even after fusion (matmul operands/results, gathers,
+#: KV-cache updates); pure elementwise/reduce chains fuse into producers
+_HBM_OPS = {"dot_general", "gather", "scatter", "scatter-add", "scatter_add",
+            "dynamic_slice", "dynamic_update_slice", "sort", "concatenate"}
+
+
+def _eqn_cost(eqn) -> tuple[float, float]:
+    """(flops, bytes) for one non-control-flow eqn. Bytes are counted only
+    for fusion-boundary ops — the roofline wants an HBM-traffic estimate,
+    and elementwise chains fuse into their producers on TPU."""
+    name = eqn.primitive.name
+    out_bytes = sum(_nbytes(v.aval) for v in eqn.outvars)
+    in_bytes = sum(_nbytes(v.aval) for v in eqn.invars
+                   if hasattr(v, "aval"))
+    if name == "dot_general":
+        return _dot_flops(eqn), in_bytes + out_bytes
+    if name == "conv_general_dilated":
+        return 2.0 * out_bytes, in_bytes + out_bytes
+    n_out = sum(math.prod(v.aval.shape) for v in eqn.outvars
+                if hasattr(v, "aval"))
+    byts = (in_bytes + out_bytes) if name in _HBM_OPS else 0.0
+    return _ELEMENTWISE_COST * n_out, byts
+
+
+_CALL_PRIMS = {"pjit", "closed_call", "core_call", "custom_jvp_call",
+               "custom_vjp_call", "custom_vjp_call_jaxpr", "remat_call",
+               "checkpoint", "remat", "custom_lin"}
+
+
+def jaxpr_cost(jaxpr) -> tuple[float, float]:
+    """Walk a (closed) jaxpr: returns (flops, bytes), scans multiplied by
+    their static trip count."""
+    flops = byts = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            inner_f, inner_b = jaxpr_cost(eqn.params["jaxpr"].jaxpr)
+            n = eqn.params["length"]
+            flops += n * inner_f
+            byts += n * inner_b
+        elif name == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            inner_f, inner_b = jaxpr_cost(body)
+            # unknown trip count: assume 1 (scan covers our loops)
+            flops += inner_f
+            byts += inner_b
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            costs = [jaxpr_cost(b.jaxpr) for b in branches]
+            f = max(c[0] for c in costs)
+            b = max(c[1] for c in costs)
+            flops += f
+            byts += b
+        elif name in _CALL_PRIMS or "jaxpr" in eqn.params or \
+                "call_jaxpr" in eqn.params:
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if inner is None:
+                f, b = _eqn_cost(eqn)
+                flops += f
+                byts += b
+                continue
+            if hasattr(inner, "jaxpr"):
+                inner = inner.jaxpr
+            inner_f, inner_b = jaxpr_cost(inner)
+            flops += inner_f
+            byts += inner_b
+        else:
+            f, b = _eqn_cost(eqn)
+            flops += f
+            byts += b
+    return flops, byts
+
+
+def traced_cost(jitted, *args) -> tuple[float, float]:
+    """(semantic_flops, semantic_bytes) of jitted(*args) — GLOBAL (unsharded)
+    counts; divide by chips for per-device."""
+    traced = jitted.trace(*args)
+    return jaxpr_cost(traced.jaxpr.jaxpr)

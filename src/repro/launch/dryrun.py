@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on the production meshes, prove memory fits, and extract the
+roofline terms (§Roofline) from the compiled artifact.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init). Do not set that flag globally — smoke tests and
+benches see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all            # every runnable cell
+  python -m repro.launch.dryrun --all --multi-pod
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPES, cell_runnable, get_config
+from repro.launch.analysis import jaxpr_cost
+from repro.launch.build import build_cell, active_params, vmem_kernel_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (Roofline, collective_bytes,
+                                   cpu_upcast_overhead_bytes, hlo_hbm_bytes,
+                                   model_flops_estimate)
+
+OUT_DIR = "experiments/dryrun"
+
+
+def run_cell(arch: str, shape_id: str, *, multi_pod: bool,
+             grad_accum: int = 1, remat: str | None = None,
+             tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    cell = build_cell(arch, shape_id, mesh, grad_accum=grad_accum,
+                      remat=remat)
+    with mesh:
+        traced = cell.jitted.trace(*cell.args)
+        sem_flops, sem_bytes = jaxpr_cost(traced.jaxpr.jaxpr)
+        lowered = traced.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # HLO shapes are the PER-DEVICE partitioned module: scale to global
+    coll_dev, by_kind = collective_bytes(hlo)
+    coll = coll_dev * chips
+    by_kind = {k: v * chips for k, v in by_kind.items()}
+    hbm_dev = hlo_hbm_bytes(hlo)
+
+    # HLO_FLOPs/bytes: XLA's cost_analysis counts while (scan) bodies ONCE
+    # — wrong by ~n_layers for scan-over-layers models — so the authoritative
+    # counts come from the jaxpr walker (semantic, global, incl. remat
+    # recompute). cost_analysis values are recorded for reference.
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    bytes_per_device = (mem.argument_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        + mem.output_size_in_bytes
+                        - mem.alias_size_in_bytes)
+    # host-platform artifact: CPU XLA makes f32 copies of bf16 params/caches
+    upcast = cpu_upcast_overhead_bytes(hlo)
+    tpu_bytes_per_device = max(0.0, bytes_per_device - upcast)
+
+    r = Roofline(
+        arch=arch, shape=shape_id, mesh=mesh_name, chips=chips,
+        hlo_flops=sem_flops,
+        hlo_bytes=hbm_dev * chips,
+        coll_bytes=float(coll),
+        coll_by_kind=by_kind,
+        model_flops=model_flops_estimate(
+            active_params(cell.cfg) * (grad_accum if False else 1),
+            cell.tokens_processed, cell.kind if cell.kind != "prefill"
+            else "inference"),
+        bytes_per_device=float(bytes_per_device),
+        min_bytes=cell.min_bytes,
+    ).finalize()
+
+    result = r.to_json()
+    # kernel-adjusted memory term: Pallas flash/SSD kernels keep these bytes
+    # in VMEM on the TPU target (the XLA-CPU lowering writes them to HBM)
+    shape = SHAPES[shape_id]
+    kadj = vmem_kernel_bytes(cell.cfg, cell.kind, shape.global_batch,
+                             shape.seq_len)
+    from repro.launch.roofline import HBM_BW
+    mem_kernel_s = max(r.hlo_bytes - kadj, cell.min_bytes) / (chips * HBM_BW)
+    bound_kernel = max(r.compute_s, mem_kernel_s, r.collective_s)
+    ideal = max(r.model_flops / (chips * 197e12),
+                cell.min_bytes / (chips * HBM_BW))
+    result.update(
+        status="ok", tag=tag,
+        vmem_kernel_bytes=kadj,
+        memory_kernel_s=mem_kernel_s,
+        bound_kernel_s=bound_kernel,
+        roofline_fraction_kernel=(ideal / bound_kernel) if bound_kernel else 0,
+        min_bytes=cell.min_bytes,
+        xla_cost_analysis={"flops_per_dev": flops_dev,
+                           "bytes_per_dev": bytes_dev},
+        jaxpr_semantic={"flops": sem_flops, "bytes_proxy": sem_bytes},
+        t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+        grad_accum=grad_accum, remat=remat or cell.cfg.remat,
+        memory_analysis={
+            "argument_size": mem.argument_size_in_bytes,
+            "output_size": mem.output_size_in_bytes,
+            "temp_size": mem.temp_size_in_bytes,
+            "alias_size": mem.alias_size_in_bytes,
+            "generated_code_size": mem.generated_code_size_in_bytes,
+        },
+        cpu_upcast_overhead=upcast,
+        tpu_bytes_per_device=tpu_bytes_per_device,
+        fits_v5e=bool(tpu_bytes_per_device <= 16 * 1024 ** 3),
+    )
+    print(f"[dryrun] {arch} x {shape_id} x {mesh_name}: "
+          f"compile ok ({t_compile:.0f}s); "
+          f"{bytes_per_device / 1e9:.2f} GB/device "
+          f"(TPU-corrected {tpu_bytes_per_device / 1e9:.2f}, "
+          f"fits_v5e={tpu_bytes_per_device <= 16 * 1024 ** 3}); "
+          f"dominant={r.dominant}; bound={r.bound_s * 1e3:.2f} ms; "
+          f"frac={r.roofline_fraction:.3f}; "
+          f"kernel-adj bound={bound_kernel * 1e3:.2f} ms "
+          f"frac={result['roofline_fraction_kernel']:.3f}")
+    print(f"  memory_analysis: {result['memory_analysis']}")
+    print(f"  cost_analysis: flops/dev={flops_dev:.3e} "
+          f"bytes/dev={bytes_dev:.3e} collective={coll:.3e}B {by_kind}")
+    return result
+
+
+def _outfile(arch, shape_id, multi_pod, tag=""):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    safe = arch.replace("/", "_")
+    return f"{OUT_DIR}/{safe}__{shape_id}__{mesh_name}{suffix}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--subprocess-per-cell", action="store_true",
+                    help="isolate each compile in a fresh process")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch in ASSIGNED:
+            cfg = get_config(arch)
+            for shape_id, shape in SHAPES.items():
+                out = _outfile(arch, shape_id, args.multi_pod, args.tag)
+                ok, why = cell_runnable(cfg, shape)
+                if not ok:
+                    with open(out, "w") as f:
+                        json.dump({"arch": arch, "shape": shape_id,
+                                   "mesh": "pod2x16x16" if args.multi_pod
+                                   else "pod16x16",
+                                   "status": "skipped", "reason": why}, f,
+                                  indent=1)
+                    print(f"[dryrun] SKIP {arch} x {shape_id}: {why}")
+                    continue
+                if os.path.exists(out) and not args.force:
+                    print(f"[dryrun] cached {out}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_id]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                if args.tag:
+                    cmd += ["--tag", args.tag]
+                rc = subprocess.run(cmd).returncode
+                if rc != 0:
+                    failures.append((arch, shape_id))
+        if failures:
+            print(f"[dryrun] FAILURES: {failures}")
+            return 1
+        print("[dryrun] all cells compiled")
+        return 0
+
+    assert args.arch and args.shape
+    out = _outfile(args.arch, args.shape, args.multi_pod, args.tag)
+    try:
+        result = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                          grad_accum=args.grad_accum, remat=args.remat,
+                          tag=args.tag)
+    except Exception as e:
+        traceback.print_exc()
+        result = {"arch": args.arch, "shape": args.shape,
+                  "mesh": "pod2x16x16" if args.multi_pod else "pod16x16",
+                  "status": "error", "error": f"{type(e).__name__}: {e}"}
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        return 1
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Mesh axes:
+  single-pod : (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips (2 pods over DCN)
+
+"pod" is pure data parallelism across the DCN boundary (gradient all-reduce
+crosses pods; everything else stays inside a pod's ICI domain), plus extra
+parameter sharding for the 1T-parameter cells.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (unit tests: 8 host devices)."""
+    n = n_devices or len(jax.devices())
+    model = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

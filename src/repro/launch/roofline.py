@@ -1,0 +1,330 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute   = HLO_FLOPs   / (chips * peak_FLOP/s)
+    memory    = HLO_bytes   / (chips * HBM_bw)
+    collective= coll_bytes  / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). Collective bytes
+are NOT in cost_analysis: we parse the optimized HLO text and sum OPERAND
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (as specified). Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass
+
+# --- TPU v5e constants (per chip) ---
+PEAK_FLOPS = 197e12       # bf16 dense
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link (given)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,256,4096]{2,1,0}  or  f32[]  or  (bf16[...], f32[...])
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    bpe = _DTYPE_BYTES.get(tok_dtype)
+    if bpe is None:
+        return 0
+    if not dims:
+        return bpe
+    return bpe * math.prod(int(d) for d in dims.split(","))
+
+
+def _computation_blocks(hlo_text: str) -> dict[str, list[str]]:
+    """Split HLO text into named computation bodies."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        st = s.strip()
+        # computation headers end with "{" and contain "->" but no "=" before
+        # the "(" of the parameter list (instruction lines always have "=").
+        if st.endswith("{") and "->" in st:
+            head = st.split("(")[0]
+            if "=" not in head:
+                m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", head.strip())
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    continue
+        if st == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _while_body_trips(hlo_text: str) -> dict[str, int]:
+    """Map while-body computation name -> trip count (parsed from the
+    paired condition's comparison constant; falls back to 1)."""
+    comps = _computation_blocks(hlo_text)
+    trips: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"while\(.*?\).*?condition=%?([\w.\-]+).*?"
+                      r"body=%?([\w.\-]+)", line)
+        if not m:
+            m = re.search(r"while\(.*?\).*?body=%?([\w.\-]+).*?"
+                          r"condition=%?([\w.\-]+)", line)
+            if not m:
+                continue
+            body, cond = m.group(1), m.group(2)
+        else:
+            cond, body = m.group(1), m.group(2)
+        trip = 1
+        for cl in comps.get(cond, []):
+            for c in re.findall(r"constant\((-?\d+)\)", cl):
+                trip = max(trip, int(c))
+            m2 = re.search(r"compare\([^)]*\).*direction=LT", cl)
+        trips[body] = max(trips.get(body, 1), trip)
+    return trips
+
+
+def collective_bytes(hlo_text: str) -> tuple[int, dict[str, int]]:
+    """Sum operand sizes of every collective op in the optimized HLO.
+    Collectives inside while bodies (scan-over-layers) are multiplied by the
+    loop trip count — XLA's own cost analysis does NOT do this, and it is a
+    factor-of-n_layers effect for TP models."""
+    trips = _while_body_trips(hlo_text)
+    comps = _computation_blocks(hlo_text)
+    total = 0
+    per_kind: dict[str, int] = {}
+
+    def scan_lines(lines, mult):
+        nonlocal total
+        for raw in lines:
+            _accumulate(raw.strip(), mult)
+
+    def _accumulate(s: str, mult: int):
+        nonlocal total
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)", s)
+        if m is None:
+            return
+        rhs = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                kind = c
+                break
+        if kind is None:
+            return
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+        out_bytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        groups = re.search(r"replica_groups=\{\{([0-9,]+)", rhs)
+        gsize = 1
+        if groups:
+            gsize = len(groups.group(1).split(","))
+        else:
+            m2 = re.search(r"replica_groups=\[\d+,(\d+)\]", rhs)
+            if m2:
+                gsize = int(m2.group(1))
+        if kind == "all-gather":
+            op_bytes = out_bytes // max(gsize, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = out_bytes * max(gsize, 1)
+        else:
+            op_bytes = out_bytes
+        total += op_bytes * mult
+        per_kind[kind] = per_kind.get(kind, 0) + op_bytes * mult
+
+    # top-level entry + every computation, with while bodies multiplied
+    seen_in_comp = set()
+    for name, lines in comps.items():
+        mult = trips.get(name, 1)
+        scan_lines(lines, mult)
+        seen_in_comp.add(name)
+    if not comps:
+        for line in hlo_text.splitlines():
+            _accumulate(line.strip(), 1)
+    return total, per_kind
+
+
+_SKIP_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+             "bitcast(", "bitcast-convert(", "after-all(", "partition-id(",
+             "iota(", "while(", "conditional(", "call(", "custom-call(")
+
+
+def hlo_hbm_bytes(hlo_text: str) -> float:
+    """Fusion-aware HBM-traffic estimate from the optimized HLO: each
+    surviving instruction's OUTPUT is one HBM write, and is read ~once by its
+    consumers -> traffic ~= 2 * sum(output bytes), with while-body
+    instructions multiplied by trip count. Parameters/constants/tuples and
+    control flow are skipped (no data movement of their own)."""
+    trips = _while_body_trips(hlo_text)
+    comps = _computation_blocks(hlo_text)
+    total = 0.0
+    for name, lines in comps.items():
+        mult = trips.get(name, 1)
+        for raw in lines:
+            s = raw.strip()
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)", s)
+            if m is None:
+                continue
+            rhs = m.group(1)
+            if any(op in rhs for op in _SKIP_OPS):
+                continue
+            sm = _SHAPE_RE.match(rhs.lstrip("( "))
+            if sm is None:
+                continue
+            total += 2.0 * _shape_bytes(sm.group(1), sm.group(2)) * mult
+    return total
+
+
+def cpu_upcast_overhead_bytes(hlo_text: str) -> float:
+    """XLA's CPU backend upcasts bf16 parameters/caches to f32 scratch
+    copies (no native bf16 compute on host). These buffers DO NOT EXIST on
+    the TPU target, so the dry-run's temp_size overstates TPU HBM use by
+    exactly their total. Detected as top-level conversion fusions
+    (`fusion(%param.N) ... calls=%wrapped_convert_computation*`) and
+    standalone `convert(%param.N)` whose operand is a MODULE parameter —
+    scanned only in the entry / while-body computations so fusion-internal
+    `%param_k` names don't false-positive."""
+    trips = _while_body_trips(hlo_text)
+    comps = _computation_blocks(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    scan_comps = set(trips) | ({entry} if entry else set())
+    total = 0.0
+    for name in scan_comps:
+        for raw in comps.get(name, []):
+            s = raw.strip()
+            m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)", s)
+            if m is None:
+                continue
+            rhs = m.group(1)
+            hit = (re.search(r"\bfusion\(%?param[\w.\-]*\)", rhs)
+                   and "wrapped_convert" in rhs) or \
+                re.match(r"^\(?\s*f32\[[0-9,]*\]\S*\s+convert\(%?param",
+                         rhs)
+            if not hit:
+                continue
+            sm = _SHAPE_RE.match(rhs.lstrip("( "))
+            if sm is None or sm.group(1) != "f32":
+                continue
+            total += _shape_bytes(sm.group(1), sm.group(2))
+    return total
+
+
+def _collective_bytes_flat(hlo_text: str) -> tuple[int, dict[str, int]]:
+    """(retained for reference) single-pass parse without trip counts."""
+    total = 0
+    per_kind: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # op lines look like:  %x = TYPE all-reduce(%a, %b), channel_id=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)", s)
+        if m is None:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            # match "all-reduce(" or "all-reduce-start(" as the op name
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand shapes: everything inside the op's (...) argument list is
+        # given by the operands' declared result types on this line BEFORE
+        # the op name — in post-optimization HLO, the op's own result type
+        # prefixes the op name and equals the output; operand types appear
+        # in the argument list for typed calls. Practical approximation used
+        # here (documented): operand bytes ~= result bytes for all-reduce /
+        # collective-permute / all-to-all; for all-gather operand = result /
+        # group_size; for reduce-scatter operand = result * group_size.
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+        out_bytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        groups = re.search(r"replica_groups=\{\{([0-9,]+)", rhs)
+        gsize = 1
+        if groups:
+            gsize = len(groups.group(1).split(","))
+        else:
+            m2 = re.search(r"replica_groups=\[\d+,(\d+)\]", rhs)
+            if m2:
+                gsize = int(m2.group(1))
+        if kind == "all-gather":
+            op_bytes = out_bytes // max(gsize, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = out_bytes * max(gsize, 1)
+        else:
+            op_bytes = out_bytes
+        total += op_bytes
+        per_kind[kind] = per_kind.get(kind, 0) + op_bytes
+    return total, per_kind
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_kind: dict
+    model_flops: float            # 6ND (train) / 2ND (inference), N_active
+    bytes_per_device: float       # from memory_analysis
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.coll_bytes / (self.chips * LINK_BW)
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    min_bytes: float = 0.0     # memory floor (params+cache+activations)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achieved fraction of the cell's roofline: ideal time (max of the
+        compute ideal and the memory FLOOR) over the bounding term."""
+        ideal = max(self.model_flops / (self.chips * PEAK_FLOPS),
+                    self.min_bytes / (self.chips * HBM_BW))
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d.update(dominant=self.dominant, useful_fraction=self.useful_fraction,
+                 roofline_fraction=self.roofline_fraction,
+                 bound_s=self.bound_s)
+        return d
+
+
+def model_flops_estimate(n_params_active: float, tokens: float,
+                         kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference forward."""
+    return (6.0 if kind == "train" else 2.0) * n_params_active * tokens

@@ -1,0 +1,4 @@
+from .common import ArchConfig, count_params
+from .transformer import build_model
+
+__all__ = ["ArchConfig", "count_params", "build_model"]

@@ -1,0 +1,197 @@
+"""GQA attention (train/prefill/decode) with optional Pallas kernel dispatch.
+
+Shapes follow the (B, T, H, hd) convention. KV caches are slot-contiguous
+(B, L_max, H_kv, hd) — the TPU-native adaptation of paged attention (see
+DESIGN.md §3): contiguous blocks DMA cleanly into VMEM; per-sequence lengths
+mask validity instead of page tables.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.logical import constrain
+
+from .common import ArchConfig, apply_rope, dense_init, rope_angles
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array     # (d, Hq*hd)
+    wk: jax.Array     # (d, Hkv*hd)
+    wv: jax.Array     # (d, Hkv*hd)
+    wo: jax.Array     # (Hq*hd, d)
+
+
+def init_attn(key, cfg: ArchConfig) -> AttnParams:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return AttnParams(
+        dense_init(kq, (d, hq * hd), dtype=cfg.param_dtype),
+        dense_init(kk, (d, hkv * hd), dtype=cfg.param_dtype),
+        dense_init(kv, (d, hkv * hd), dtype=cfg.param_dtype),
+        dense_init(ko, (hq * hd, d), dtype=cfg.param_dtype),
+    )
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, kv_len: jax.Array | None = None,
+                      blk: int = 512) -> jax.Array:
+    """Flash-style attention in PURE XLA: lax.scan over KV blocks with
+    online softmax, rematerialized — the S^2 score tensor never exists.
+    This is the lowering the dry-run compiles (the Pallas kernel plays this
+    role on real TPU); without it, kimi-k2's train_4k cell materialized
+    1.1 TB of fp32 scores per layer. q: (B,T,Hq,hd); k/v: (B,S,Hkv,hd)."""
+    B, T, Hq, hd = q.shape
+    _, S, Hkv, _ = k.shape
+    g = Hq // Hkv
+    blk = min(blk, S)
+    if S % blk:
+        blk = S  # fallback: single block
+    nb = S // blk
+    qg = q.reshape(B, T, Hkv, g, hd).astype(jnp.float32) / jnp.sqrt(float(hd))
+    kb = jnp.moveaxis(k.reshape(B, nb, blk, Hkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, blk, Hkv, hd), 1, 0)
+    qpos = jnp.arange(T)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, l, acc = carry
+        k_b, v_b, b_idx = inp
+        s = jnp.einsum("bthgd,bkhd->bhgtk", qg, k_b.astype(jnp.float32))
+        kpos = b_idx * blk + jnp.arange(blk)
+        mask = None
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+        if kv_len is not None:
+            valid = kpos[None, :] < kv_len[:, None]        # (B, blk)
+            vm = valid[:, None, None, None, :]
+            mask = vm if mask is None else (mask[None, None, None] & vm)
+        if mask is not None:
+            if mask.ndim == 2:
+                mask = mask[None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        upd = jnp.einsum("bhgtk,bkhd->bhgtd", p, v_b.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, g, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, T), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, T, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(B, T, Hq, hd).astype(q.dtype)
+
+
+def gqa_scores_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool, q_offset: jax.Array | int = 0,
+                         kv_len: jax.Array | None = None) -> jax.Array:
+    """Reference XLA attention. q: (B, Tq, Hq, hd), k/v: (B, Tk, Hkv, hd).
+    ``q_offset``: absolute position of q[0] (decode); ``kv_len``: per-batch
+    valid KV prefix length (B,) for slot caches."""
+    B, Tq, Hq, hd = q.shape
+    _, Tk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qg = q.reshape(B, Tq, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    if Tq > 1:
+        # XLA-fallback memory control: shard the S^2 score tensor's query
+        # dim over "model" (head counts are too uneven across archs to rely
+        # on head sharding). The TPU serving path never materializes this —
+        # the Pallas flash kernel streams KV blocks instead.
+        scores = constrain(scores, "batch", None, None, "q_seq", None)
+    mask = None
+    if causal:
+        qpos = jnp.arange(Tq) + q_offset
+        kpos = jnp.arange(Tk)
+        mask = qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        valid = jnp.arange(Tk)[None, :] < kv_len[:, None]     # (B, Tk)
+        vmask = valid[:, None, None, None, :]
+        mask = vmask if mask is None else (mask[None, None, None] & vmask)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Tq, Hq, hd).astype(q.dtype)
+
+
+def attention_block(p: AttnParams, x: jax.Array, cfg: ArchConfig, *,
+                    causal: bool = True,
+                    positions: jax.Array | None = None,
+                    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+                    cache_index: jax.Array | None = None,
+                    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+                    use_rope: bool = True,
+                    ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """One attention sublayer (no residual/norm). Modes:
+      * train/prefill: kv_cache None -> self-attention over x;
+      * decode: kv_cache (K, V) slot caches + cache_index -> append then attend;
+      * cross: cross_kv given -> encoder-decoder attention (ignores cache).
+    Returns (out, updated_cache).
+    """
+    B, T, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p.wq.astype(cfg.compute_dtype)).reshape(B, T, hq, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = gqa_scores_attention(q, k, v, causal=False)
+        return out.reshape(B, T, hq * hd) @ p.wo.astype(cfg.compute_dtype), None
+    k = (x @ p.wk.astype(cfg.compute_dtype)).reshape(B, T, hkv, hd)
+    v = (x @ p.wv.astype(cfg.compute_dtype)).reshape(B, T, hkv, hd)
+
+    if positions is None:
+        pos = jnp.arange(T)[None, :] if cache_index is None else \
+            (cache_index[:, None] + jnp.arange(T)[None, :])
+    else:
+        pos = positions
+    if use_rope:
+        sin, cos = rope_angles(pos, hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache                     # (B, L_max, Hkv, hd)
+        idx = cache_index if cache_index is not None else jnp.zeros(
+            (B,), jnp.int32)
+        ck = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(ck, k, idx)
+        cv = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+        )(cv, v, idx)
+        new_cache = (ck, cv)
+        if T == 1:
+            # decode: every valid cached position is <= the current one,
+            # so kv_len masking alone is exact (no causal matrix needed).
+            # Hot path -> Pallas decode-attention kernel on TPU.
+            from repro.kernels import ops as kops
+            out = kops.decode_attention(q[:, 0], ck, cv, idx + 1)[:, None]
+        elif T >= 1024:
+            # long prefill-into-cache: flash-style chunked lowering
+            out = chunked_attention(q, ck, cv, causal=True, kv_len=idx + T)
+        else:
+            # prefill-into-cache (idx == 0 per slot-allocation contract)
+            out = gqa_scores_attention(q, ck, cv, causal=True,
+                                       q_offset=0, kv_len=idx + T)
+    else:
+        if causal and q.shape[1] == k.shape[1]:
+            # train/prefill hot path -> Pallas flash attention on TPU
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=True)
+        else:
+            out = gqa_scores_attention(q, k, v, causal=causal)
+    out = out.reshape(B, T, hq * hd) @ p.wo.astype(cfg.compute_dtype)
+    return out, new_cache

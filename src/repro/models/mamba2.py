@@ -1,0 +1,202 @@
+"""Mamba2 / SSD (state-space duality) blocks, chunked-scan formulation.
+
+The chunked algorithm (Dao & Gu 2024) splits T into chunks of Q tokens:
+quadratic attention-like compute inside a chunk (MXU-friendly) plus a
+sequential inter-chunk state recurrence of length T/Q. This is *the*
+TPU-native adaptation: the intra-chunk einsums are 128-aligned matmuls and
+the carried state (H, N, P) lives happily in VMEM (see kernels/ssd_scan.py
+for the Pallas version).
+
+Decode keeps O(1) state: (conv tail, SSM state) — the reason mamba2/zamba2
+are the only assigned archs that run the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.logical import constrain
+
+from .common import ArchConfig, dense_init, rmsnorm
+
+G = 1   # number of B/C groups (mamba2-1.3b uses 1)
+
+
+class Mamba2Params(NamedTuple):
+    in_proj: jax.Array    # (d, 2*d_inner + 2*G*N + H)
+    conv_w: jax.Array     # (K, conv_ch)   depthwise
+    conv_b: jax.Array     # (conv_ch,)
+    dt_bias: jax.Array    # (H,)
+    A_log: jax.Array      # (H,)
+    D: jax.Array          # (H,)
+    norm_w: jax.Array     # (d_inner,)
+    out_proj: jax.Array   # (d_inner, d)
+
+
+def conv_channels(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * G * cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Mamba2Params:
+    d, din, H, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * din + 2 * G * N + H
+    return Mamba2Params(
+        in_proj=dense_init(ks[0], (d, d_proj), dtype=cfg.param_dtype),
+        conv_w=(jax.random.normal(ks[1], (cfg.conv_kernel,
+                                          conv_channels(cfg))) * 0.1
+                ).astype(cfg.param_dtype),
+        conv_b=jnp.zeros((conv_channels(cfg),), cfg.param_dtype),
+        dt_bias=jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(
+            jnp.float32),
+        A_log=jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        D=jnp.ones((H,), jnp.float32),
+        norm_w=jnp.ones((din,), cfg.param_dtype),
+        out_proj=dense_init(ks[3], (din, d), dtype=cfg.param_dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+def _segsum(loga: jax.Array) -> jax.Array:
+    """loga: (..., Q) -> L (..., Q, Q) with L[i,j] = sum_{j<m<=i} loga[m],
+    -inf for j > i (strictly causal decay matrix in log space)."""
+    Q = loga.shape[-1]
+    cum = jnp.cumsum(loga, axis=-1)
+    L = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, *, chunk: int,
+                initial_state: jax.Array | None = None,
+                return_state: bool = False):
+    """SSD scan. x: (B,T,H,P) fp32, dt: (B,T,H), A: (H,) negative,
+    Bm/Cm: (B,T,N). Returns y (B,T,H,P) [, final_state (B,H,N,P)]."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, f"T={T} not divisible by chunk={chunk}"
+    nc, Q = T // chunk, chunk
+
+    # chunked views
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+    loga = dtr * A[None, None, None, :]               # (B,nc,Q,H) <= 0
+    u = xr * dtr[..., None]                           # dt-weighted input
+    cum = jnp.cumsum(loga, axis=2)                    # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)        # (B,nc,Q,Q)
+    L = jnp.exp(_segsum(jnp.moveaxis(loga, -1, 2)))   # (B,nc,H,Q,Q)
+    L = constrain(L, "batch", None, "heads", None, None)
+    y_intra = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", CB, L, u)
+
+    # ---- chunk summaries -> sequential inter-chunk recurrence ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (B,nc,Q,H)
+    S = jnp.einsum("bckn,bckh,bckhp->bchnp", Br, decay_to_end, u)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B,nc,H)
+
+    def step(h, inp):
+        s_c, dec_c = inp                              # (B,H,N,P), (B,H)
+        y_state = h                                   # state entering chunk
+        h = h * dec_c[..., None, None] + s_c
+        return h, y_state
+
+    h0 = initial_state if initial_state is not None else \
+        jnp.zeros((Bsz, H, N, P), x.dtype)
+    final, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                   # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution ----
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cr, h_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    if return_state:
+        return y, final
+    return y
+
+
+def ssd_decode_step(h: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array):
+    """One-token recurrence. h: (B,H,N,P), x: (B,H,P), dt: (B,H),
+    Bm/Cm: (B,N). Returns (y (B,H,P), h')."""
+    a = jnp.exp(dt * A[None, :])                      # (B,H)
+    u = x * dt[..., None]                             # (B,H,P)
+    h = h * a[..., None, None] + jnp.einsum("bn,bhp->bhnp", Bm, u)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+def _depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                    tail: jax.Array | None = None):
+    """Causal depthwise conv along T. x: (B,T,ch), w: (K,ch).
+    ``tail``: (B,K-1,ch) carried state for decode/chunked prefill."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    new_tail = xp[:, -(K - 1):, :]
+    return out + b[None, None, :], new_tail
+
+
+class MambaState(NamedTuple):
+    conv_tail: jax.Array    # (B, K-1, conv_ch)
+    ssm: jax.Array          # (B, H, N, P)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    return MambaState(
+        jnp.zeros((batch, cfg.conv_kernel - 1, conv_channels(cfg)), dtype),
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                  jnp.float32))
+
+
+def mamba2_block(p: Mamba2Params, x: jax.Array, cfg: ArchConfig, *,
+                 state: MambaState | None = None,
+                 return_state: bool = False):
+    """Full block (no residual/outer norm). x: (B,T,d)."""
+    Bsz, T, d = x.shape
+    din, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    cd = cfg.compute_dtype
+    proj = x @ p.in_proj.astype(cd)                   # (B,T,dp)
+    z, xbc, dt_raw = jnp.split(
+        proj, [din, din + conv_channels(cfg)], axis=-1)
+    xbc, new_tail = _depthwise_conv(
+        xbc, p.conv_w.astype(cd), p.conv_b.astype(cd),
+        tail=None if state is None else state.conv_tail.astype(cd))
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [din, din + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.A_log)
+
+    xs4 = xs.reshape(Bsz, T, H, P).astype(jnp.float32)
+    # SSD working set (decay matrices etc.) is (B, nc, H, Q, Q)-shaped:
+    # shard heads over "model" so no single device materializes full-H tiles
+    xs4 = constrain(xs4, "batch", None, "heads", None)
+    Bm32, Cm32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    if T == 1 and state is not None:
+        y, ssm = ssd_decode_step(
+            state.ssm, xs4[:, 0], dt[:, 0], A, Bm32[:, 0], Cm32[:, 0])
+        y = y[:, None]
+    else:
+        init = state.ssm if state is not None else None
+        out = ssd_chunked(xs4, dt, A, Bm32, Cm32,
+                          chunk=min(cfg.ssm_chunk, T),
+                          initial_state=init, return_state=return_state)
+        y, ssm = out if return_state else (out, None)
+    y = y + p.D[None, None, :, None] * xs4            # skip connection
+    y = y.reshape(Bsz, T, din).astype(cd)
+    y = rmsnorm(y * jax.nn.silu(z), p.norm_w, cfg.norm_eps)
+    out = y @ p.out_proj.astype(cd)
+    if return_state or (T == 1 and state is not None):
+        return out, MambaState(new_tail.astype(x.dtype), ssm)
+    return out, None

@@ -1,0 +1,10 @@
+from .checkpoint import Checkpointer
+from .data import DataConfig, SyntheticLM, preference_batch
+from .losses import dpo_loss, ppo_loss, reward_model_loss, sft_loss
+from .optimizer import OptimizerConfig, Schedule, build_optimizer
+from .train_step import build_train_step, init_train_state, make_training
+
+__all__ = ["Checkpointer", "DataConfig", "SyntheticLM", "preference_batch",
+           "dpo_loss", "ppo_loss", "reward_model_loss", "sft_loss",
+           "OptimizerConfig", "Schedule", "build_optimizer",
+           "build_train_step", "init_train_state", "make_training"]

@@ -1,0 +1,82 @@
+"""CAS-backed checkpointing — the paper's storage model applied to training.
+
+Every leaf tensor is an immutable content-addressed artifact; a checkpoint is
+a tiny manifest (tree structure + leaf hashes + step). Consequences, exactly
+mirroring §3.2/3.3:
+
+  * incremental dedup: unchanged leaves (frozen towers, embeddings under
+    LoRA) are stored once across the whole checkpoint history;
+  * retry/preemption safety: manifests publish atomically, a half-written
+    checkpoint is unreachable;
+  * lineage: a training run's manifest hash chain is its provenance.
+
+At multi-pod scale each host saves only the shards it owns (the manifest maps
+leaf-path -> [shard hashes + index offsets]); on this single-process container
+that degenerates to one shard per leaf, same format.
+"""
+from __future__ import annotations
+
+import json
+import pickle
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.cas import CAS
+
+
+def _leaf_bytes(x) -> bytes:
+    arr = np.asarray(x)
+    header = json.dumps({"dtype": str(arr.dtype),
+                         "shape": list(arr.shape)}).encode()
+    return len(header).to_bytes(4, "little") + header + arr.tobytes()
+
+
+def _bytes_leaf(data: bytes):
+    n = int.from_bytes(data[:4], "little")
+    meta = json.loads(data[4:4 + n])
+    arr = np.frombuffer(data[4 + n:], dtype=meta["dtype"])
+    if meta["dtype"] == "bfloat16":     # numpy can't parse bf16 via str
+        import ml_dtypes  # type: ignore
+        arr = np.frombuffer(data[4 + n:], dtype=ml_dtypes.bfloat16)
+    return arr.reshape(meta["shape"])
+
+
+class Checkpointer:
+    def __init__(self, cas: CAS, run_name: str = "run") -> None:
+        self.cas = cas
+        self.run_name = run_name
+        self._pointers: dict[str, str] = {}    # run -> latest manifest hash
+
+    def save(self, state: Any, step: int, *, extra: dict | None = None) -> str:
+        leaves, treedef = jax.tree.flatten(state)
+        leaf_hashes = [self.cas.put_bytes(_leaf_bytes(l)) for l in leaves]
+        manifest = {
+            "step": step,
+            "leaves": leaf_hashes,
+            "treedef": pickle.dumps(treedef).hex(),
+            "extra": extra or {},
+        }
+        mhash = self.cas.put_bytes(json.dumps(manifest).encode())
+        self._pointers[self.run_name] = mhash
+        # durable pointer for DiskCAS runs
+        ptr = json.dumps({"run": self.run_name, "manifest": mhash,
+                          "step": step}).encode()
+        self.cas.put_bytes(ptr)
+        return mhash
+
+    def restore(self, manifest_hash: str | None = None) -> tuple[Any, int, dict]:
+        mhash = manifest_hash or self._pointers.get(self.run_name)
+        if mhash is None:
+            raise FileNotFoundError(f"no checkpoint for run {self.run_name}")
+        manifest = json.loads(self.cas.get_bytes(mhash))
+        treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
+        leaves = [_bytes_leaf(self.cas.get_bytes(h))
+                  for h in manifest["leaves"]]
+        state = jax.tree.unflatten(treedef, leaves)
+        return state, manifest["step"], manifest["extra"]
+
+    @property
+    def latest(self) -> str | None:
+        return self._pointers.get(self.run_name)

@@ -1,0 +1,68 @@
+"""Deterministic synthetic data pipeline.
+
+Token streams are generated from a seeded Markov-ish process so that losses
+are learnable (structure exists), runs are exactly reproducible across
+restarts (checkpoint/resume tests rely on it), and per-host sharding is
+derivable from (epoch, step, host) alone — the stateless-data property that
+elastic re-meshing at 1000-node scale requires.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    structure: int = 97     # periodicity that makes the stream learnable
+
+
+class SyntheticLM:
+    """batch(step) -> {tokens, labels, loss_mask}; pure function of step."""
+
+    def __init__(self, cfg: DataConfig) -> None:
+        self.cfg = cfg
+
+    def batch(self, step: int, *, batch_size: int | None = None,
+              host_id: int = 0, n_hosts: int = 1) -> dict:
+        cfg = self.cfg
+        B = batch_size or cfg.global_batch
+        B_local = B // n_hosts
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(cfg.seed), step), host_id)
+        base = jax.random.randint(
+            key, (B_local, cfg.seq_len + 1), 0, cfg.structure)
+        # structured stream: next token depends deterministically on previous
+        toks = (base[:, :-1] * 31 + base[:, 1:]) % cfg.vocab_size
+        nxt = (base[:, 1:] * 31 + (base[:, 1:] + 1) % cfg.structure) \
+            % cfg.vocab_size
+        return {
+            "tokens": toks.astype(jnp.int32),
+            "labels": nxt.astype(jnp.int32),
+            "loss_mask": jnp.ones_like(toks, jnp.int32),
+        }
+
+
+def preference_batch(vocab: int, seq: int, batch: int, step: int,
+                     seed: int = 0) -> dict:
+    """Synthetic (chosen, rejected) pairs for DPO/reward training."""
+    key = jax.random.fold_in(jax.random.key(seed + 101), step)
+    kc, kr = jax.random.split(key)
+    chosen = jax.random.randint(kc, (batch, seq), 0, vocab)
+    rejected = jax.random.randint(kr, (batch, seq), 0, vocab)
+    mask = jnp.ones((batch, seq), jnp.float32).at[:, :seq // 4].set(0.0)
+    return {
+        "chosen": chosen.astype(jnp.int32),
+        "chosen_labels": jnp.roll(chosen, -1, axis=1).astype(jnp.int32),
+        "chosen_mask": mask,
+        "rejected": rejected.astype(jnp.int32),
+        "rejected_labels": jnp.roll(rejected, -1, axis=1).astype(jnp.int32),
+        "rejected_mask": mask,
+    }

@@ -1,0 +1,191 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+AdamW with configurable moment dtype, and Adafactor (factored second moment,
+momentum-free option) — the latter is what makes kimi-k2-1t trainable within
+v5e HBM at the assigned shapes (see EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Schedule:
+    """Linear warmup + cosine decay."""
+
+    def __init__(self, peak_lr: float, warmup: int = 100,
+                 total: int = 10_000, floor: float = 0.1) -> None:
+        self.peak_lr, self.warmup, self.total, self.floor = \
+            peak_lr, warmup, total, floor
+
+    def __call__(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, self.warmup)
+        prog = jnp.clip((step - self.warmup) /
+                        jnp.maximum(1.0, self.total - self.warmup), 0.0, 1.0)
+        cos = self.floor + (1 - self.floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.peak_lr * jnp.minimum(warm, 1.0) * cos
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"               # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32   # bf16 halves optimizer HBM
+    # adafactor
+    factored_threshold: int = 2       # factor 2nd moment for ndim >= this
+    momentum: bool = False            # adafactor w/ bf16 momentum if True
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable                   # (grads, state, params) -> (new_p, new_s)
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    g = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-6))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+# ---------------------------------------------------------------------------
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    sched = Schedule(cfg.peak_lr, cfg.warmup, cfg.total_steps)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        lr = sched(step)
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if p.ndim >= 2:    # decoupled weight decay on matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return (newp.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                    v32.astype(cfg.moment_dtype))
+
+        # flatten/unflatten (NOT tree.map over result tuples — model params
+        # contain NamedTuples, which tree.map would treat as containers)
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(state["m"])
+        leaves_v = treedef.flatten_up_to(state["v"])
+        outs = [upd(p, g, m, v) for p, g, m, v in
+                zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+        newp = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        newm = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        newv = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        return newp, {"m": newm, "v": newv, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+def adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Factored 2nd moment (row/col RMS) for >=2D params; optional bf16
+    momentum. Optimizer state is ~0 bytes/param for big matrices."""
+    sched = Schedule(cfg.peak_lr, cfg.warmup, cfg.total_steps)
+
+    def _factored(p) -> bool:
+        return p.ndim >= cfg.factored_threshold
+
+    def init(params):
+        def slot(p):
+            if _factored(p):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"row": row, "col": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        state = {"v": jax.tree.map(slot, params,
+                                   is_leaf=lambda x: isinstance(x, jax.Array)),
+                 "step": jnp.zeros((), jnp.int32)}
+        if cfg.momentum:
+            state["m"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        return state
+
+    def update(grads, state, params):
+        grads, _ = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        lr = sched(step)
+        decay = 1.0 - step.astype(jnp.float32) ** -0.8   # t^-0.8 schedule
+
+        def upd(p, g, v, m):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + 1e-30
+            if _factored(p):
+                row = decay * v["row"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                col = decay * v["col"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = (row[..., None] * col[..., None, :]
+                        / jnp.maximum(rmean[..., None], 1e-30))
+                newv = {"row": row, "col": col}
+            else:
+                vv = decay * v["v"] + (1 - decay) * g2
+                vhat, newv = vv, {"v": vv}
+            upd32 = g32 / jnp.sqrt(vhat + cfg.eps)
+            # update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(upd32 * upd32) + 1e-30)
+            upd32 = upd32 / jnp.maximum(1.0, rms)
+            if m is not None:
+                m32 = 0.9 * m.astype(jnp.float32) + 0.1 * upd32
+                upd32, newm = m32, m32.astype(jnp.bfloat16)
+            else:
+                newm = None
+            if p.ndim >= 2:
+                upd32 = upd32 + cfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * upd32).astype(p.dtype)
+            return newp, newv, newm
+
+        ms = state.get("m")
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_v = treedef.flatten_up_to(state["v"])
+        leaves_m = treedef.flatten_up_to(ms) if ms is not None else \
+            [None] * len(leaves_p)
+        outs = [upd(p, g, v, m) for p, g, v, m in
+                zip(leaves_p, leaves_g, leaves_v, leaves_m)]
+        newp = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        newv = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        new_state = {"v": newv, "step": step}
+        if ms is not None:
+            new_state["m"] = jax.tree.unflatten(
+                treedef, [o[2] for o in outs])
+        return newp, new_state
+
+    return Optimizer(init, update)
+
+
+def build_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor}[cfg.name](cfg)

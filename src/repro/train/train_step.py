@@ -1,0 +1,77 @@
+"""Generic train-step builder: value_and_grad + optimizer + microbatch
+gradient accumulation + optional gradient compression hook.
+
+The returned step is a pure (state, batch) -> (state, metrics) function,
+ready for jax.jit with donated state (the launch layer adds in/out shardings
+for the production mesh).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import Optimizer, OptimizerConfig, build_optimizer
+
+
+def init_train_state(model, opt: Optimizer, key) -> dict:
+    params = model.init(key)
+    return {"params": params, "opt": opt.init(params)}
+
+
+def build_train_step(model, opt: Optimizer, *, grad_accum: int = 1,
+                     compress=None) -> Callable:
+    """``compress``: optional (grads, residual) -> (grads, residual) hook —
+    see distributed/compression.py for the int8 error-feedback impl."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def step(state: dict, batch: dict):
+        params = state["params"]
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # split the global batch into microbatches along axis 0 and
+            # accumulate grads in fp32 — memory ~ 1/grad_accum of activations
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                tot_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (tot_loss + l, acc_g), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (0.0, zero), micro)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        if compress is not None:
+            grads, new_resid = compress(grads, state.get("compress_residual"))
+        new_params, new_opt = opt.update(grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt}
+        if compress is not None:
+            new_state["compress_residual"] = new_resid
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_state, {"loss": loss.astype(jnp.float32),
+                           "grad_norm": gnorm}
+
+    return step
+
+
+def make_training(model, opt_cfg: OptimizerConfig | None = None,
+                  key=None, **step_kw):
+    """Convenience: (state, jitted step)."""
+    opt = build_optimizer(opt_cfg or OptimizerConfig())
+    state = init_train_state(model, opt, key or jax.random.key(0))
+    step = jax.jit(build_train_step(model, opt, **step_kw),
+                   donate_argnums=(0,))
+    return state, step

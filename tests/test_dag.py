@@ -1,0 +1,89 @@
+"""Unit tests: workflow DAG state machine + lineage."""
+import pytest
+
+from repro.core.cas import CAS
+from repro.core.dag import (OperatorSpec, OpState, OpType, Ref, WorkflowDAG)
+
+
+def chain():
+    return WorkflowDAG([
+        OperatorSpec("a", OpType.GENERATE, "llama-3.2-1b", inputs=["p0"]),
+        OperatorSpec("b", OpType.TOOL, inputs=[Ref("a")]),
+        OperatorSpec("c", OpType.GENERATE, "llama-3.2-1b",
+                     inputs=[Ref("b"), "p0"]),
+    ])
+
+
+def test_cycle_detection():
+    with pytest.raises(ValueError):
+        WorkflowDAG([
+            OperatorSpec("a", OpType.TOOL, inputs=[Ref("b")]),
+            OperatorSpec("b", OpType.TOOL, inputs=[Ref("a")]),
+        ])
+
+
+def test_unknown_ref_rejected():
+    with pytest.raises(ValueError):
+        WorkflowDAG([OperatorSpec("a", OpType.TOOL, inputs=[Ref("nope")])])
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError):
+        WorkflowDAG([OperatorSpec("a", OpType.TOOL),
+                     OperatorSpec("a", OpType.TOOL)])
+
+
+def test_frontier_progression():
+    dag, cas = chain(), CAS()
+    ready = dag.refresh_ready(cas)
+    assert ready == ["a"]
+    assert dag.state["b"] is OpState.PENDING
+    # completing a unblocks b; b unblocks c
+    out_a = cas.put(b"out-a")
+    dag.complete("a", out_a, executed=True, worker="w0", now=1.0)
+    assert dag.refresh_ready(cas) == ["b"]
+    dag.complete("b", cas.put(b"out-b"), executed=True, worker="w0", now=2.0)
+    assert dag.refresh_ready(cas) == ["c"]
+    dag.complete("c", cas.put(b"out-c"), executed=True, worker="w1", now=3.0)
+    assert dag.done
+    assert dag.latency == 3.0
+
+
+def test_h_task_uses_upstream_output_hash():
+    cas = CAS()
+    d1, d2 = chain(), chain()
+    d1.refresh_ready(cas)
+    d2.refresh_ready(cas)
+    # identical specs + identical literal inputs -> identical H_task
+    assert d1.h_task["a"] == d2.h_task["a"]
+    d1.complete("a", cas.put(b"same"), executed=True, worker=None, now=0)
+    d2.complete("a", cas.put(b"same"), executed=True, worker=None, now=0)
+    d1.refresh_ready(cas)
+    d2.refresh_ready(cas)
+    assert d1.h_task["b"] == d2.h_task["b"]   # same lineage -> dedupable
+
+
+def test_h_task_diverges_with_different_upstream():
+    cas = CAS()
+    d1, d2 = chain(), chain()
+    d1.refresh_ready(cas)
+    d2.refresh_ready(cas)
+    d1.complete("a", cas.put(b"one"), executed=True, worker=None, now=0)
+    d2.complete("a", cas.put(b"two"), executed=True, worker=None, now=0)
+    d1.refresh_ready(cas)
+    d2.refresh_ready(cas)
+    assert d1.h_task["b"] != d2.h_task["b"]
+
+
+def test_lineage_records_replay_order():
+    dag, cas = chain(), CAS()
+    dag.refresh_ready(cas)
+    dag.complete("a", cas.put(b"1"), executed=True, worker="w", now=1.0)
+    dag.refresh_ready(cas)
+    dag.complete("b", cas.put(b"2"), executed=False, worker=None, now=2.0)
+    dag.refresh_ready(cas)
+    dag.complete("c", cas.put(b"3"), executed=True, worker="w", now=3.0)
+    replay = dag.replay_order()
+    assert [l.op for l in replay] == ["a", "b", "c"]
+    assert replay[1].executed is False             # cache-satisfied
+    assert all(l.output_hash for l in replay)      # prospective provenance

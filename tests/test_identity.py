@@ -1,0 +1,55 @@
+"""Unit tests: deterministic identity (H_task / H_exec / canonicalization)."""
+import pytest
+
+from repro.core import identity
+from repro.core.identity import (canonical, content_hash, exec_signature,
+                                 model_hash, task_hash)
+
+
+def test_canonical_key_order_invariant():
+    assert canonical({"a": 1, "b": 2}) == canonical({"b": 2, "a": 1})
+
+
+def test_canonical_float_int_normalization():
+    assert canonical({"lr": 1.0}) == canonical({"lr": 1.00000})
+    # int 1 and float 1.0 are distinct hyperparameter values -> distinct
+    assert canonical({"lr": 1}) != canonical({"lr": 1.0})
+
+
+def test_canonical_container_normalization():
+    assert canonical({"xs": (1, 2)}) == canonical({"xs": [1, 2]})
+    assert canonical({"s": {3, 1, 2}}) == canonical({"s": [1, 2, 3]})
+
+
+def test_task_hash_depends_on_everything():
+    h = model_hash("llama-3.2-1b")
+    base = task_hash(h, {"t": 0.7}, ["in1", "in2"])
+    assert task_hash(h, {"t": 0.7}, ["in1", "in2"]) == base
+    assert task_hash(h, {"t": 0.8}, ["in1", "in2"]) != base
+    assert task_hash(h, {"t": 0.7}, ["in2", "in1"]) != base   # ordered lineage
+    assert task_hash(model_hash("llama-3.2-3b"), {"t": 0.7},
+                     ["in1", "in2"]) != base
+
+
+def test_exec_signature_omits_inputs_and_resource_hints():
+    h = model_hash("llama-3.2-1b")
+    a = exec_signature(h, {"t": 0.7, "slo_ms": 100}, "gpu.small")
+    b = exec_signature(h, {"t": 0.7, "slo_ms": 900, "priority": 3}, "gpu.small")
+    assert a == b                     # resource hints stripped
+    assert exec_signature(h, {"t": 0.9}, "gpu.small") != a   # hyperparam kept
+    assert exec_signature(h, {"t": 0.7}, "gpu.large") != a   # class kept
+
+
+def test_model_hash_adapters_are_a_set():
+    assert model_hash("m", adapters=("a", "b")) == model_hash(
+        "m", adapters=("b", "a"))
+    assert model_hash("m", adapters=("a",)) != model_hash("m")
+
+
+def test_content_hash_length_prefix_no_concat_ambiguity():
+    assert identity.digest("ab", "c") != identity.digest("a", "bc")
+
+
+def test_content_hash_deterministic():
+    assert content_hash(b"xyz") == content_hash(b"xyz")
+    assert content_hash(b"xyz") != content_hash(b"xyzz")

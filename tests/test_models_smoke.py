@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step + (where defined) a prefill+decode step on CPU, asserting
+output shapes and no NaNs. Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models.transformer import build_model
+
+
+def make_batch(cfg, B=2, S=32, key=jax.random.key(0)):
+    k1, k2 = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            k1, (B, cfg.enc_len, cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            k1, (B, cfg.n_patches, cfg.d_model), cfg.compute_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_loss(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    loss = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss is not finite"
+    # a reduced model at init should sit near ln(vocab) NLL
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < \
+        3.0 * np.log(cfg.vocab_size) + 1.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_grad_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    batch = make_batch(cfg, key=jax.random.key(2))
+    grads = jax.jit(jax.grad(model.loss_fn))(params, batch)
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat)
+    # at least one substantial gradient signal reaches the embedding table
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    if not hasattr(model, "prefill"):
+        pytest.skip("family has no serving path")
+    params = model.init(jax.random.key(3))
+    B, S, L_max = 2, 16, 32
+    batch = make_batch(cfg, B=B, S=S, key=jax.random.key(4))
+    batch.pop("labels")
+    cache = model.init_cache(B, L_max)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    expected_len = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert int(cache["index"][0]) == expected_len
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    for _ in range(3):
+        logits, cache = jax.jit(model.decode)(params, tok, cache)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+def test_decode_matches_full_forward_dense():
+    """Step-by-step decode must reproduce the teacher-forced forward pass."""
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(5))
+    B, S = 1, 8
+    toks = jax.random.randint(jax.random.key(6), (B, S), 0, cfg.vocab_size)
+    # full forward logits
+    h = model._trunk(params, params["embed"][toks])
+    full_logits = h @ params["lm_head"]
+    # incremental: prefill 1 token, then decode the rest
+    cache = model.init_cache(B, S + 4)
+    _, cache = model.prefill(params, {"tokens": toks[:, :1]}, cache)
+    outs = []
+    for i in range(1, S):
+        logits, cache = model.decode(params, toks[:, i:i + 1], cache)
+        outs.append(logits[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(inc),
+                               np.asarray(full_logits[:, 1:]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_decode_matches_chunked_prefill():
+    """Mamba2: token-by-token recurrence == chunked SSD scan."""
+    cfg = get_config("mamba2-1.3b").reduced(ssm_chunk=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(7))
+    B, S = 1, 8
+    toks = jax.random.randint(jax.random.key(8), (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(B, S)
+    logits_pre, cache_pre = model.prefill(params, {"tokens": toks}, cache)
+    # now run the same tokens one by one
+    cache = model.init_cache(B, S)
+    logits_inc = None
+    for i in range(S):
+        logits_inc, cache = model.decode(params, toks[:, i:i + 1], cache)
+    np.testing.assert_allclose(np.asarray(logits_inc[:, 0]),
+                               np.asarray(logits_pre[:, 0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_router_actually_routes():
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(9))
+    b1 = make_batch(cfg, key=jax.random.key(10))
+    b2 = {**b1, "tokens": (b1["tokens"] + 17) % cfg.vocab_size}
+    l1 = model.loss_fn(params, b1)
+    l2 = model.loss_fn(params, b2)
+    assert float(l1) != float(l2)     # routing/compute depends on inputs

@@ -1,0 +1,174 @@
+"""Property-based tests (hypothesis) for the fabric's core invariants:
+
+  1. canonicalization is permutation/representation invariant;
+  2. CAS is a function: bytes -> key, with perfect roundtrip;
+  3. at-most-once execution per H_task, no matter how many tenants collide;
+  4. the scheduler never proposes an infeasible placement;
+  5. every completed DAG has full per-edge lineage.
+"""
+import random as _random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cas import CAS
+from repro.core.control_plane import EngineConfig, FlowMeshEngine
+from repro.core.dag import OperatorSpec, OpType, Ref, WorkflowDAG
+from repro.core.identity import canonical, task_hash
+from repro.core.scheduler import FlowMeshScheduler, feasible
+from repro.core.simulator import SimExecutor
+from repro.core.worker import Worker, WorkerState
+from repro.core.cost_model import DEVICE_CLASSES
+
+# --------------------------------------------------------------------------
+json_scalars = st.one_of(st.integers(-10**6, 10**6), st.booleans(),
+                         st.text(max_size=12), st.none(),
+                         st.floats(allow_nan=False, allow_infinity=False))
+json_like = st.recursive(
+    json_scalars,
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.dictionaries(st.text(max_size=8), children, max_size=4)),
+    max_leaves=12)
+
+
+@given(st.dictionaries(st.text(max_size=8), json_like, max_size=5),
+       st.randoms())
+@settings(max_examples=60, deadline=None)
+def test_canonical_insertion_order_invariant(d, rnd):
+    items = list(d.items())
+    rnd.shuffle(items)
+    assert canonical(dict(items)) == canonical(d)
+
+
+@given(st.lists(st.tuples(st.text(max_size=6), st.integers()), max_size=6))
+@settings(max_examples=60, deadline=None)
+def test_canonical_tuple_vs_list(items):
+    assert canonical({"x": items}) == canonical({"x": [list(t) for t in items]})
+
+
+@given(st.binary(max_size=512))
+@settings(max_examples=80, deadline=None)
+def test_cas_roundtrip(data):
+    cas = CAS()
+    key = cas.put_bytes(data)
+    assert cas.get_bytes(key) == data
+    assert cas.put_bytes(data) == key          # idempotent
+    assert len(cas) == 1
+
+
+@given(st.lists(st.binary(max_size=64), min_size=2, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_cas_injective_on_distinct(blobs):
+    cas = CAS()
+    keys = [cas.put_bytes(b) for b in blobs]
+    assert len(set(keys)) == len(set(blobs))
+
+
+@given(st.lists(st.text(min_size=1, max_size=10), min_size=1, max_size=5))
+@settings(max_examples=60, deadline=None)
+def test_task_hash_order_sensitivity(inputs):
+    h1 = task_hash("m", {}, inputs)
+    if inputs != sorted(inputs):
+        assert task_hash("m", {}, sorted(inputs)) != h1 or \
+            inputs == sorted(inputs)
+
+
+# --------------------------------------------------------------------------
+# random small workflows, possibly colliding across tenants
+# --------------------------------------------------------------------------
+def _mk_workflow(seed: int, shared_pool: int) -> WorkflowDAG:
+    rng = _random.Random(seed)
+    model = rng.choice(["llama-3.2-1b", "llama-3.2-3b"])
+    prompt = f"p{rng.randrange(shared_pool)}"
+    n_mid = rng.randint(1, 3)
+    ops = [OperatorSpec("root", OpType.GENERATE, model, inputs=[prompt],
+                        tokens_in=128, tokens_out=32)]
+    for i in range(n_mid):
+        ops.append(OperatorSpec(
+            f"mid{i}", OpType.SCORE, "reward-1b",
+            inputs=[Ref("root")], tokens_in=128, tokens_out=8))
+    ops.append(OperatorSpec(
+        "sink", OpType.AGGREGATE, inputs=[Ref(f"mid{i}") for i in range(n_mid)],
+        resource_class="cpu"))
+    return WorkflowDAG(ops)
+
+
+class _RecordingExecutor(SimExecutor):
+    """SimExecutor that records every H_task it actually executes."""
+
+    def __init__(self, seed=0):
+        super().__init__(seed)
+        self.executed: list[str] = []
+
+    def execute(self, batch, worker, cas):
+        self.executed.extend(g.h_task for g in batch.groups)
+        return super().execute(batch, worker, cas)
+
+
+@given(st.lists(st.integers(0, 5), min_size=2, max_size=10),
+       st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_at_most_once_execution_per_h_task(seeds, pool):
+    ex = _RecordingExecutor(seed=0)
+    eng = FlowMeshEngine(executor=ex,
+                         config=EngineConfig(seed=0, speculation=False))
+    eng.bootstrap_workers(["h100-nvl-94g", "rtx4090-24g"])
+    for i, s in enumerate(seeds):
+        eng.submit(_mk_workflow(s, pool), at=0.1 * i)
+    tel = eng.run()
+    assert not eng.stalled
+    assert tel.n_tasks == len(seeds)
+    # INVARIANT: no H_task ever executes twice, across all tenants
+    assert len(ex.executed) == len(set(ex.executed))
+    # and the ledger balances: op instances = executed groups + savings
+    instances = sum(len(d.ops) for d in eng.dags.values())
+    assert instances == len(ex.executed) + tel.dedup_savings
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_lineage_complete_for_every_dag(seeds):
+    eng = FlowMeshEngine(executor=SimExecutor(seed=1),
+                         config=EngineConfig(seed=1, speculation=False))
+    eng.bootstrap_workers(["h100-nvl-94g", "rtx4090-24g"])
+    for i, s in enumerate(seeds):
+        eng.submit(_mk_workflow(s, 2), at=float(i))
+    eng.run()
+    for dag in eng.dags.values():
+        assert dag.done
+        assert {l.op for l in dag.lineage} == set(dag.ops)
+        for l in dag.lineage:
+            # every consumed hash resolvable -> exact replay possible
+            for h in l.input_hashes:
+                assert h in eng.cas or h in {x.output_hash
+                                             for x in dag.lineage}
+
+
+# --------------------------------------------------------------------------
+@given(st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_scheduler_never_proposes_infeasible(seed):
+    rng = _random.Random(seed)
+    eng = FlowMeshEngine(executor=SimExecutor(seed=seed),
+                         policy=FlowMeshScheduler(
+                             w_t=rng.uniform(0.1, 2), w_c=rng.uniform(0, 2),
+                             w_l=rng.uniform(0, 2)),
+                         config=EngineConfig(seed=seed, speculation=False))
+    classes = rng.sample(list(DEVICE_CLASSES), k=rng.randint(1, 4))
+    eng.bootstrap_workers(classes)
+    # monkeypatch the policy to record proposals
+    orig = eng.policy.schedule
+    violations = []
+
+    def checked(pending, workers, now):
+        props = orig(pending, workers, now)
+        for p in props:
+            if not feasible(p.groups[0].spec, p.worker):
+                violations.append(p)
+        return props
+
+    eng.policy.schedule = checked
+    for i in range(4):
+        eng.submit(_mk_workflow(rng.randrange(100), 3), at=float(i))
+    eng.run()
+    assert not violations
