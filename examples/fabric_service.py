@@ -1,0 +1,90 @@
+"""Fabric service quickstart: declarative spec in -> lineage / usage out.
+
+Three tenants drive one live FabricService through the request/response API:
+two submit the same distillation spec (the expensive teacher pass executes
+once and is reused across tenants), a third runs an agent loop, and a fourth
+submission arrives *while the fabric is mid-flight* — no run-to-completion
+restart in between. A quota-capped tenant gets a 429.
+
+    PYTHONPATH=src python examples/fabric_service.py
+"""
+import json
+
+from repro.fabric import FabricAPI, FabricService, TenantQuota
+
+SPEC = {
+    "name": "distill-gsm8k",
+    "tenant": "acme",
+    "deadline_s": 3600,
+    "ops": [
+        {"name": "teach", "op_type": "generate", "model_id": "llama-3.1-8b",
+         "params": {"max_batch": 12}, "inputs": ["gsm8k/shard-0"],
+         "tokens_in": 1024, "tokens_out": 1536},
+        {"name": "filter", "op_type": "aggregate", "inputs": ["@teach"],
+         "resource_class": "cpu"},
+        {"name": "sft", "op_type": "sft", "model_id": "llama-3.2-1b",
+         "params": {"lora": True, "lr": 2e-5, "max_batch": 12},
+         "inputs": ["@filter"], "train_tokens": 4_000_000},
+        {"name": "eval", "op_type": "eval", "model_id": "llama-3.2-1b",
+         "params": {"max_batch": 12}, "inputs": ["@sft", "gsm8k/holdout"],
+         "tokens_in": 2048, "tokens_out": 128},
+    ],
+}
+
+
+def main():
+    svc = FabricService(seed=0)
+    svc.set_quota("small-co", TenantQuota(max_active_workflows=1, weight=0.5))
+    api = FabricAPI(svc)
+
+    print("== FlowMesh fabric service ==")
+    _, a = api.handle("POST", "/workflows", {"spec": SPEC})
+    _, b = api.handle("POST", "/workflows",
+                      {"spec": {**SPEC, "tenant": "globex"}})
+    _, c = api.handle("POST", "/workflows", {
+        "template": "agent-loop",
+        "params": {"tenant": "initech", "rounds": 2}})
+    print(f"submitted: {a['job_id']} (acme), {b['job_id']} (globex), "
+          f"{c['job_id']} (initech)")
+
+    # pump the live engine partway, then submit more — the service never
+    # restarts between submissions
+    _, p = api.handle("POST", "/pump", {"max_steps": 30})
+    print(f"pumped {p['steps']} events, t={p['now']:.1f}s — "
+          f"submitting more mid-flight")
+    code, _ = api.handle("POST", "/workflows", {
+        "template": "batch-eval", "params": {"tenant": "small-co"}})
+    assert code == 201
+    code, rej = api.handle("POST", "/workflows", {
+        "template": "rlhf", "params": {"tenant": "small-co"}})
+    print(f"small-co second submit -> HTTP {code} ({rej['error']})")
+    assert code == 429
+
+    _, drained = api.handle("POST", "/drain", {})
+    print(f"drained at t={drained['now']:.1f}s\n")
+
+    print("lineage (acme vs globex — * = reused, not re-executed):")
+    for j in (a, b):
+        _, lin = api.handle("GET", f"/jobs/{j['job_id']}/lineage")
+        chain = " -> ".join(f"{l['op']}{'' if l['executed'] else '*'}"
+                            for l in lin["lineage"])
+        _, job = api.handle("GET", f"/jobs/{j['job_id']}")
+        print(f"  {job['tenant']:8s} {chain}   "
+              f"({job['latency_s']:.1f}s latency)")
+
+    print("\nper-tenant usage:")
+    for tenant in ("acme", "globex", "initech", "small-co"):
+        _, u = api.handle("GET", f"/tenants/{tenant}/usage")
+        print(f"  {tenant:8s} executed={u['ops']['executed']} "
+              f"deduped={u['ops']['deduped']} "
+              f"spend=${u['spend']['usd']:.4f} "
+              f"p50={u['latency']['p50_s']}s p99={u['latency']['p99_s']}s")
+
+    _, h = api.handle("GET", "/health")
+    print(f"\nhealth: {json.dumps(h, indent=2)}")
+    assert h["status"] == "ok" and h["dedup_savings"] >= 1
+    print("\nOK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a fast FabricService smoke workflow.
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+echo
+echo "== fabric service smoke =="
+PYTHONPATH=src python examples/fabric_service.py
+
+echo
+echo "== fabric CLI smoke =="
+PYTHONPATH=src python scripts/fabric_cli.py demo
+
+echo
+echo "CI OK"

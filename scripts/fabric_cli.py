@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""fabric_cli: drive a FlowMesh FabricService from the command line.
+
+Every subcommand goes through the same in-process request/response API the
+examples and tests use (an HTTP shim over ``FabricAPI.handle`` is a roadmap
+item; each invocation runs its own fabric instance until then).
+
+    PYTHONPATH=src python scripts/fabric_cli.py templates
+    PYTHONPATH=src python scripts/fabric_cli.py validate my_flow.json
+    PYTHONPATH=src python scripts/fabric_cli.py submit my_flow.json
+    PYTHONPATH=src python scripts/fabric_cli.py submit --template rlhf \
+        --param tenant=acme --param model=llama-3.2-1b
+    PYTHONPATH=src python scripts/fabric_cli.py demo
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.fabric import (FabricAPI, FabricService, render_template,
+                          validate_spec)
+
+
+def _parse_params(pairs: list[str]) -> dict:
+    out = {}
+    for pair in pairs or []:
+        if "=" not in pair:
+            sys.exit(f"--param expects k=v, got {pair!r}")
+        k, v = pair.split("=", 1)
+        try:
+            out[k] = json.loads(v)      # numbers, bools, lists...
+        except json.JSONDecodeError:
+            out[k] = v                  # plain string
+    return out
+
+
+def _print(payload) -> None:
+    print(json.dumps(payload, indent=2, default=str))
+
+
+def cmd_templates(api: FabricAPI, args) -> int:
+    _print(api.handle("GET", "/workflows/templates")[1])
+    return 0
+
+
+def cmd_validate(api: FabricAPI, args) -> int:
+    if args.spec:
+        with open(args.spec) as f:
+            doc = json.load(f)
+    else:
+        doc = render_template(args.template, **_parse_params(args.param))
+    errors = validate_spec(doc)
+    if errors:
+        print("INVALID:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n = len(doc.get("ops", []))
+    print(f"OK: {n} operators, tenant={doc.get('tenant', 'default')!r}")
+    return 0
+
+
+def cmd_submit(api: FabricAPI, args) -> int:
+    if args.spec:
+        with open(args.spec) as f:
+            body = {"spec": json.load(f)}
+    else:
+        body = {"template": args.template,
+                "params": _parse_params(args.param)}
+    code, job = api.handle("POST", "/workflows", body)
+    if code != 201:
+        print(f"HTTP {code}", file=sys.stderr)
+        _print(job)
+        return 1
+    if not args.no_drain:
+        api.handle("POST", "/drain", {})
+        _, job = api.handle("GET", f"/jobs/{job['job_id']}")
+        _, lineage = api.handle("GET", f"/jobs/{job['job_id']}/lineage")
+        _, usage = api.handle("GET", f"/tenants/{job['tenant']}/usage")
+        _print({"job": job, "lineage": lineage["lineage"], "usage": usage})
+    else:
+        _print(job)
+    return 0
+
+
+def cmd_demo(api: FabricAPI, args) -> int:
+    """Three tenants, overlapping distill specs, one live fabric."""
+    for tenant in ("acme", "globex", "initech"):
+        code, job = api.handle("POST", "/workflows", {
+            "template": "distill", "params": {"tenant": tenant}})
+        print(f"submitted {job['job_id']} for {tenant} (HTTP {code})")
+    api.handle("POST", "/pump", {"max_steps": 25})
+    code, extra = api.handle("POST", "/workflows", {
+        "template": "batch-eval", "params": {"tenant": "acme"}})
+    print(f"submitted {extra['job_id']} mid-flight (HTTP {code})")
+    api.handle("POST", "/drain", {})
+    for tenant in ("acme", "globex", "initech"):
+        _, u = api.handle("GET", f"/tenants/{tenant}/usage")
+        print(f"{tenant:8s} executed={u['ops']['executed']} "
+              f"deduped={u['ops']['deduped']} spend=${u['spend']['usd']:.4f}")
+    _, h = api.handle("GET", "/health")
+    print(f"health: {h['status']}, executions={h['executions']}, "
+          f"dedup_savings={h['dedup_savings']}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="fabric_cli", description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("templates", help="list workflow templates")
+
+    for name, help_ in (("validate", "validate a spec without running it"),
+                        ("submit", "submit a spec / template and run it")):
+        p = sub.add_parser(name, help=help_)
+        p.add_argument("spec", nargs="?", help="path to a JSON spec document")
+        p.add_argument("--template", help="named template instead of a file")
+        p.add_argument("--param", action="append", default=[],
+                       help="template parameter k=v (repeatable)")
+        if name == "submit":
+            p.add_argument("--no-drain", action="store_true",
+                           help="submit only; do not run to idle")
+
+    sub.add_parser("demo", help="multi-tenant dedup demo")
+
+    args = ap.parse_args(argv)
+    if args.cmd in ("validate", "submit") and not (
+            args.spec or args.template):
+        ap.error(f"{args.cmd} requires a spec file or --template")
+    api = FabricAPI(FabricService(seed=args.seed))
+    return {"templates": cmd_templates, "validate": cmd_validate,
+            "submit": cmd_submit, "demo": cmd_demo}[args.cmd](api, args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

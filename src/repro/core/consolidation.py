@@ -23,6 +23,12 @@ class PoolStats:
     dedup_joins: int = 0       # ops absorbed into an existing group
     cache_skips: int = 0       # ops satisfied instantly from the result index
     groups_created: int = 0
+    # per-tenant views of the same counters (fabric usage API)
+    arrived_by_tenant: dict[str, int] = field(default_factory=dict)
+    joins_by_tenant: dict[str, int] = field(default_factory=dict)
+
+    def _bump(self, d: dict[str, int], tenant: str) -> None:
+        d[tenant] = d.get(tenant, 0) + 1
 
 
 class ReadyPool:
@@ -46,9 +52,10 @@ class ReadyPool:
         - ("queued", g):   new ExecutionGroup created.
         """
         self.stats.ops_arrived += 1
+        self.stats._bump(self.stats.arrived_by_tenant, dag.tenant)
         spec = dag.ops[op_name]
         h_task = dag.h_task[op_name]
-        inst = TaskInstance(dag.dag_id, op_name)
+        inst = TaskInstance(dag.dag_id, op_name, dag.tenant)
 
         if dedup and h_task in result_index:
             self.stats.cache_skips += 1
@@ -58,6 +65,7 @@ class ReadyPool:
             g = self._by_task[h_task]
             g.consumers.append(inst)
             self.stats.dedup_joins += 1
+            self.stats._bump(self.stats.joins_by_tenant, dag.tenant)
             return "joined", g
 
         g = ExecutionGroup(
@@ -72,13 +80,34 @@ class ReadyPool:
 
     # ------------------------------------------------------------------
     def pending_by_exec(self) -> dict[str, list[ExecutionGroup]]:
-        """S(H_exec): batch-compatible sets of not-yet-dispatched groups."""
+        """S(H_exec): batch-compatible sets of not-yet-dispatched groups.
+
+        Groups are FIFO-ordered by ready time; an admission controller may
+        reorder each list (fair share) before the policy slices batches.
+        """
         out: dict[str, list[ExecutionGroup]] = {}
         for h_exec, groups in self._by_exec.items():
             ready = [g for g in groups if g.dispatch_at is None and not g.done]
             if ready:
+                ready.sort(key=lambda g: g.ready_at)
                 out[h_exec] = ready
         return out
+
+    def detach_dag(self, dag_id: str) -> list[ExecutionGroup]:
+        """Workflow cancellation: drop the DAG's task instances from every
+        group. Groups left with no consumers that are not yet running are
+        abandoned (removed from the pool); running groups finish for their
+        remaining consumers — or publish to the result index unconsumed."""
+        abandoned: list[ExecutionGroup] = []
+        for groups in list(self._by_exec.values()):
+            for g in list(groups):
+                if g.done or not any(c.dag_id == dag_id for c in g.consumers):
+                    continue
+                g.consumers = [c for c in g.consumers if c.dag_id != dag_id]
+                if not g.consumers and g.dispatch_at is None:
+                    self.finish(g)       # never dispatched: fully abandoned
+                    abandoned.append(g)
+        return abandoned
 
     def running_groups(self) -> list[ExecutionGroup]:
         return [g for gs in self._by_exec.values() for g in gs

@@ -57,7 +57,8 @@ class FlowMeshEngine:
                  executor: Executor, cas: CAS | None = None,
                  backend: Provisioner | None = None,
                  autoscaler: AutoscalerConfig | None = None,
-                 config: EngineConfig | None = None) -> None:
+                 config: EngineConfig | None = None,
+                 admission: Any | None = None) -> None:
         self.policy = policy or FlowMeshScheduler()
         self.executor = executor
         self.cas = cas or CAS()
@@ -65,6 +66,9 @@ class FlowMeshEngine:
         self.cfg = config or EngineConfig()
         self.autoscaler = Autoscaler(autoscaler or AutoscalerConfig(),
                                      self.backend)
+        #: optional multi-tenant gate (see fabric.admission): filters/orders
+        #: the ready pool before Eq. 1 scheduling and meters per-tenant usage
+        self.admission = admission
         self.rng = random.Random(self.cfg.seed)
 
         self.now = 0.0
@@ -77,11 +81,13 @@ class FlowMeshEngine:
         self.telemetry = Telemetry()
         self._service_times: dict[str, list[float]] = {}   # h_exec -> durations
         self._unfinished = 0
-        self._recurring_started = False
+        self._inflight_batches = 0                 # batch_done events queued
+        self._armed: set[str] = set()              # recurring timers in-flight
         self._arrival_horizon = 0.0
         self._dispatch_pending = False
         self._last_progress = 0.0
         self.stalled = False
+        self.cancelled: set[str] = set()           # dag_ids cancelled
 
     # ------------------------------------------------------------- events --
     def _push(self, t: float, kind: str, payload: Any = None) -> None:
@@ -108,6 +114,7 @@ class FlowMeshEngine:
     def submit(self, dag: WorkflowDAG, at: float = 0.0) -> None:
         if self.policy.monolithic:
             dag = self._monolithize(dag)
+        at = max(at, self.now)        # live fabric: no arrivals in the past
         dag.submitted_at = at
         self._unfinished += 1
         self._arrival_horizon = max(self._arrival_horizon, at)
@@ -116,34 +123,113 @@ class FlowMeshEngine:
     def inject_crash(self, worker_id_or_index, at: float) -> None:
         self._push(at, "crash", worker_id_or_index)
 
-    def run(self, until: float | None = None) -> Telemetry:
-        if not self._recurring_started:
-            self._recurring_started = True
-            self._push(self.now + self.cfg.heartbeat_s, "heartbeat")
-            self._push(self.now + self.cfg.watchdog_s, "watchdog")
-            self._push(self.now + self.autoscaler.cfg.tick_s, "autoscale")
-            if self.cfg.speculation:
-                self._push(self.now + self.cfg.spec_check_s, "spec_check")
+    # -- continuous operation: the fabric drives the engine incrementally ----
+    _RECURRING = {"heartbeat": "heartbeat_s", "watchdog": "watchdog_s",
+                  "spec_check": "spec_check_s"}
+
+    def _arm(self, kind: str) -> None:
+        """Schedule one recurring timer event unless already in-flight."""
+        if kind in self._armed:
+            return
+        if kind == "autoscale":
+            period = self.autoscaler.cfg.tick_s
+        else:
+            period = getattr(self.cfg, self._RECURRING[kind])
+        self._armed.add(kind)
+        self._push(self.now + period, kind)
+
+    def _arm_recurring(self) -> None:
+        self._arm("heartbeat")
+        self._arm("watchdog")
+        self._arm("autoscale")
+        if self.cfg.speculation:
+            self._arm("spec_check")
+
+    @property
+    def idle(self) -> bool:
+        """True when no admitted workflow still has outstanding work AND no
+        batch is mid-flight — a cancellation can zero out ``_unfinished``
+        while a worker is still executing, and that run must still be
+        drained (its result published, its usage billed)."""
+        return (self._unfinished == 0 and self.now >= self._arrival_horizon
+                and self._inflight_batches == 0)
+
+    def step(self, until: float | None = None) -> bool:
+        """Process exactly one event in virtual time.
+
+        Returns False (and leaves the event queue untouched) when there is
+        nothing to process — no events, the next event lies beyond
+        ``until``, or pending work has made no progress for longer than the
+        stall limit (starvation: work no lane can ever serve). This is the
+        primitive the FabricService pumps: workflows can be submitted,
+        cancelled, and queried between any two steps.
+        """
+        if not self._events:
+            return False
+        ev = self._events[0]
+        if until is not None and ev.time > until:
+            return False
+        if (self._unfinished and
+                ev.time - self._last_progress > self.cfg.stall_limit_s):
+            self.stalled = True
+            return False
+        heapq.heappop(self._events)
+        self.now = max(self.now, ev.time)
+        if ev.kind in self._RECURRING or ev.kind == "autoscale":
+            self._armed.discard(ev.kind)
+        getattr(self, f"_on_{ev.kind}")(ev.payload)
+        return True
+
+    def run_until_idle(self, until: float | None = None) -> Telemetry:
+        """Drive the engine until all admitted work is done (or ``until``).
+
+        Unlike the batch-era ``run()``-then-exit loop, this leaves the engine
+        live: new submissions re-arm the recurring timers and a subsequent
+        ``run_until_idle()``/``step()`` picks up exactly where time stopped.
+        """
+        self._arm_recurring()
         while self._events:
-            if self._unfinished == 0 and self.now >= self._arrival_horizon:
+            if self.idle:
                 break
-            ev = heapq.heappop(self._events)
-            if until is not None and ev.time > until:
+            if not self.step(until):
                 break
-            self.now = ev.time
-            if (self._unfinished and
-                    self.now - self._last_progress > self.cfg.stall_limit_s):
-                # starvation: pending work that no lane can ever serve
-                self.stalled = True
-                break
-            getattr(self, f"_on_{ev.kind}")(ev.payload)
         self._finalize()
         return self.telemetry
 
+    def run(self, until: float | None = None) -> Telemetry:
+        """Back-compat alias: batch callers submit everything then run."""
+        return self.run_until_idle(until)
+
+    def cancel(self, dag_id: str) -> bool:
+        """Cancel a workflow: detach its pending consumers; in-flight shared
+        groups keep running for their other consumers (isolation, §3)."""
+        dag = self.dags.get(dag_id)
+        if dag is None:
+            # not yet arrived: find the queued arrival event
+            for ev in self._events:
+                if ev.kind == "arrival" and ev.payload.dag_id == dag_id:
+                    dag = ev.payload
+                    break
+        if dag is None or dag.done or dag_id in self.cancelled:
+            return False
+        self.cancelled.add(dag_id)
+        self.pool.detach_dag(dag_id)
+        self._unfinished -= 1
+        self._last_progress = self.now
+        self.stalled = False       # real progress clears a prior starvation
+        return True
+
     # ------------------------------------------------------------ handlers --
     def _on_arrival(self, dag: WorkflowDAG) -> None:
+        if dag.dag_id in self.cancelled:
+            # cancelled before arrival processed; the suppression marker has
+            # served its purpose once the queued event is consumed
+            self.cancelled.discard(dag.dag_id)
+            return
         self.dags[dag.dag_id] = dag
         self._last_progress = self.now
+        self.stalled = False       # real progress clears a prior starvation
+        self._arm_recurring()            # service mode: timers may have lapsed
         self._refresh_and_offer(dag)
         self._schedule_dispatch()
 
@@ -153,7 +239,9 @@ class FlowMeshEngine:
             return
         w.state = WorkerState.ACTIVE
         w.idle_since = self.now
-        self._last_progress = self.now
+        # NOT progress: a fresh lease serves nothing by itself, and counting
+        # it would let an autoscaler leasing for starved (e.g. quota-held)
+        # work reset the stall guard forever
         self.autoscaler.pending_leases = max(0, self.autoscaler.pending_leases - 1)
         self._schedule_dispatch()
 
@@ -163,7 +251,7 @@ class FlowMeshEngine:
                     not getattr(w, "crashed", False):
                 w.last_heartbeat = self.now
         if self._unfinished:
-            self._push(self.now + self.cfg.heartbeat_s, "heartbeat")
+            self._arm("heartbeat")
 
     def _on_crash(self, which) -> None:
         w = None
@@ -190,7 +278,7 @@ class FlowMeshEngine:
             if self.now - w.last_heartbeat >= self.cfg.watchdog_s:
                 self._fail_worker(w)
         if self._unfinished:
-            self._push(self.now + self.cfg.watchdog_s, "watchdog")
+            self._arm("watchdog")
         self._schedule_dispatch()
 
     def _fail_worker(self, w: Worker) -> None:
@@ -209,14 +297,28 @@ class FlowMeshEngine:
             for g in b.groups:
                 g.running_on.discard(w.worker_id)
                 if not g.done and not g.running_on:
-                    self.pool.requeue(g)
-                    requeued += 1
+                    if self.admission:
+                        self.admission.note_requeue(g)
+                    if g.consumers:
+                        self.pool.requeue(g)
+                        requeued += 1
+                    else:
+                        # every consumer cancelled mid-flight: abandon the
+                        # ghost instead of requeueing work nobody wants
+                        self.pool.finish(g)
         self.telemetry.retries += requeued
         self.backend.terminate(w.worker_id, self.now)
 
     def _on_autoscale(self, _=None) -> None:
         pending = self.pool.pending_by_exec()
-        oldest = self.pool.oldest_wait
+        if self.admission and pending:
+            # scale for dispatchable work only: quota-held operators must not
+            # drive lease-after-lease for capacity they may never use
+            pending = self.admission.filter_pending(pending, self.now,
+                                                    count_holds=False)
+        oldest = min((g.ready_at for gs in pending.values() for g in gs),
+                     default=float("inf")) if self.admission else \
+            self.pool.oldest_wait
         age = (self.now - oldest) if oldest != float("inf") else 0.0
         decision = self.autoscaler.decide(
             now=self.now, pending=pending, workers=self.workers.values(),
@@ -240,7 +342,7 @@ class FlowMeshEngine:
         self.telemetry.scaling_trace.append(
             (self.now, n_active, self.pool.depth))
         if self._unfinished:
-            self._push(self.now + self.autoscaler.cfg.tick_s, "autoscale")
+            self._arm("autoscale")
 
     def _on_spec_check(self, _=None) -> None:
         for g in self.pool.running_groups():
@@ -252,7 +354,7 @@ class FlowMeshEngine:
             if self.now - g.dispatch_at > self.cfg.spec_factor * med + 5.0:
                 self._launch_replica(g)
         if self._unfinished and self.cfg.speculation:
-            self._push(self.now + self.cfg.spec_check_s, "spec_check")
+            self._arm("spec_check")
 
     def _launch_replica(self, g: ExecutionGroup) -> None:
         cands = [w for w in self.workers.values()
@@ -285,6 +387,8 @@ class FlowMeshEngine:
             # instant completion from the result index (dedup across time)
             out = self.result_index[dag.h_task[op_name]]
             self.telemetry.dedup_savings += 1
+            if self.admission:
+                self.admission.note_deduped(dag.tenant, 1)
             dag.state[op_name] = OpState.COMPLETED
             dag.complete(op_name, out, executed=False, worker=None,
                          now=self.now)
@@ -296,6 +400,10 @@ class FlowMeshEngine:
             lat = dag.latency or 0.0
             self.telemetry.dag_latencies.append(lat)
             self.telemetry.dag_completions.append(self.now)
+            self.telemetry.tenant_latencies.setdefault(
+                dag.tenant, []).append(lat)
+            if self.admission:
+                self.admission.note_workflow_done(dag, self.now)
         else:
             self._refresh_and_offer(dag)
 
@@ -310,6 +418,10 @@ class FlowMeshEngine:
 
     def _try_dispatch(self) -> None:
         pending = self.pool.pending_by_exec()
+        if self.admission and pending:
+            # multi-tenant gate: quota holds + weighted fair-share ordering,
+            # applied at the ready-pool boundary before Eq. 1 scheduling
+            pending = self.admission.filter_pending(pending, self.now)
         if not pending:
             return
         active = [w for w in self.workers.values()
@@ -321,6 +433,8 @@ class FlowMeshEngine:
             for g in p.groups:
                 if g.dispatch_at is None:
                     self.telemetry.op_queue_waits.append(self.now - g.ready_at)
+                    if self.admission:
+                        self.admission.note_dispatch(g)
                 g.dispatch_at = self.now
                 g.running_on.add(p.worker.worker_id)
                 g.attempts += 1
@@ -350,11 +464,14 @@ class FlowMeshEngine:
         w.meter.note_active(dur)
         w.busy_until = self.now + dur
         self.telemetry.total_flops += result.flops
+        self._inflight_batches += 1
         self._push(w.busy_until, "batch_done", (w.worker_id, batch, result, dur))
 
     def _on_batch_done(self, payload) -> None:
         wid, batch, result, dur = payload
+        self._inflight_batches -= 1
         self._last_progress = self.now
+        self.stalled = False       # real progress clears a prior starvation
         w = self.workers.get(wid)
         if w is None or w.state is WorkerState.DEAD:
             return   # worker failed mid-flight; groups were requeued
@@ -372,8 +489,17 @@ class FlowMeshEngine:
                     actual = g.spec.params.get("actual_vram_gb")
                     if actual:
                         g.spec.params["min_vram_gb"] = float(actual)
-                if not g.done and not g.running_on and g.attempts < self.cfg.max_attempts:
-                    self.pool.requeue(g)
+                if not g.done and not g.running_on:
+                    if g.consumers and g.attempts < self.cfg.max_attempts:
+                        self.pool.requeue(g)
+                    else:
+                        # attempts exhausted, or cancelled out from under the
+                        # failure: abandon rather than retry for nobody
+                        self.pool.finish(g)
+                    if self.admission:
+                        # requeued or permanently dropped: either way the
+                        # group no longer occupies the tenant's in-flight cap
+                        self.admission.note_requeue(g)
             w.current = None
             self._start_next(w)
             self._schedule_dispatch()
@@ -393,17 +519,25 @@ class FlowMeshEngine:
             g.running_on.discard(wid)
             self.result_index[g.h_task] = key
             self.pool.finish(g)
+            if self.admission:
+                self.admission.note_executed(
+                    g, cost=dur * w.dev.price_hr / 3600.0
+                    / max(1, len(batch.groups)),
+                    duration=dur, now=self.now)
             savings = g.fanout - 1
             if savings > 0:
                 self.telemetry.dedup_savings += savings
             self.telemetry.op_service_times.append(dur)
-            touched = set()
+            # ordered dedup: refresh consumer DAGs in consumer order, not in
+            # set-hash order — dag ids are strings, and hash-ordered
+            # iteration would make the schedule depend on the process hash
+            # seed and on how many DAGs existed before this run
+            touched = dict.fromkeys(inst.dag_id for inst in g.consumers)
             for inst in g.consumers:
                 dag = self.dags[inst.dag_id]
                 dag.complete(inst.op_name, key,
                              executed=(inst is g.consumers[0]),
                              worker=wid, now=self.now)
-                touched.add(inst.dag_id)
             for d in touched:
                 self._after_complete(self.dags[d])
         w.current = None

@@ -172,7 +172,9 @@ class FlowMeshScheduler(SchedulerPolicy):
                     continue
                 spec = groups[0].spec
                 cap = self.max_batch(spec)
-                batch = sorted(groups, key=lambda g: g.ready_at)[:cap]
+                # pool order is FIFO by ready time; admission control may have
+                # reordered for fair share — the slice respects that order
+                batch = groups[:cap]
                 for w in admittable:
                     if slots[w.worker_id] <= 0 or not feasible(spec, w):
                         continue

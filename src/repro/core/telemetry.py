@@ -32,6 +32,8 @@ class Telemetry:
     total_flops: float = 0.0
     # autoscaler trace: (t, active_workers, pending_depth, arriving_rate)
     scaling_trace: list[tuple[float, int, int]] = field(default_factory=list)
+    # per-tenant workflow latencies (the fabric's usage API reads these)
+    tenant_latencies: dict[str, list[float]] = field(default_factory=dict)
 
     # ------------------------------------------------------------------
     @property
@@ -45,10 +47,7 @@ class Telemetry:
 
     @property
     def p95_latency(self) -> float:
-        if not self.dag_latencies:
-            return 0.0
-        xs = sorted(self.dag_latencies)
-        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+        return self.percentile(self.dag_latencies, 0.95)
 
     @property
     def avg_queue_wait(self) -> float:
@@ -69,6 +68,14 @@ class Telemetry:
 
     def throughput_per_min(self, horizon_s: float) -> float:
         return 60.0 * self.n_tasks / horizon_s if horizon_s > 0 else 0.0
+
+    @staticmethod
+    def percentile(xs: list[float], q: float) -> float:
+        """Nearest-rank percentile, q in [0, 1]."""
+        if not xs:
+            return 0.0
+        ys = sorted(xs)
+        return ys[min(len(ys) - 1, int(q * len(ys)))]
 
     def summary(self) -> dict:
         return {

@@ -30,6 +30,7 @@ class TaskInstance:
     """One (dag, operator) occurrence — the consumer-side unit."""
     dag_id: str
     op_name: str
+    tenant: str = "default"    # owning tenant (admission metering / fair share)
 
 
 @dataclass

@@ -2,6 +2,12 @@
 Group B (A + SFT/DPO/PPO post-training pipelines), with the paper's datasets
 (GSM8K / MMLU / TruthfulQA) represented as shared prompt pools.
 
+Every workflow is built as a *declarative spec document* and compiled through
+``repro.fabric.spec`` — the same validation/compilation path tenants use when
+they POST workflows to the FabricService. Named templates (rlhf, distill,
+agent-loop, batch-eval) cover the common shapes; the remaining topologies are
+inline documents.
+
 Cross-tenant overlap is the whole point: tenants iterate on variants of the
 same base models over overlapping data, so SFT stages and reward/eval passes
 collide by H_task (dedup) or by H_exec (batching) exactly as §2 describes.
@@ -12,19 +18,11 @@ import math
 import random
 from dataclasses import dataclass
 
-from .dag import OperatorSpec, OpType, Ref, WorkflowDAG
+from .dag import WorkflowDAG
 
 BASE_MODELS = ["llama-3.2-1b", "llama-3.2-3b", "llama-3.1-8b"]
 REWARD_MODELS = ["reward-1b", "reward-3b"]
 DATASETS = ["gsm8k", "mmlu", "truthfulqa"]
-
-
-def _rc(model_id: str, *, training: bool = False) -> str:
-    if training and model_id.endswith("8b"):
-        return "gpu.xlarge"
-    if model_id.endswith("8b") or training:
-        return "gpu.large" if training else "gpu.medium"
-    return "gpu.small"
 
 
 @dataclass
@@ -57,97 +55,110 @@ class WorkloadGen:
     def _mb(self) -> dict:
         return {"max_batch": self.cfg.max_batch}
 
+    def _compile(self, doc: dict, kind: str) -> WorkflowDAG:
+        # deferred import: core stays importable without the fabric service
+        # layer; by the time workloads are generated everything is loaded
+        from repro.fabric.spec import compile_spec
+        doc.setdefault("metadata", {})["kind"] = kind
+        return compile_spec(doc)
+
+    @staticmethod
+    def _template(name: str, **params) -> dict:
+        from repro.fabric.spec import render_template
+        return render_template(name, **params)
+
     # --------------------------- Group A topologies -----------------------
+    # NOTE: rng draws happen in the same order as the seed implementation
+    # (models, dataset, shard, ..., tenant last) so that a given seed
+    # reproduces the exact §5.1 workload trace the benchmarks were
+    # validated against.
     def reasoning_chain(self) -> WorkflowDAG:
         m = self.rng.choice(BASE_MODELS)
         d = self.rng.choice(DATASETS)
         shard = self._prompt_shard(d)
-        ops = [
-            OperatorSpec("plan", OpType.GENERATE, m, params=self._mb(),
-                         inputs=[shard], tokens_in=1024, tokens_out=768,
-                         resource_class=_rc(m)),
-            OperatorSpec("tool", OpType.TOOL, inputs=[Ref("plan")],
-                         resource_class="cpu"),
-            OperatorSpec("summarize", OpType.GENERATE, m, params=self._mb(),
-                         inputs=[Ref("tool"), shard], tokens_in=1536,
-                         tokens_out=768, resource_class=_rc(m)),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "reasoning_chain"})
+        doc = self._template("agent-loop", tenant=self._tenant(), model=m,
+                             shard=shard, rounds=1,
+                             max_batch=self.cfg.max_batch)
+        return self._compile(doc, "reasoning_chain")
 
     def rag(self) -> WorkflowDAG:
         m = self.rng.choice(BASE_MODELS)
         d = self.rng.choice(DATASETS)
         shard = self._prompt_shard(d)
-        ops = [
-            OperatorSpec("retrieve", OpType.TOOL, inputs=[shard],
-                         resource_class="cpu"),
-            OperatorSpec("generate", OpType.GENERATE, m, params=self._mb(),
-                         inputs=[Ref("retrieve")], tokens_in=2048,
-                         tokens_out=768, resource_class=_rc(m)),
-            OperatorSpec("judge", OpType.SCORE,
-                         self.rng.choice(REWARD_MODELS), params=self._mb(),
-                         inputs=[Ref("generate")], tokens_in=1024,
-                         tokens_out=8, resource_class="gpu.small"),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(), metadata={"kind": "rag"})
+        rm = self.rng.choice(REWARD_MODELS)
+        doc = {
+            "tenant": self._tenant(),
+            "ops": [
+                {"name": "retrieve", "op_type": "tool", "inputs": [shard],
+                 "resource_class": "cpu"},
+                {"name": "generate", "op_type": "generate", "model_id": m,
+                 "params": self._mb(), "inputs": ["@retrieve"],
+                 "tokens_in": 2048, "tokens_out": 768},
+                {"name": "judge", "op_type": "score", "model_id": rm,
+                 "params": self._mb(), "inputs": ["@generate"],
+                 "tokens_in": 1024, "tokens_out": 8,
+                 "resource_class": "gpu.small"},
+            ],
+        }
+        return self._compile(doc, "rag")
 
     def multi_agent(self) -> WorkflowDAG:
         m1, m2 = self.rng.sample(BASE_MODELS, 2)
-        d = self.rng.choice(DATASETS)
-        shard = self._prompt_shard(d)
-        ops = [
-            OperatorSpec("agent_a", OpType.GENERATE, m1, params=self._mb(),
-                         inputs=[shard], tokens_in=1024, tokens_out=1024,
-                         resource_class=_rc(m1)),
-            OperatorSpec("agent_b", OpType.GENERATE, m2, params=self._mb(),
-                         inputs=[shard], tokens_in=1024, tokens_out=1024,
-                         resource_class=_rc(m2)),
-            OperatorSpec("merge", OpType.AGGREGATE,
-                         inputs=[Ref("agent_a"), Ref("agent_b")],
-                         resource_class="cpu"),
-            OperatorSpec("final", OpType.GENERATE, m1, params=self._mb(),
-                         inputs=[Ref("merge")], tokens_in=2048,
-                         tokens_out=768, resource_class=_rc(m1)),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "multi_agent"})
+        shard = self._prompt_shard(self.rng.choice(DATASETS))
+        doc = {
+            "tenant": self._tenant(),
+            "ops": [
+                {"name": "agent_a", "op_type": "generate", "model_id": m1,
+                 "params": self._mb(), "inputs": [shard],
+                 "tokens_in": 1024, "tokens_out": 1024},
+                {"name": "agent_b", "op_type": "generate", "model_id": m2,
+                 "params": self._mb(), "inputs": [shard],
+                 "tokens_in": 1024, "tokens_out": 1024},
+                {"name": "merge", "op_type": "aggregate",
+                 "inputs": ["@agent_a", "@agent_b"], "resource_class": "cpu"},
+                {"name": "final", "op_type": "generate", "model_id": m1,
+                 "params": self._mb(), "inputs": ["@merge"],
+                 "tokens_in": 2048, "tokens_out": 768},
+            ],
+        }
+        return self._compile(doc, "multi_agent")
 
     def reflection(self) -> WorkflowDAG:
         m = self.rng.choice(BASE_MODELS)
         rm = self.rng.choice(REWARD_MODELS)
         shard = self._prompt_shard(self.rng.choice(DATASETS))
-        ops = [
-            OperatorSpec("draft", OpType.GENERATE, m, params=self._mb(),
-                         inputs=[shard], tokens_in=1024, tokens_out=1024,
-                         resource_class=_rc(m)),
-            OperatorSpec("critique", OpType.SCORE, rm, params=self._mb(),
-                         inputs=[Ref("draft")], tokens_in=896, tokens_out=64,
-                         resource_class="gpu.small"),
-            OperatorSpec("revise", OpType.GENERATE, m, params=self._mb(),
-                         inputs=[Ref("draft"), Ref("critique")],
-                         tokens_in=1024, tokens_out=384,
-                         resource_class=_rc(m)),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "reflection"})
+        doc = {
+            "tenant": self._tenant(),
+            "ops": [
+                {"name": "draft", "op_type": "generate", "model_id": m,
+                 "params": self._mb(), "inputs": [shard],
+                 "tokens_in": 1024, "tokens_out": 1024},
+                {"name": "critique", "op_type": "score", "model_id": rm,
+                 "params": self._mb(), "inputs": ["@draft"],
+                 "tokens_in": 896, "tokens_out": 64,
+                 "resource_class": "gpu.small"},
+                {"name": "revise", "op_type": "generate", "model_id": m,
+                 "params": self._mb(), "inputs": ["@draft", "@critique"],
+                 "tokens_in": 1024, "tokens_out": 384},
+            ],
+        }
+        return self._compile(doc, "reflection")
 
     def map_reduce(self) -> WorkflowDAG:
         m = self.rng.choice(BASE_MODELS)
-        d = self.rng.choice(DATASETS)
-        ops = [OperatorSpec("prep", OpType.DATA_PREP,
-                            inputs=[self._prompt_shard(d)],
-                            resource_class="cpu")]
+        ops = [{"name": "prep", "op_type": "data_prep",
+                "inputs": [self._prompt_shard(self.rng.choice(DATASETS))],
+                "resource_class": "cpu"}]
         for i in range(3):
-            ops.append(OperatorSpec(
-                f"map_{i}", OpType.GENERATE, m, params=self._mb(),
-                inputs=[Ref("prep"), f"slice-{i}"], tokens_in=1280,
-                tokens_out=768, resource_class=_rc(m)))
-        ops.append(OperatorSpec(
-            "reduce", OpType.AGGREGATE,
-            inputs=[Ref(f"map_{i}") for i in range(3)], resource_class="cpu"))
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "map_reduce"})
+            ops.append({"name": f"map_{i}", "op_type": "generate",
+                        "model_id": m, "params": self._mb(),
+                        "inputs": ["@prep", f"slice-{i}"],
+                        "tokens_in": 1280, "tokens_out": 768})
+        ops.append({"name": "reduce", "op_type": "aggregate",
+                    "inputs": [f"@map_{i}" for i in range(3)],
+                    "resource_class": "cpu"})
+        return self._compile({"tenant": self._tenant(), "ops": ops},
+                             "map_reduce")
 
     GROUP_A = ("reasoning_chain", "rag", "multi_agent", "reflection",
                "map_reduce")
@@ -161,76 +172,76 @@ class WorkloadGen:
         d = self.rng.choice(DATASETS)
         shard = self._prompt_shard(d)
         lora = self.rng.random() < 0.6
-        ops = [
-            OperatorSpec("prep", OpType.DATA_PREP, inputs=[shard],
-                         resource_class="cpu"),
-            # tenants fine-tuning the same base on the same shard collide here
-            OperatorSpec("sft", OpType.SFT, m,
-                         params={"lora": lora, "lr": 1e-5, "epochs": 1,
-                                 "max_batch": 12},
-                         inputs=[Ref("prep")], train_tokens=6_000_000,
-                         resource_class=_rc(m, training=True)),
-            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
-                         inputs=[Ref("sft"), f"{d}/holdout"],
-                         tokens_in=2048, tokens_out=128,
-                         resource_class=_rc(m)),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "sft"})
+        doc = {
+            "tenant": self._tenant(),
+            "ops": [
+                {"name": "prep", "op_type": "data_prep", "inputs": [shard],
+                 "resource_class": "cpu"},
+                # tenants fine-tuning the same base on the same shard collide
+                {"name": "sft", "op_type": "sft", "model_id": m,
+                 "params": {"lora": lora, "lr": 1e-5, "epochs": 1,
+                            "max_batch": 12},
+                 "inputs": ["@prep"], "train_tokens": 6_000_000},
+                {"name": "eval", "op_type": "eval", "model_id": m,
+                 "params": {"max_batch": 12},
+                 "inputs": ["@sft", f"{d}/holdout"],
+                 "tokens_in": 2048, "tokens_out": 128},
+            ],
+        }
+        return self._compile(doc, "sft")
 
     def dpo_pipeline(self) -> WorkflowDAG:
         m = self.rng.choice(BASE_MODELS)
         d = self.rng.choice(DATASETS)
         shard = self._prompt_shard(d)
-        ops = [
-            OperatorSpec("prep", OpType.DATA_PREP, inputs=[shard],
-                         resource_class="cpu"),
-            OperatorSpec("pairs", OpType.GENERATE, m,
-                         params={"max_batch": 12}, inputs=[Ref("prep")],
-                         tokens_in=1024, tokens_out=1536,
-                         resource_class=_rc(m)),
-            OperatorSpec("dpo", OpType.DPO, m,
-                         params={"beta": 0.1, "lr": 5e-6, "max_batch": 12},
-                         inputs=[Ref("pairs")], train_tokens=4_000_000,
-                         resource_class=_rc(m, training=True)),
-            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
-                         inputs=[Ref("dpo"), f"{d}/holdout"],
-                         tokens_in=2048, tokens_out=128,
-                         resource_class=_rc(m)),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "dpo"})
+        doc = {
+            "tenant": self._tenant(),
+            "ops": [
+                {"name": "prep", "op_type": "data_prep", "inputs": [shard],
+                 "resource_class": "cpu"},
+                {"name": "pairs", "op_type": "generate", "model_id": m,
+                 "params": {"max_batch": 12}, "inputs": ["@prep"],
+                 "tokens_in": 1024, "tokens_out": 1536},
+                {"name": "dpo", "op_type": "dpo", "model_id": m,
+                 "params": {"beta": 0.1, "lr": 5e-6, "max_batch": 12},
+                 "inputs": ["@pairs"], "train_tokens": 4_000_000},
+                {"name": "eval", "op_type": "eval", "model_id": m,
+                 "params": {"max_batch": 12},
+                 "inputs": ["@dpo", f"{d}/holdout"],
+                 "tokens_in": 2048, "tokens_out": 128},
+            ],
+        }
+        return self._compile(doc, "dpo")
 
     def ppo_pipeline(self) -> WorkflowDAG:
         m = self.rng.choice(BASE_MODELS)
         rm = self.rng.choice(REWARD_MODELS)
         d = self.rng.choice(DATASETS)
         shard = self._prompt_shard(d)
-        ops = [
-            OperatorSpec("rollout", OpType.GENERATE, m,
-                         params={"max_batch": 12}, inputs=[shard],
-                         tokens_in=1024, tokens_out=1536,
-                         resource_class=_rc(m)),
-            # reward inference over overlapping batches: prime dedup target
-            OperatorSpec("reward", OpType.SCORE, rm,
-                         params={"max_batch": 12}, inputs=[Ref("rollout")],
-                         tokens_in=1024, tokens_out=8,
-                         resource_class="gpu.small"),
-            OperatorSpec("collect", OpType.AGGREGATE,
-                         inputs=[Ref("rollout"), Ref("reward")],
-                         resource_class="cpu"),
-            OperatorSpec("ppo", OpType.PPO, m,
-                         params={"clip": 0.2, "lr": 1e-6, "max_batch": 12},
-                         inputs=[Ref("collect")], train_tokens=2_400_000,
-                         tokens_in=512, tokens_out=128,
-                         resource_class=_rc(m, training=True)),
-            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
-                         inputs=[Ref("ppo"), f"{d}/holdout"],
-                         tokens_in=2048, tokens_out=128,
-                         resource_class=_rc(m)),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "ppo"})
+        doc = {
+            "tenant": self._tenant(),
+            "ops": [
+                {"name": "rollout", "op_type": "generate", "model_id": m,
+                 "params": {"max_batch": 12}, "inputs": [shard],
+                 "tokens_in": 1024, "tokens_out": 1536},
+                # reward inference over overlapping batches: prime dedup target
+                {"name": "reward", "op_type": "score", "model_id": rm,
+                 "params": {"max_batch": 12}, "inputs": ["@rollout"],
+                 "tokens_in": 1024, "tokens_out": 8,
+                 "resource_class": "gpu.small"},
+                {"name": "collect", "op_type": "aggregate",
+                 "inputs": ["@rollout", "@reward"], "resource_class": "cpu"},
+                {"name": "ppo", "op_type": "ppo", "model_id": m,
+                 "params": {"clip": 0.2, "lr": 1e-6, "max_batch": 12},
+                 "inputs": ["@collect"], "train_tokens": 2_400_000,
+                 "tokens_in": 512, "tokens_out": 128},
+                {"name": "eval", "op_type": "eval", "model_id": m,
+                 "params": {"max_batch": 12},
+                 "inputs": ["@ppo", f"{d}/holdout"],
+                 "tokens_in": 2048, "tokens_out": 128},
+            ],
+        }
+        return self._compile(doc, "ppo")
 
     def rlhf_full(self) -> WorkflowDAG:
         """SFT -> rollout -> reward -> PPO -> eval (Fig. 2's full loop)."""
@@ -238,34 +249,32 @@ class WorkloadGen:
         rm = self.rng.choice(REWARD_MODELS)
         d = self.rng.choice(DATASETS)
         shard = self._prompt_shard(d)
-        ops = [
-            OperatorSpec("prep", OpType.DATA_PREP, inputs=[shard],
-                         resource_class="cpu"),
-            OperatorSpec("sft", OpType.SFT, m,
-                         params={"lora": True, "lr": 1e-5, "max_batch": 12},
-                         inputs=[Ref("prep")], train_tokens=6_000_000,
-                         resource_class=_rc(m, training=True)),
-            OperatorSpec("rollout", OpType.GENERATE, m,
-                         params={"max_batch": 12},
-                         inputs=[Ref("sft"), shard], tokens_in=512,
-                         tokens_out=512, resource_class=_rc(m)),
-            OperatorSpec("reward", OpType.SCORE, rm,
-                         params={"max_batch": 12}, inputs=[Ref("rollout")],
-                         tokens_in=1024, tokens_out=8,
-                         resource_class="gpu.small"),
-            OperatorSpec("ppo", OpType.PPO, m,
-                         params={"clip": 0.2, "lr": 1e-6, "max_batch": 12},
-                         inputs=[Ref("rollout"), Ref("reward")],
-                         train_tokens=2_400_000, tokens_in=512, tokens_out=128,
-                         resource_class=_rc(m, training=True)),
-            OperatorSpec("eval", OpType.EVAL, m, params={"max_batch": 12},
-                         inputs=[Ref("ppo"), f"{d}/holdout"],
-                         tokens_in=2048, tokens_out=128,
-                         resource_class=_rc(m)),
-        ]
-        return WorkflowDAG(ops, tenant=self._tenant(),
-                           metadata={"kind": "rlhf"})
+        doc = self._template("rlhf", tenant=self._tenant(), model=m,
+                             reward_model=rm, shard=shard,
+                             holdout=f"{d}/holdout")
+        return self._compile(doc, "rlhf")
 
+    def distill_pipeline(self) -> WorkflowDAG:
+        d = self.rng.choice(DATASETS)
+        doc = self._template(
+            "distill", tenant=self._tenant(),
+            teacher="llama-3.1-8b",
+            student=self.rng.choice(BASE_MODELS[:2]),
+            shard=self._prompt_shard(d), holdout=f"{d}/holdout")
+        return self._compile(doc, "distill")
+
+    def batch_eval(self) -> WorkflowDAG:
+        d = self.rng.choice(DATASETS)
+        doc = self._template(
+            "batch-eval", tenant=self._tenant(),
+            model=self.rng.choice(BASE_MODELS),
+            shards=[self._prompt_shard(d) for _ in range(3)],
+            max_batch=self.cfg.max_batch)
+        return self._compile(doc, "batch_eval")
+
+    #: the paper's Group B mix (§5.1) — distill_pipeline / batch_eval are
+    #: extra fabric-template builders, deliberately NOT in the sampler so a
+    #: given seed reproduces the exact workload trace the benchmarks report
     GROUP_B_EXTRA = ("sft_pipeline", "dpo_pipeline", "ppo_pipeline",
                      "rlhf_full")
 

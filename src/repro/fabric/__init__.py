@@ -1,0 +1,20 @@
+"""FlowMesh fabric: the tenant-facing service layer.
+
+``spec``       — declarative workflow documents + named templates
+``admission``  — per-tenant quotas, fair share, usage metering
+``service``    — the long-lived FabricService wrapping one live engine
+``api``        — in-process request/response handler table (HTTP-shaped)
+"""
+from .admission import (AdmissionController, QuotaExceeded, TenantQuota,
+                        TenantUsage)
+from .api import FabricAPI
+from .service import FabricService, JobStatus
+from .spec import (SpecError, compile_spec, default_resource_class,
+                   list_templates, render_template, validate_spec)
+
+__all__ = [
+    "AdmissionController", "QuotaExceeded", "TenantQuota", "TenantUsage",
+    "FabricAPI", "FabricService", "JobStatus",
+    "SpecError", "compile_spec", "default_resource_class",
+    "list_templates", "render_template", "validate_spec",
+]

@@ -1,0 +1,249 @@
+"""Multi-tenant admission control at the ready-pool boundary.
+
+Two mechanisms, both applied *before* Eq. 1 scheduling ever sees an operator:
+
+  * **quotas** — per-tenant caps: ``max_active_workflows`` and a GPU-dollar
+    budget gate new submissions (hard reject, HTTP 429 at the API layer);
+    ``max_inflight_ops`` holds a tenant's ready operators in the pool once
+    too many of their ops are already running (work is delayed, not lost).
+  * **weighted fair share** — within each compatible set S(H_exec), ready
+    groups are reordered by the owning tenant's virtual time
+    (charged spend / weight), so a light tenant is not starved behind a
+    heavy tenant's backlog (LLM-Mesh-style elastic sharing).
+
+The controller also meters per-tenant usage: ops run vs. deduped, dollar
+spend (cost of executed batches split across every consumer tenant — shared
+work is shared cost), and workflow latency percentiles.
+
+The engine stays tenant-agnostic: it calls the five ``note_*``/``filter_*``
+hooks when an admission controller is installed, and never reads quotas.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+
+from repro.core.worker import ExecutionGroup
+from repro.core.dag import WorkflowDAG
+
+
+@dataclass
+class TenantQuota:
+    """Per-tenant limits; ``None`` means unlimited."""
+    max_inflight_ops: int | None = None      # dispatch-time hold
+    max_active_workflows: int | None = None  # submission-time reject
+    budget_usd: float | None = None          # submission-time reject
+    weight: float = 1.0                      # fair-share weight
+
+
+@dataclass
+class TenantUsage:
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    cancelled: int = 0
+    active_workflows: int = 0
+    ops_executed: int = 0        # this tenant's instance ran the computation
+    ops_deduped: int = 0         # satisfied by another tenant's run / cache
+    inflight_ops: int = 0        # dispatched, not yet finished
+    held_ops: int = 0            # cumulative quota holds at the pool boundary
+    spend_usd: float = 0.0       # charged share of executed batch cost
+    gpu_seconds: float = 0.0     # charged share of executed batch time
+    vtime: float = 0.0           # weighted virtual time (fair-share clock)
+
+
+class QuotaExceeded(Exception):
+    def __init__(self, tenant: str, reason: str) -> None:
+        self.tenant = tenant
+        self.reason = reason
+        super().__init__(f"tenant {tenant!r}: {reason}")
+
+
+class AdmissionController:
+    def __init__(self, default_quota: TenantQuota | None = None) -> None:
+        self.default_quota = default_quota or TenantQuota()
+        self.quotas: dict[str, TenantQuota] = {}
+        self.usage: dict[str, TenantUsage] = defaultdict(TenantUsage)
+        #: groups we incremented inflight for -> tenants charged, keyed by
+        #: object id (entry removed on completion/requeue, so ids never stale)
+        self._counted: dict[int, list[str]] = {}
+        #: monotone fair-share clock floor (survives idle windows)
+        self._vtime_floor = 0.0
+
+    def set_quota(self, tenant: str, quota: TenantQuota) -> None:
+        self.quotas[tenant] = quota
+
+    def quota(self, tenant: str) -> TenantQuota:
+        return self.quotas.get(tenant, self.default_quota)
+
+    # ---------------------------------------------------- submission gate --
+    def admit_workflow(self, dag: WorkflowDAG) -> None:
+        """Raise ``QuotaExceeded`` if the tenant may not submit right now."""
+        q, u = self.quota(dag.tenant), self.usage[dag.tenant]
+        if (q.max_active_workflows is not None
+                and u.active_workflows >= q.max_active_workflows):
+            u.rejected += 1
+            raise QuotaExceeded(
+                dag.tenant, f"max_active_workflows={q.max_active_workflows} "
+                f"reached ({u.active_workflows} active)")
+        if q.budget_usd is not None and u.spend_usd >= q.budget_usd:
+            u.rejected += 1
+            raise QuotaExceeded(
+                dag.tenant, f"budget exhausted "
+                f"(${u.spend_usd:.4f} of ${q.budget_usd:.4f})")
+        if u.active_workflows == 0:
+            # WFQ start-time rule: a joining (or returning) tenant enters at
+            # the system virtual time, not at zero — otherwise a newcomer
+            # outranks every incumbent until it has matched their lifetime
+            # spend, starving them for the whole catch-up period
+            u.vtime = max(u.vtime, self._system_vtime())
+        u.submitted += 1
+        u.active_workflows += 1
+
+    def note_workflow_done(self, dag: WorkflowDAG, now: float) -> None:
+        u = self.usage[dag.tenant]
+        u.active_workflows = max(0, u.active_workflows - 1)
+        u.completed += 1
+
+    def note_workflow_cancelled(self, dag: WorkflowDAG) -> None:
+        u = self.usage[dag.tenant]
+        u.active_workflows = max(0, u.active_workflows - 1)
+        u.cancelled += 1
+
+    # ------------------------------------------------ ready-pool boundary --
+    def _vtime(self, tenant: str) -> float:
+        """Weighted virtual time: service consumed per unit of entitlement
+        since the tenant joined. Smaller -> scheduled sooner."""
+        return self.usage[tenant].vtime
+
+    def _system_vtime(self) -> float:
+        """The fair-share clock: the least-served active tenant's vtime,
+        with a monotone floor so the clock survives idle windows — a tenant
+        joining while everyone happens to be idle must not enter at zero and
+        outrank every returning incumbent."""
+        active = [u.vtime for u in self.usage.values()
+                  if u.active_workflows > 0 or u.inflight_ops > 0]
+        if active:
+            self._vtime_floor = max(self._vtime_floor, min(active))
+        return self._vtime_floor
+
+    def filter_pending(self, pending: dict[str, list[ExecutionGroup]],
+                       now: float, *, count_holds: bool = True,
+                       ) -> dict[str, list[ExecutionGroup]]:
+        """Quota holds + fair-share reorder, per compatible set.
+
+        Each tenant may expose at most ``max_inflight_ops - inflight`` groups
+        to the scheduler per round (headroom is consumed as groups become
+        visible, so one round cannot overshoot the cap). A shared group is
+        held only when *every* consumer tenant is out of headroom — shared
+        work proceeds as long as one consumer can pay for it (holding it
+        would punish the under-cap tenant for sharing).
+        """
+        tenants_of = {id(g): {c.tenant for c in g.consumers}
+                      for groups in pending.values() for g in groups}
+        vtime = {t: self._vtime(t)
+                 for ts in tenants_of.values() for t in ts}
+        headroom: dict[str, int | None] = {}     # None => unlimited
+        for t in vtime:
+            cap = self.quota(t).max_inflight_ops
+            headroom[t] = (None if cap is None
+                           else max(0, cap - self.usage[t].inflight_ops))
+        out: dict[str, list[ExecutionGroup]] = {}
+        for h_exec, groups in pending.items():
+            ordered = sorted(groups, key=lambda g: (
+                min((vtime[c.tenant] for c in g.consumers), default=0.0),
+                g.ready_at))
+            visible: list[ExecutionGroup] = []
+            for g in ordered:
+                ts = tenants_of[id(g)]
+                if ts and all(headroom[t] == 0 for t in ts):
+                    if count_holds:      # autoscaler peeks without metering
+                        for t in ts:
+                            self.usage[t].held_ops += 1
+                    continue
+                visible.append(g)
+                for t in ts:
+                    if headroom[t] is not None:
+                        headroom[t] = max(0, headroom[t] - 1)
+            if visible:
+                out[h_exec] = visible
+        return out
+
+    # ------------------------------------------------------ engine events --
+    def note_dispatch(self, g: ExecutionGroup) -> None:
+        # one physical op per group: count each tenant once, no matter how
+        # many of their workflow instances dedup onto it — this mirrors the
+        # per-group headroom charge in filter_pending, so one dispatch round
+        # cannot overshoot max_inflight_ops
+        tenants = sorted({c.tenant for c in g.consumers})
+        for t in tenants:
+            self.usage[t].inflight_ops += 1
+        self._counted[id(g)] = tenants
+
+    def _uncount(self, g: ExecutionGroup) -> None:
+        for t in self._counted.pop(id(g), ()):
+            self.usage[t].inflight_ops = max(
+                0, self.usage[t].inflight_ops - 1)
+
+    def note_requeue(self, g: ExecutionGroup) -> None:
+        self._uncount(g)
+
+    def note_executed(self, g: ExecutionGroup, *, cost: float,
+                      duration: float, now: float) -> None:
+        """One batched execution finished for this group: credit the first
+        consumer with the run, every later consumer with a dedup save, and
+        split the cost across all consumer instances (shared work, shared
+        bill). If every consumer was detached by cancellation mid-flight,
+        the work still ran on their behalf — bill the tenants recorded at
+        dispatch, or submit-and-cancel would burn GPU time for free."""
+        dispatched_for = self._counted.pop(id(g), [])
+        for t in dispatched_for:
+            self.usage[t].inflight_ops = max(
+                0, self.usage[t].inflight_ops - 1)
+        tenants = [c.tenant for c in g.consumers] or list(dispatched_for)
+        if not tenants:
+            return
+        share = cost / len(tenants)
+        t_share = duration / len(tenants)
+        for i, t in enumerate(tenants):
+            u = self.usage[t]
+            if i == 0:
+                u.ops_executed += 1
+            else:
+                u.ops_deduped += 1
+            u.spend_usd += share
+            u.gpu_seconds += t_share
+            # epsilon keeps zero-cost (CPU) ops from being free under fair
+            # share; weight scales how fast the tenant's clock advances
+            u.vtime += (share + 1e-6) / max(self.quota(t).weight, 1e-9)
+        # refresh the monotone fair-share floor while service is observable
+        self._system_vtime()
+
+    def note_deduped(self, tenant: str, n: int = 1) -> None:
+        """Ops satisfied instantly from the result index (dedup across time)."""
+        self.usage[tenant].ops_deduped += n
+
+    # ----------------------------------------------------------- reporting --
+    def usage_snapshot(self, tenant: str) -> dict:
+        # read-only: must not insert into the defaultdict, or arbitrary ids
+        # queried through the usage API would grow controller state forever
+        q = self.quota(tenant)
+        u = self.usage.get(tenant) or TenantUsage()
+        return {
+            "tenant": tenant,
+            "workflows": {
+                "submitted": u.submitted, "completed": u.completed,
+                "rejected": u.rejected, "cancelled": u.cancelled,
+                "active": u.active_workflows,
+            },
+            "ops": {
+                "executed": u.ops_executed, "deduped": u.ops_deduped,
+                "inflight": u.inflight_ops, "held": u.held_ops,
+            },
+            "spend": {
+                "usd": round(u.spend_usd, 6),
+                "gpu_seconds": round(u.gpu_seconds, 3),
+                "budget_usd": q.budget_usd,
+            },
+            "fair_share": {"weight": q.weight, "vtime": round(u.vtime, 9)},
+        }

@@ -1,0 +1,168 @@
+"""In-process request/response API over the FabricService.
+
+A single handler table maps ``(METHOD, /path/{param}/...)`` routes onto
+service calls, so examples, benchmarks, the CLI, and tests all drive the
+fabric through one interface — and a future HTTP shim only has to translate
+sockets into ``handle()`` calls. Payloads are JSON-shaped plain dicts.
+
+Routes:
+
+    POST /workflows                  {"spec": {...}} | {"template": name,
+                                      "params": {...}}
+    GET  /workflows/templates
+    GET  /jobs                       ?tenant=<id>
+    GET  /jobs/{id}
+    GET  /jobs/{id}/lineage
+    POST /jobs/{id}/cancel
+    GET  /tenants/{id}/usage
+    GET  /health
+    POST /pump                       {"max_steps": n?, "until": t?}
+    POST /drain                      {"until": t?}   (run_until_idle)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+from urllib.parse import parse_qsl, urlsplit
+
+from .service import FabricService
+from .spec import SpecError, list_templates
+
+
+class FabricAPI:
+    def __init__(self, service: FabricService) -> None:
+        self.service = service
+        #: (METHOD, pattern) -> handler(params, query, body)
+        self.routes: list[tuple[str, tuple[str, ...], Callable]] = [
+            ("POST", ("workflows",), self._post_workflow),
+            ("GET", ("workflows", "templates"), self._get_templates),
+            ("GET", ("jobs",), self._list_jobs),
+            ("GET", ("jobs", "{id}"), self._get_job),
+            ("GET", ("jobs", "{id}", "lineage"), self._get_lineage),
+            ("POST", ("jobs", "{id}", "cancel"), self._cancel_job),
+            ("GET", ("tenants", "{id}", "usage"), self._get_usage),
+            ("GET", ("health",), self._get_health),
+            ("POST", ("pump",), self._pump),
+            ("POST", ("drain",), self._drain),
+        ]
+
+    # ------------------------------------------------------------ routing --
+    @staticmethod
+    def _match(pattern: tuple[str, ...], parts: tuple[str, ...],
+               ) -> dict[str, str] | None:
+        if len(pattern) != len(parts):
+            return None
+        params: dict[str, str] = {}
+        for pat, part in zip(pattern, parts):
+            if pat.startswith("{") and pat.endswith("}"):
+                params[pat[1:-1]] = part
+            elif pat != part:
+                return None
+        return params
+
+    def handle(self, method: str, path: str,
+               body: dict | None = None) -> tuple[int, Any]:
+        """Dispatch one request; returns ``(status_code, payload)``."""
+        if body is not None and not isinstance(body, dict):
+            return 400, {"error": "invalid_body",
+                         "detail": ["request body must be an object"]}
+        url = urlsplit(path)
+        parts = tuple(p for p in url.path.split("/") if p)
+        query = dict(parse_qsl(url.query))
+        method = method.upper()
+        matched_path = False
+        for m, pattern, handler in self.routes:
+            params = self._match(pattern, parts)
+            if params is None:
+                continue
+            matched_path = True
+            if m != method:
+                continue
+            try:
+                return handler(params, query, body or {})
+            except SpecError as e:
+                return 400, {"error": "invalid_spec", "detail": e.errors}
+        if matched_path:
+            return 405, {"error": "method_not_allowed"}
+        return 404, {"error": "no_such_route", "path": path}
+
+    # ----------------------------------------------------------- handlers --
+    def _post_workflow(self, params, query, body) -> tuple[int, Any]:
+        if "template" in body:
+            tpl_params = body.get("params", {})
+            if not isinstance(tpl_params, dict):
+                return 400, {"error": "invalid_template_params",
+                             "detail": ["'params' must be an object"]}
+            try:
+                job = self.service.submit_template(body["template"],
+                                                   **tpl_params)
+            except SpecError:
+                raise                  # handled by the dispatcher -> 400
+            except (TypeError, ValueError) as e:
+                # tenant-supplied params that the template rejects (unknown
+                # keyword, wrong type) are a client error, not a crash
+                return 400, {"error": "invalid_template_params",
+                             "detail": [str(e)]}
+        elif "spec" in body:
+            job = self.service.submit(body["spec"])
+        else:
+            return 400, {"error": "body_requires_spec_or_template"}
+        if job["status"] == "rejected":
+            return 429, job          # quota exceeded — retry later
+        return 201, job
+
+    def _get_templates(self, params, query, body) -> tuple[int, Any]:
+        return 200, {"templates": list_templates()}
+
+    def _list_jobs(self, params, query, body) -> tuple[int, Any]:
+        return 200, {"jobs": self.service.list_jobs(query.get("tenant"))}
+
+    def _get_job(self, params, query, body) -> tuple[int, Any]:
+        job = self.service.job(params["id"])
+        if job is None:
+            return 404, {"error": "no_such_job", "job_id": params["id"]}
+        return 200, job
+
+    def _get_lineage(self, params, query, body) -> tuple[int, Any]:
+        lin = self.service.lineage(params["id"])
+        if lin is None:
+            return 404, {"error": "no_such_job", "job_id": params["id"]}
+        return 200, {"job_id": params["id"], "lineage": lin}
+
+    def _cancel_job(self, params, query, body) -> tuple[int, Any]:
+        job = self.service.cancel(params["id"])
+        if job is None:
+            return 404, {"error": "no_such_job", "job_id": params["id"]}
+        return 200, job
+
+    def _get_usage(self, params, query, body) -> tuple[int, Any]:
+        return 200, self.service.usage(params["id"])
+
+    def _get_health(self, params, query, body) -> tuple[int, Any]:
+        return 200, self.service.health()
+
+    @staticmethod
+    def _number(body, key) -> tuple[Any, Any]:
+        """(value, error_payload): None is allowed, anything else must be a
+        real number — client bodies must never escape handle() as crashes."""
+        v = body.get(key)
+        if v is None or (isinstance(v, (int, float))
+                         and not isinstance(v, bool)):
+            return v, None
+        return None, {"error": "invalid_body",
+                      "detail": [f"{key!r} must be a number"]}
+
+    def _pump(self, params, query, body) -> tuple[int, Any]:
+        max_steps, err = self._number(body, "max_steps")
+        until, err2 = self._number(body, "until")
+        if err or err2:
+            return 400, err or err2
+        steps = self.service.pump(max_steps, until)
+        return 200, {"steps": steps, "now": self.service.engine.now}
+
+    def _drain(self, params, query, body) -> tuple[int, Any]:
+        until, err = self._number(body, "until")
+        if err:
+            return 400, err
+        tel = self.service.run_until_idle(until)
+        return 200, {"now": self.service.engine.now,
+                     "summary": tel.summary()}

@@ -1,0 +1,240 @@
+"""FabricService: the long-lived, tenant-facing front of the FlowMesh engine.
+
+Where the batch-era entry point was ``Engine.submit() ... Engine.run()`` to
+completion, the service keeps one engine *live*: declarative workflow specs
+arrive (validated + compiled + admission-checked), become jobs with stable
+ids, and the caller pumps the engine incrementally (``pump`` /
+``run_until_idle``) while submitting, cancelling, and querying concurrently.
+Nothing restarts between submissions — dedup, worker warmth, and the result
+index all persist across the fabric's lifetime, which is exactly what makes
+cross-tenant consolidation pay off.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+from repro.core.control_plane import EngineConfig, FlowMeshEngine
+from repro.core.dag import WorkflowDAG
+from repro.core.simulator import SimExecutor
+from repro.core.telemetry import Telemetry
+from repro.core.worker import WorkerState
+
+from .admission import AdmissionController, QuotaExceeded, TenantQuota
+from .spec import SpecError, compile_spec, render_template
+
+DEFAULT_DEVICE_CLASSES = ("h100-nvl-94g", "rtx4090-48g", "rtx4090-24g")
+
+
+class JobStatus(str, enum.Enum):
+    REJECTED = "rejected"      # failed admission; never entered the engine
+    QUEUED = "queued"          # submitted; arrival not yet processed
+    RUNNING = "running"        # live in the engine
+    COMPLETED = "completed"
+    CANCELLED = "cancelled"
+
+
+@dataclass
+class JobRecord:
+    job_id: str
+    tenant: str
+    dag: WorkflowDAG
+    submitted: bool            # False => rejected at admission
+    submitted_at: float
+    error: str | None = None
+    cancelled: bool = False
+
+
+class FabricService:
+    """One shared fabric instance serving every tenant's workflows."""
+
+    def __init__(self, *, engine: FlowMeshEngine | None = None,
+                 admission: AdmissionController | None = None,
+                 executor=None, policy=None, config: EngineConfig | None = None,
+                 autoscaler=None,
+                 device_classes: tuple[str, ...] = DEFAULT_DEVICE_CLASSES,
+                 seed: int = 0, retention: int = 10_000) -> None:
+        #: terminal (completed/cancelled/rejected) job records kept queryable;
+        #: beyond this the oldest are evicted so a fabric that never restarts
+        #: does not grow without bound. Usage accounting is unaffected.
+        self.retention = retention
+        self.admission = admission or AdmissionController()
+        if engine is None:
+            engine = FlowMeshEngine(
+                policy=policy, executor=executor or SimExecutor(seed=seed),
+                config=config or EngineConfig(seed=seed),
+                autoscaler=autoscaler, admission=self.admission)
+            engine.bootstrap_workers(list(device_classes))
+        else:
+            engine.admission = self.admission
+        self.engine = engine
+        self.jobs: dict[str, JobRecord] = {}
+
+    # ------------------------------------------------------------ tenants --
+    def set_quota(self, tenant: str, quota: TenantQuota) -> None:
+        self.admission.set_quota(tenant, quota)
+
+    # ----------------------------------------------------------- submit ----
+    def submit(self, doc: dict) -> dict:
+        """Validate, compile, admission-check, and enqueue one spec document.
+
+        Returns the job view. Raises ``SpecError`` for malformed documents;
+        quota rejections do NOT raise — they return a ``rejected`` job so the
+        tenant can inspect the reason through the normal job API.
+        """
+        dag = compile_spec(doc)
+        rec = JobRecord(job_id=dag.dag_id, tenant=dag.tenant, dag=dag,
+                        submitted=False, submitted_at=self.engine.now)
+        self.jobs[rec.job_id] = rec
+        try:
+            self.admission.admit_workflow(dag)
+        except QuotaExceeded as e:
+            rec.error = e.reason
+            self._evict_terminal()       # a rejection flood must not pile up
+            return self.job(rec.job_id)
+        rec.submitted = True
+        self.engine.submit(dag, at=self.engine.now)
+        self._evict_terminal()
+        return self.job(rec.job_id)
+
+    def submit_template(self, name: str, **params) -> dict:
+        return self.submit(render_template(name, **params))
+
+    def cancel(self, job_id: str) -> dict | None:
+        rec = self.jobs.get(job_id)
+        if rec is None:
+            return None
+        if rec.submitted and not rec.cancelled and not self._dag(rec).done:
+            if self.engine.cancel(job_id):
+                rec.cancelled = True
+                self.admission.note_workflow_cancelled(rec.dag)
+        return self.job(job_id)
+
+    # ------------------------------------------------------------- drive ----
+    def pump(self, max_steps: int | None = None,
+             until: float | None = None) -> int:
+        """Advance the live engine by up to ``max_steps`` events (or until
+        virtual time ``until``). Returns the number of events processed."""
+        self.engine._arm_recurring()
+        steps = 0
+        while max_steps is None or steps < max_steps:
+            if self.engine.idle or not self.engine.step(until):
+                break
+            steps += 1
+        return steps
+
+    def run_until_idle(self, until: float | None = None):
+        return self.engine.run_until_idle(until)
+
+    def _evict_terminal(self) -> None:
+        """Drop the oldest terminal job records (and their engine-side DAG
+        state) once more than ``retention`` of them have accumulated."""
+        # hysteresis: trim back to `retention` only once ~10% over it, so at
+        # steady state the O(jobs) scan amortizes to O(1) per submission
+        if len(self.jobs) <= max(self.retention + 1,
+                                 int(self.retention * 1.1)):
+            return
+        terminal = [
+            jid for jid, rec in self.jobs.items()
+            if self._status(rec) in (JobStatus.COMPLETED,
+                                     JobStatus.CANCELLED, JobStatus.REJECTED)
+            # a job cancelled before its arrival event fired must keep its
+            # engine.cancelled entry until the event is consumed, or the
+            # arrival would resurrect the workflow and corrupt accounting
+            and not (rec.cancelled and jid in self.engine.cancelled
+                     and jid not in self.engine.dags)]
+        for jid in terminal[:max(0, len(terminal) - self.retention)]:
+            del self.jobs[jid]                   # insertion order == oldest
+            self.engine.dags.pop(jid, None)
+            self.engine.cancelled.discard(jid)
+
+    # ------------------------------------------------------------- query ----
+    def _dag(self, rec: JobRecord) -> WorkflowDAG:
+        # monolithic baseline policies replace the DAG at submission; the
+        # engine's registry holds the live object once it has arrived
+        return self.engine.dags.get(rec.job_id, rec.dag)
+
+    def _status(self, rec: JobRecord) -> JobStatus:
+        if not rec.submitted:
+            return JobStatus.REJECTED
+        if rec.cancelled:
+            return JobStatus.CANCELLED
+        if self._dag(rec).done:
+            return JobStatus.COMPLETED
+        if rec.job_id in self.engine.dags:
+            return JobStatus.RUNNING
+        return JobStatus.QUEUED
+
+    def job(self, job_id: str) -> dict | None:
+        rec = self.jobs.get(job_id)
+        if rec is None:
+            return None
+        dag = self._dag(rec)
+        out = {
+            "job_id": rec.job_id,
+            "tenant": rec.tenant,
+            "status": self._status(rec).value,
+            "submitted_at": rec.submitted_at,
+            "ops": {n: s.value for n, s in dag.state.items()},
+            "metadata": dag.metadata,
+        }
+        if rec.error:
+            out["error"] = rec.error
+        if dag.done:
+            out["completed_at"] = dag.completed_at
+            out["latency_s"] = dag.latency
+        return out
+
+    def list_jobs(self, tenant: str | None = None) -> list[dict]:
+        return [self.job(jid) for jid, rec in self.jobs.items()
+                if tenant is None or rec.tenant == tenant]
+
+    def lineage(self, job_id: str) -> list[dict] | None:
+        """Per-edge provenance: ``executed=False`` rows are op-instances that
+        were satisfied by another tenant's run or the result index."""
+        rec = self.jobs.get(job_id)
+        if rec is None:
+            return None
+        return [{
+            "op": l.op, "executed": l.executed, "worker": l.worker,
+            "output_hash": l.output_hash, "input_hashes": list(l.input_hashes),
+            "h_task": l.h_task, "t_complete": l.t_complete,
+        } for l in self._dag(rec).replay_order()]
+
+    def usage(self, tenant: str) -> dict:
+        out = self.admission.usage_snapshot(tenant)
+        stats = self.engine.pool.stats
+        out["pool"] = {
+            "ops_arrived": stats.arrived_by_tenant.get(tenant, 0),
+            "dedup_joins": stats.joins_by_tenant.get(tenant, 0),
+        }
+        # single source for latency: the engine's policy-neutral telemetry
+        xs = self.engine.telemetry.tenant_latencies.get(tenant, [])
+        out["latency"] = {
+            "p50_s": round(Telemetry.percentile(xs, 0.50), 2),
+            "p99_s": round(Telemetry.percentile(xs, 0.99), 2),
+        }
+        return out
+
+    def health(self) -> dict:
+        eng = self.engine
+        by_status: dict[str, int] = {}
+        for rec in self.jobs.values():
+            s = self._status(rec).value
+            by_status[s] = by_status.get(s, 0) + 1
+        workers = list(eng.workers.values())
+        return {
+            "status": "stalled" if eng.stalled else "ok",
+            "now": eng.now,
+            "idle": eng.idle,
+            "workers": {
+                "total": len(workers),
+                "active": sum(1 for w in workers
+                              if w.state is WorkerState.ACTIVE),
+            },
+            "pool_depth": eng.pool.depth,
+            "jobs": by_status,
+            "tenants": sorted({r.tenant for r in self.jobs.values()}),
+            "executions": eng.telemetry.executions,
+            "dedup_savings": eng.telemetry.dedup_savings,
+        }

@@ -1,0 +1,554 @@
+"""Fabric gateway tests: declarative specs, multi-tenant admission, and the
+long-lived job API — the service layer in front of the engine.
+
+Everything runs against the in-process FabricAPI handler table, the same
+interface the CLI and examples use.
+"""
+import pytest
+
+from repro.core.autoscaler import AutoscalerConfig
+from repro.core.control_plane import EngineConfig, FlowMeshEngine
+from repro.core.simulator import SimExecutor
+from repro.fabric import (AdmissionController, FabricAPI, FabricService,
+                          SpecError, TenantQuota, compile_spec,
+                          list_templates, render_template, validate_spec)
+
+
+def one_op_spec(tenant, prompt, *, model="llama-3.2-1b", max_batch=24):
+    return {
+        "tenant": tenant,
+        "ops": [
+            {"name": "gen", "op_type": "generate", "model_id": model,
+             "params": {"max_batch": max_batch}, "inputs": [prompt],
+             "tokens_in": 256, "tokens_out": 64},
+        ],
+    }
+
+
+def chain_spec(tenant, tag):
+    return {
+        "tenant": tenant,
+        "ops": [
+            {"name": "gen", "op_type": "generate", "model_id": "llama-3.2-1b",
+             "inputs": [f"prompt:{tag}"], "tokens_in": 256, "tokens_out": 64},
+            {"name": "score", "op_type": "score", "model_id": "reward-1b",
+             "inputs": [{"ref": "gen"}], "tokens_in": 256, "tokens_out": 8},
+        ],
+    }
+
+
+def service(**kw):
+    return FabricService(seed=7, **kw)
+
+
+# ---------------------------------------------------------------------------
+# spec validation + compilation
+# ---------------------------------------------------------------------------
+def test_validate_spec_reports_all_problems():
+    errors = validate_spec({
+        "tenant": "",
+        "deadline_s": -5,
+        "ops": [
+            {"name": "a", "op_type": "not_a_type"},
+            {"name": "a", "op_type": "generate", "tokens_in": -1},
+            {"name": "b", "op_type": "sft"},                 # no model_id
+            {"name": "c", "op_type": "tool", "resource_class": "gpu.huge"},
+        ],
+    })
+    text = "\n".join(errors)
+    assert "tenant" in text
+    assert "deadline_s" in text
+    assert "op_type" in text
+    assert "duplicate" in text
+    assert "tokens_in" in text
+    assert "model_id" in text
+    assert "resource_class" in text
+
+
+def test_compile_rejects_unknown_ref_and_cycle():
+    with pytest.raises(SpecError, match="unknown"):
+        compile_spec({"ops": [{"name": "a", "op_type": "tool",
+                               "inputs": ["@missing"]}]})
+    with pytest.raises(SpecError, match="cycle"):
+        compile_spec({"ops": [
+            {"name": "a", "op_type": "tool", "inputs": ["@b"]},
+            {"name": "b", "op_type": "tool", "inputs": ["@a"]},
+        ]})
+
+
+def test_ref_forms_and_literal_escape():
+    dag = compile_spec({"ops": [
+        {"name": "a", "op_type": "tool", "inputs": ["@@not-a-ref"],
+         "resource_class": "cpu"},
+        {"name": "b", "op_type": "tool", "inputs": ["@a", {"ref": "a"}],
+         "resource_class": "cpu"},
+    ]})
+    assert dag.ops["a"].inputs == ["@not-a-ref"]      # escaped literal
+    assert [r.op for r in dag.ops["b"].inputs] == ["a", "a"]
+
+
+def test_templates_compile_and_are_deterministic():
+    assert set(list_templates()) == {"rlhf", "distill", "agent-loop",
+                                     "batch-eval"}
+    for name in list_templates():
+        doc = render_template(name, tenant="t0")
+        dag1, dag2 = compile_spec(doc), compile_spec(render_template(
+            name, tenant="t0"))
+        assert list(dag1.ops) == list(dag2.ops)
+        # identical docs -> identical execution identities (dedup across
+        # tenants depends on this)
+        for op in dag1.ops:
+            assert dag1.ops[op].h_exec() == dag2.ops[op].h_exec()
+    assert "sft" in compile_spec(render_template("rlhf")).ops
+    assert "teach" in compile_spec(render_template("distill")).ops
+
+
+def test_template_unknown_name():
+    with pytest.raises(SpecError, match="unknown template"):
+        render_template("nope")
+
+
+# ---------------------------------------------------------------------------
+# the job API: submit / query / lineage / cancel
+# ---------------------------------------------------------------------------
+def test_cross_tenant_dedup_through_service_api():
+    api = FabricAPI(service())
+    code, a = api.handle("POST", "/workflows",
+                         {"spec": chain_spec("acme", "shared")})
+    assert code == 201 and a["status"] in ("queued", "running")
+    code, b = api.handle("POST", "/workflows",
+                         {"spec": chain_spec("globex", "shared")})
+    assert code == 201
+    api.handle("POST", "/drain", {})
+
+    code, ja = api.handle("GET", f"/jobs/{a['job_id']}")
+    code_b, jb = api.handle("GET", f"/jobs/{b['job_id']}")
+    assert ja["status"] == jb["status"] == "completed"
+
+    # the shared ops executed once: both lineages record every op, and for
+    # each op exactly one tenant's instance carries executed=True
+    _, la = api.handle("GET", f"/jobs/{a['job_id']}/lineage")
+    _, lb = api.handle("GET", f"/jobs/{b['job_id']}/lineage")
+    ra = {l["op"]: l for l in la["lineage"]}
+    rb = {l["op"]: l for l in lb["lineage"]}
+    assert set(ra) == set(rb) == {"gen", "score"}
+    for op in ("gen", "score"):
+        assert ra[op]["output_hash"] == rb[op]["output_hash"]
+        assert ra[op]["executed"] != rb[op]["executed"]    # exactly one ran
+
+    # usage reflects the split: each tenant half executed / half deduped
+    _, ua = api.handle("GET", "/tenants/acme/usage")
+    _, ub = api.handle("GET", "/tenants/globex/usage")
+    assert ua["ops"]["executed"] + ua["ops"]["deduped"] == 2
+    assert ub["ops"]["executed"] + ub["ops"]["deduped"] == 2
+    assert ua["ops"]["deduped"] + ub["ops"]["deduped"] == 2
+    # shared work, shared bill: equal spend for identical workflows
+    assert ua["spend"]["usd"] == pytest.approx(ub["spend"]["usd"])
+    assert ua["latency"]["p50_s"] > 0
+
+
+def test_submit_while_running_no_restart():
+    svc = service()
+    job_a = svc.submit(chain_spec("acme", "live"))
+    # advance the live engine partway: run until gen completed, score not
+    svc.pump(max_steps=1)
+    assert svc.engine.now >= 0 and not svc.engine.idle
+    steps = 0
+    while svc.jobs[job_a["job_id"]].dag.state["gen"].value != "completed":
+        assert svc.pump(max_steps=1) == 1, "engine went idle early"
+        steps += 1
+        assert steps < 500
+    t_mid = svc.engine.now
+    assert svc.job(job_a["job_id"])["status"] == "running"
+
+    # submit B *while A is still running*: its gen is identical and already
+    # published -> served from the result index without re-execution
+    job_b = svc.submit(chain_spec("globex", "live"))
+    svc.run_until_idle()
+    assert svc.engine.now >= t_mid          # same clock, no restart
+    assert svc.job(job_a["job_id"])["status"] == "completed"
+    jb = svc.job(job_b["job_id"])
+    assert jb["status"] == "completed"
+    lineage_b = {l["op"]: l for l in svc.lineage(job_b["job_id"])}
+    assert lineage_b["gen"]["executed"] is False
+    assert svc.engine.telemetry.dedup_savings >= 2
+
+
+def test_three_tenants_concurrent_acceptance():
+    """The acceptance scenario: >=3 tenants, live service, quotas, dedup,
+    usage — no run-to-completion restart between submissions."""
+    svc = service()
+    svc.set_quota("small-co", TenantQuota(max_active_workflows=1))
+    api = FabricAPI(svc)
+
+    jobs = {}
+    for tenant in ("acme", "globex", "initech"):
+        code, j = api.handle(
+            "POST", "/workflows",
+            {"template": "distill", "params": {"tenant": tenant}})
+        assert code == 201
+        jobs[tenant] = j
+    api.handle("POST", "/pump", {"max_steps": 40})   # mid-flight...
+    code, j4 = api.handle(
+        "POST", "/workflows",
+        {"template": "batch-eval", "params": {"tenant": "acme"}})
+    assert code == 201                               # ...live submission
+    code, _ = api.handle("POST", "/workflows",
+                         {"template": "rlhf", "params": {"tenant": "small-co"}})
+    assert code == 201
+    code, rejected = api.handle(
+        "POST", "/workflows",
+        {"template": "rlhf", "params": {"tenant": "small-co"}})
+    assert code == 429 and "max_active_workflows" in rejected["error"]
+
+    api.handle("POST", "/drain", {})
+    for tenant, j in jobs.items():
+        code, done = api.handle("GET", f"/jobs/{j['job_id']}")
+        assert done["status"] == "completed", tenant
+    # the three identical distill teachers executed once, reused twice
+    executed = deduped = 0
+    for j in jobs.values():
+        _, lin = api.handle("GET", f"/jobs/{j['job_id']}/lineage")
+        row = {l["op"]: l for l in lin["lineage"]}["teach"]
+        executed += row["executed"]
+        deduped += (not row["executed"])
+    assert executed == 1 and deduped == 2
+    for tenant in ("acme", "globex", "initech", "small-co"):
+        code, u = api.handle("GET", f"/tenants/{tenant}/usage")
+        assert code == 200 and u["spend"]["usd"] > 0
+    code, h = api.handle("GET", "/health")
+    assert h["status"] == "ok" and h["idle"]
+    assert h["dedup_savings"] >= 2
+
+
+def test_cancel_job_live_and_queued():
+    svc = service()
+    # cancel while queued (arrival not yet processed)
+    q = svc.submit(chain_spec("acme", "cancel-queued"))
+    assert svc.cancel(q["job_id"])["status"] == "cancelled"
+    # cancel mid-flight
+    r = svc.submit(chain_spec("acme", "cancel-running"))
+    svc.pump(max_steps=3)
+    assert svc.job(r["job_id"])["status"] == "running"
+    assert svc.cancel(r["job_id"])["status"] == "cancelled"
+    tel = svc.run_until_idle()
+    assert svc.engine.idle and not svc.engine.stalled
+    assert svc.job(r["job_id"])["status"] == "cancelled"
+    assert tel.n_tasks == 0                       # nothing ran to completion
+    u = svc.usage("acme")
+    assert u["workflows"]["cancelled"] == 2
+    assert svc.cancel("no-such-job") is None
+
+
+# ---------------------------------------------------------------------------
+# admission: quota rejection, in-flight holds, fair share
+# ---------------------------------------------------------------------------
+def test_budget_quota_rejects_after_spend():
+    svc = service()
+    svc.set_quota("meter", TenantQuota(budget_usd=1e-9))
+    ok = svc.submit(one_op_spec("meter", "prompt:budget-1"))
+    assert ok["status"] in ("queued", "running")    # no spend yet
+    svc.run_until_idle()
+    assert svc.usage("meter")["spend"]["usd"] > 1e-9
+    rej = svc.submit(one_op_spec("meter", "prompt:budget-2"))
+    assert rej["status"] == "rejected" and "budget" in rej["error"]
+    assert svc.usage("meter")["workflows"]["rejected"] == 1
+
+
+def test_inflight_cap_holds_ops_at_pool_boundary():
+    svc = FabricService(seed=7, device_classes=(
+        "rtx4090-24g", "rtx4090-24g", "rtx4090-24g"))
+    svc.set_quota("capped", TenantQuota(max_inflight_ops=1))
+    # 3 independent single-op workflows on 3 idle workers: without the cap
+    # they would all dispatch in the first window
+    for i in range(3):
+        svc.submit(one_op_spec("capped", f"prompt:cap-{i}", max_batch=1))
+    max_seen = 0
+    while not svc.engine.idle:
+        svc.pump(max_steps=1)
+        max_seen = max(max_seen, svc.admission.usage["capped"].inflight_ops)
+    assert max_seen == 1
+    u = svc.usage("capped")
+    assert u["workflows"]["completed"] == 3
+    assert u["ops"]["held"] > 0
+
+
+def test_weighted_fair_share_under_skewed_load():
+    def latencies(fair: bool):
+        admission = AdmissionController() if fair else None
+        eng = FlowMeshEngine(executor=SimExecutor(seed=3),
+                             config=EngineConfig(seed=3),
+                             admission=admission)
+        eng.bootstrap_workers(["rtx4090-24g"])      # one worker: contention
+        svc = FabricService(engine=eng) if fair else None
+        submit = (svc.submit if fair
+                  else lambda doc: eng.submit(compile_spec(doc)))
+        # heavy floods 14 jobs, then light submits 2 — strict FIFO would
+        # serve light's jobs last
+        for i in range(14):
+            submit(one_op_spec("heavy", f"prompt:h{i}", max_batch=1))
+        for i in range(2):
+            submit(one_op_spec("light", f"prompt:l{i}", max_batch=1))
+        tel = eng.run_until_idle()
+        per = {t: sorted(xs) for t, xs in tel.tenant_latencies.items()}
+        return per["light"], per["heavy"]
+
+    light, heavy = latencies(fair=True)
+    assert len(light) == 2 and len(heavy) == 14
+    # light's worst job beats the heavy tenant's median: no starvation
+    assert max(light) < sorted(heavy)[len(heavy) // 2]
+
+    light_fifo, _ = latencies(fair=False)
+    # and fair share actually moved the needle vs. FIFO
+    assert max(light) < max(light_fifo)
+
+
+def test_inflight_cap_counts_groups_not_dedup_fanout():
+    # two dedup groups, each carrying TWO of the tenant's workflow
+    # instances: the cap meters physical ops, so headroom accounting and
+    # inflight accounting must both see 2 — not 4
+    svc = FabricService(seed=7, device_classes=(
+        "rtx4090-24g", "rtx4090-24g", "rtx4090-24g"))
+    svc.set_quota("fan", TenantQuota(max_inflight_ops=2))
+    for tag in ("x", "x", "y", "y"):
+        svc.submit(one_op_spec("fan", f"prompt:fan-{tag}", max_batch=1))
+    max_seen = 0
+    while not svc.engine.idle:
+        svc.pump(max_steps=1)
+        max_seen = max(max_seen, svc.admission.usage["fan"].inflight_ops)
+    assert max_seen == 2
+    u = svc.usage("fan")
+    assert u["workflows"]["completed"] == 4
+    assert u["ops"]["executed"] + u["ops"]["deduped"] == 4
+    assert u["pool"] == {"ops_arrived": 4, "dedup_joins": 2}
+
+
+def test_shared_group_not_held_when_one_tenant_has_headroom():
+    svc = service()
+    svc.set_quota("capped", TenantQuota(max_inflight_ops=0))  # fully gated
+    free = svc.submit(chain_spec("free", "shared-hold"))
+    gated = svc.submit(chain_spec("capped", "shared-hold"))
+    svc.run_until_idle()
+    # the capped tenant rides along on the shared group instead of blocking it
+    assert svc.job(free["job_id"])["status"] == "completed"
+    assert svc.job(gated["job_id"])["status"] == "completed"
+
+
+def test_quota_starved_work_stalls_cleanly_and_recovers():
+    """A fully-gated tenant must not livelock the fabric: the autoscaler
+    ignores quota-held depth, the stall guard terminates the drive, and
+    cancelling the starved job (or new progress) clears the stall."""
+    admission = AdmissionController()
+    eng = FlowMeshEngine(
+        executor=SimExecutor(seed=5), admission=admission,
+        autoscaler=AutoscalerConfig(enabled=True, min_workers=1,
+                                    max_workers=10, tick_s=10.0),
+        config=EngineConfig(seed=5, stall_limit_s=120.0))
+    eng.bootstrap_workers(["rtx4090-24g"])
+    svc = FabricService(engine=eng, admission=admission)
+    svc.set_quota("gated", TenantQuota(max_inflight_ops=0))
+
+    held = svc.submit(one_op_spec("gated", "prompt:starve"))
+    svc.run_until_idle()                       # returns instead of spinning
+    assert eng.stalled and not eng.idle
+    assert len(eng.workers) == 1               # no lease-after-lease runaway
+    assert svc.pump() == 0                     # pump() also refuses to spin
+    assert svc.health()["status"] == "stalled"
+
+    svc.cancel(held["job_id"])                 # operator unblocks the fabric
+    ok = svc.submit(one_op_spec("free", "prompt:after-stall"))
+    svc.run_until_idle()
+    assert eng.idle and not eng.stalled
+    assert svc.job(ok["job_id"])["status"] == "completed"
+    assert svc.health()["status"] == "ok"
+
+
+def test_late_joining_tenant_does_not_starve_incumbent():
+    """WFQ start-time rule: a tenant joining mid-run enters at the system
+    virtual time, so the incumbent's backlog interleaves with the
+    newcomer's instead of being pushed behind all of it."""
+    svc = FabricService(seed=11, device_classes=("rtx4090-24g",))
+    old = [svc.submit(one_op_spec("old", f"prompt:o{i}", max_batch=1))
+           for i in range(8)]
+    while svc.usage("old")["workflows"]["completed"] < 4:
+        assert svc.pump(max_steps=1) == 1
+    t_join = svc.engine.now
+    new = [svc.submit(one_op_spec("new", f"prompt:n{i}", max_batch=1))
+           for i in range(4)]
+    # the newcomer starts at the incumbent's clock, not at zero
+    assert (svc.usage("new")["fair_share"]["vtime"]
+            >= svc.usage("old")["fair_share"]["vtime"] * 0.99)
+    svc.run_until_idle()
+    old_after = [svc.job(j["job_id"])["completed_at"] for j in old
+                 if svc.job(j["job_id"])["completed_at"] > t_join]
+    new_done = [svc.job(j["job_id"])["completed_at"] for j in new]
+    # at least one incumbent job completes before the newcomer's last —
+    # with a zero-baseline vtime the newcomer's whole backlog would win
+    assert min(old_after) < max(new_done)
+
+
+def test_malformed_field_types_are_spec_errors_not_crashes():
+    api = FabricAPI(service())
+    for bad_op in (
+            {"name": "a", "op_type": "generate", "model_id": 7,
+             "inputs": ["x"]},
+            {"name": "a", "op_type": "generate", "model_id": "m",
+             "adapters": 5},
+            {"name": "a", "op_type": "generate", "revision": 1.5},
+    ):
+        code, body = api.handle("POST", "/workflows",
+                                {"spec": {"ops": [bad_op]}})
+        assert code == 400 and body["error"] == "invalid_spec", bad_op
+    code, body = api.handle("POST", "/workflows",
+                            {"spec": {"name": 9, "metadata": [], "ops": [
+                                {"name": "a", "op_type": "tool",
+                                 "resource_class": "cpu"}]}})
+    assert code == 400 and len(body["detail"]) == 2
+
+
+def test_cancelled_mid_flight_work_is_still_billed():
+    """Submit-and-cancel must not be a free lunch: a dispatched op whose
+    only consumer cancels still ran on that tenant's behalf."""
+    svc = service()
+    job = svc.submit(one_op_spec("sneaky", "prompt:free-lunch"))
+    while svc.admission.usage["sneaky"].inflight_ops == 0:
+        assert svc.pump(max_steps=1) == 1
+    svc.cancel(job["job_id"])          # detaches the sole consumer
+    svc.run_until_idle()
+    u = svc.usage("sneaky")
+    assert u["spend"]["usd"] > 0       # the batch that ran was charged
+    assert u["ops"]["inflight"] == 0
+    assert u["fair_share"]["vtime"] > 0
+
+
+def test_cancelled_group_is_not_resurrected_by_worker_failure():
+    """cancel + worker crash must not requeue a zero-consumer ghost group
+    that later re-executes for nobody."""
+    svc = FabricService(
+        seed=7, device_classes=("rtx4090-24g", "rtx4090-24g"),
+        config=EngineConfig(seed=7, heartbeat_s=2.0, watchdog_s=5.0,
+                            speculation=False))
+    # long op so the crash is detected while the batch is still in flight
+    job = svc.submit({"tenant": "ghost", "ops": [
+        {"name": "gen", "op_type": "generate", "model_id": "llama-3.2-1b",
+         "params": {"max_batch": 1}, "inputs": ["prompt:doomed"],
+         "tokens_in": 4096, "tokens_out": 2048}]})
+    while svc.admission.usage["ghost"].inflight_ops == 0:
+        assert svc.pump(max_steps=1) == 1
+    svc.cancel(job["job_id"])              # sole consumer detached
+    svc.engine.inject_crash(0, at=svc.engine.now + 0.1)   # kills busy worker
+    svc.run_until_idle()
+    assert svc.engine.pool.depth == 0      # ghost abandoned, not requeued
+    ok = svc.submit(one_op_spec("live", "prompt:after-ghost", max_batch=1))
+    svc.run_until_idle()
+    assert svc.job(ok["job_id"])["status"] == "completed"
+    # only the live tenant's op ever executed; the ghost never came back
+    assert svc.engine.telemetry.executions == 1
+    assert svc.usage("ghost")["ops"]["executed"] == 0
+
+
+def test_tenant_joining_during_idle_window_enters_at_clock():
+    svc = service()
+    svc.submit(one_op_spec("incumbent", "prompt:old-1"))
+    svc.submit(one_op_spec("incumbent", "prompt:old-2"))
+    svc.run_until_idle()               # incumbent accrues vtime, goes idle
+    old_vt = svc.usage("incumbent")["fair_share"]["vtime"]
+    assert old_vt > 0
+    svc.submit(one_op_spec("newcomer", "prompt:new-1"))
+    new_vt = svc.usage("newcomer")["fair_share"]["vtime"]
+    assert new_vt >= old_vt * 0.99     # no zero-baseline leapfrog
+
+
+def test_rejection_flood_does_not_accumulate_records():
+    svc = FabricService(seed=7, retention=2)
+    svc.set_quota("capped", TenantQuota(max_active_workflows=1))
+    live = svc.submit(one_op_spec("capped", "prompt:live"))
+    for i in range(10):
+        rej = svc.submit(one_op_spec("capped", f"prompt:flood-{i}"))
+        assert rej["status"] == "rejected"
+    assert len(svc.jobs) <= 4          # retention + live + newest rejected
+    svc.run_until_idle()
+    assert svc.job(live["job_id"])["status"] == "completed"
+    assert svc.usage("capped")["workflows"]["rejected"] == 10
+
+
+def test_pump_and_drain_reject_non_numeric_bodies():
+    api = FabricAPI(service())
+    assert api.handle("POST", "/pump", {"max_steps": "10"})[0] == 400
+    assert api.handle("POST", "/pump", {"until": "5"})[0] == 400
+    assert api.handle("POST", "/drain", {"until": True})[0] == 400
+    assert api.handle("POST", "/pump", [5])[0] == 400      # non-object body
+    assert api.handle("POST", "/workflows", "spec")[0] == 400
+    assert api.handle("POST", "/pump", {"max_steps": 3})[0] == 200
+
+
+def test_usage_query_does_not_allocate_tenant_state():
+    svc = service()
+    for i in range(5):
+        svc.usage(f"scanner-{i}")
+    assert not svc.admission.usage                # read path stayed read-only
+
+
+def test_terminal_job_retention_bounds_memory():
+    svc = FabricService(seed=7, retention=2)
+    ids = []
+    for i in range(6):
+        job = svc.submit(one_op_spec("acme", f"prompt:r{i}"))
+        ids.append(job["job_id"])
+        svc.run_until_idle()
+    assert len(svc.jobs) <= 3                  # retention + the live one
+    assert len(svc.engine.dags) <= 3
+    assert svc.job(ids[0]) is None             # oldest evicted
+    assert svc.lineage(ids[0]) is None
+    assert svc.job(ids[-1])["status"] == "completed"
+    # accounting is unaffected by eviction
+    assert svc.usage("acme")["workflows"]["completed"] == 6
+
+
+# ---------------------------------------------------------------------------
+# API surface details
+# ---------------------------------------------------------------------------
+def test_api_errors_and_listing():
+    api = FabricAPI(service())
+    assert api.handle("GET", "/nope")[0] == 404
+    assert api.handle("DELETE", "/health")[0] == 405
+    assert api.handle("GET", "/jobs/unknown")[0] == 404
+    assert api.handle("POST", "/jobs/unknown/cancel")[0] == 404
+    code, body = api.handle("POST", "/workflows", {})
+    assert code == 400
+    code, body = api.handle("POST", "/workflows",
+                            {"spec": {"ops": [{"name": "x"}]}})
+    assert code == 400 and body["error"] == "invalid_spec"
+    # tenant-supplied garbage in template params is a 400, not a crash
+    code, body = api.handle("POST", "/workflows",
+                            {"template": "agent-loop",
+                             "params": {"rounds": "three"}})
+    assert code == 400 and body["error"] == "invalid_template_params"
+    code, body = api.handle("POST", "/workflows",
+                            {"template": "rlhf", "params": [1, 2]})
+    assert code == 400 and body["error"] == "invalid_template_params"
+    code, body = api.handle("POST", "/workflows",
+                            {"template": "rlhf",
+                             "params": {"no_such_arg": 1}})
+    assert code == 400 and body["error"] == "invalid_template_params"
+
+    api.handle("POST", "/workflows", {"spec": one_op_spec("a", "p1")})
+    api.handle("POST", "/workflows", {"spec": one_op_spec("b", "p2")})
+    code, listed = api.handle("GET", "/jobs?tenant=a")
+    assert code == 200 and len(listed["jobs"]) == 1
+    code, listed = api.handle("GET", "/jobs")
+    assert len(listed["jobs"]) == 2
+    code, t = api.handle("GET", "/workflows/templates")
+    assert code == 200 and "rlhf" in t["templates"]
+
+
+def test_workload_generator_compiles_through_spec_path():
+    from repro.core.workloads import WorkloadCfg, WorkloadGen
+    gen = WorkloadGen(WorkloadCfg(seed=11))
+    kinds = set()
+    for builder in (gen.GROUP_A + gen.GROUP_B_EXTRA
+                    + ("distill_pipeline", "batch_eval")):
+        dag = getattr(gen, builder)()
+        kinds.add(dag.metadata["kind"])
+        assert dag.ops
+    assert {"rlhf", "distill", "batch_eval", "reasoning_chain"} <= kinds

@@ -8,6 +8,9 @@
 """
 import random as _random
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cas import CAS
