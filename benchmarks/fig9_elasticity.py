@@ -23,9 +23,9 @@ def run(seed: int = 0, n: int = 150) -> dict:
             eng.submit(gen.sample_group_a(), at=t)
     tel = eng.run()
     trace = tel.scaling_trace
-    peak = max(w for _, w, _ in trace)
-    trough_after_peak = min(w for tt, w, _ in trace
-                            if tt > next(t2 for t2, w2, _ in trace
+    peak = max(w for _, w, _, _ in trace)
+    trough_after_peak = min(w for tt, w, _, _ in trace
+                            if tt > next(t2 for t2, w2, _, _ in trace
                                          if w2 == peak))
     return {
         "completed": tel.n_tasks,

@@ -25,9 +25,9 @@ def main():
     tel = eng.run()
     print("== elastic scaling on a marketplace backend ==")
     print(f"{'t(s)':>7s} {'workers':>8s} {'queue':>6s}")
-    for tt, w, q in tel.scaling_trace[::6]:
+    for tt, w, q, _rate in tel.scaling_trace[::6]:
         print(f"{tt:7.0f} {w:8d} {q:6d} {'#' * w}")
-    peak = max(w for _, w, _ in tel.scaling_trace)
+    peak = max(w for _, w, _, _ in tel.scaling_trace)
     print(f"completed={tel.n_tasks} peak_workers={peak} "
           f"end_workers={tel.scaling_trace[-1][1]} "
           f"cost=${tel.total_cost:.3f}")

@@ -17,4 +17,8 @@ echo "== fabric CLI smoke =="
 PYTHONPATH=src python scripts/fabric_cli.py demo
 
 echo
+echo "== HTTP shim smoke (real sockets) =="
+PYTHONPATH=src python scripts/http_smoke.py
+
+echo
 echo "CI OK"

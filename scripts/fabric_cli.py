@@ -1,9 +1,9 @@
 #!/usr/bin/env python
 """fabric_cli: drive a FlowMesh FabricService from the command line.
 
-Every subcommand goes through the same in-process request/response API the
-examples and tests use (an HTTP shim over ``FabricAPI.handle`` is a roadmap
-item; each invocation runs its own fabric instance until then).
+Every subcommand speaks the same request/response API the examples and
+tests use — in-process by default, or across real sockets with ``--url``
+against a fabric started by ``serve``.
 
     PYTHONPATH=src python scripts/fabric_cli.py templates
     PYTHONPATH=src python scripts/fabric_cli.py validate my_flow.json
@@ -11,15 +11,32 @@ item; each invocation runs its own fabric instance until then).
     PYTHONPATH=src python scripts/fabric_cli.py submit --template rlhf \
         --param tenant=acme --param model=llama-3.2-1b
     PYTHONPATH=src python scripts/fabric_cli.py demo
+
+    # cross-process: serve a fabric (optionally journaled to a CAS dir),
+    # submit to it, and tail a job's live event feed
+    PYTHONPATH=src python scripts/fabric_cli.py serve --port 8123 \
+        --journal /tmp/fabric-cas
+    PYTHONPATH=src python scripts/fabric_cli.py --url http://127.0.0.1:8123 \
+        submit --template distill --no-drain
+    PYTHONPATH=src python scripts/fabric_cli.py --url http://127.0.0.1:8123 \
+        tail <job_id>
+
+    # offline provenance: replay a journal straight from the CAS
+    PYTHONPATH=src python scripts/fabric_cli.py tail <job_id> \
+        --journal /tmp/fabric-cas
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
 import sys
 
-from repro.fabric import (FabricAPI, FabricService, render_template,
-                          validate_spec)
+from repro.core.cas import DiskCAS
+from repro.core.journal import EventJournal
+from repro.fabric import (TERMINAL_STATUSES as _TERMINAL, FabricAPI,
+                          FabricHTTPServer, FabricService, RemoteAPI,
+                          render_template, validate_spec)
 
 
 def _parse_params(pairs: list[str]) -> dict:
@@ -39,12 +56,13 @@ def _print(payload) -> None:
     print(json.dumps(payload, indent=2, default=str))
 
 
-def cmd_templates(api: FabricAPI, args) -> int:
-    _print(api.handle("GET", "/workflows/templates")[1])
-    return 0
+def cmd_templates(api, args) -> int:
+    code, payload = api.handle("GET", "/workflows/templates")
+    _print(payload)
+    return 0 if code == 200 else 1
 
 
-def cmd_validate(api: FabricAPI, args) -> int:
+def cmd_validate(api, args) -> int:
     if args.spec:
         with open(args.spec) as f:
             doc = json.load(f)
@@ -61,7 +79,7 @@ def cmd_validate(api: FabricAPI, args) -> int:
     return 0
 
 
-def cmd_submit(api: FabricAPI, args) -> int:
+def cmd_submit(api, args) -> int:
     if args.spec:
         with open(args.spec) as f:
             body = {"spec": json.load(f)}
@@ -84,7 +102,7 @@ def cmd_submit(api: FabricAPI, args) -> int:
     return 0
 
 
-def cmd_demo(api: FabricAPI, args) -> int:
+def cmd_demo(api, args) -> int:
     """Three tenants, overlapping distill specs, one live fabric."""
     for tenant in ("acme", "globex", "initech"):
         code, job = api.handle("POST", "/workflows", {
@@ -105,9 +123,59 @@ def cmd_demo(api: FabricAPI, args) -> int:
     return 0
 
 
+def cmd_serve(api, args) -> int:
+    """Expose the fabric over real sockets (auto-pumped)."""
+    server = FabricHTTPServer(api, host=args.host, port=args.port)
+    # a clean SIGTERM (docker stop, CI teardown) must flush the journal
+    def _sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGTERM, _sigterm)
+    print(f"fabric listening on {server.url}", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        server.stop()
+    return 0
+
+
+def cmd_tail(api, args) -> int:
+    """Follow a job's event feed: live over HTTP, or offline from a journal."""
+    if args.journal and not args.url:
+        journal = EventJournal(DiskCAS(args.journal))
+        n = 0
+        for e in journal.replay():
+            d = e.to_dict()
+            if args.job_id in (None, d.get("dag_id")):
+                print(json.dumps(d, default=str))
+                n += 1
+        print(f"# {n} events replayed from {journal.head}", file=sys.stderr)
+        return 0
+    if not args.url:
+        sys.exit("tail needs --url (live feed) or --journal (offline replay)")
+    if not args.job_id:
+        sys.exit("tail over --url requires a job id")
+    cursor = args.since
+    while True:
+        code, feed = api.handle(
+            "GET", f"/jobs/{args.job_id}/events?since={cursor}&wait_s=5")
+        if code != 200:
+            print(f"HTTP {code}", file=sys.stderr)
+            _print(feed)
+            return 1
+        for e in feed["events"]:
+            print(json.dumps(e, default=str))
+        cursor = feed["cursor"]
+        if feed["status"] in _TERMINAL and not feed["events"]:
+            print(f"# job {args.job_id}: {feed['status']}", file=sys.stderr)
+            return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="fabric_cli", description=__doc__)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--url", help="drive a remote fabric (from `serve`) "
+                                  "instead of an in-process one")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     sub.add_parser("templates", help="list workflow templates")
@@ -125,13 +193,45 @@ def main(argv: list[str] | None = None) -> int:
 
     sub.add_parser("demo", help="multi-tenant dedup demo")
 
+    p = sub.add_parser("serve", help="serve the fabric over HTTP")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="0 picks a free port (printed at startup)")
+    p.add_argument("--journal", metavar="DIR",
+                   help="CAS directory for the event journal; restores "
+                        "prior history when one exists")
+
+    p = sub.add_parser("tail", help="follow a job's event feed")
+    p.add_argument("job_id", nargs="?")
+    p.add_argument("--since", type=int, default=-1,
+                   help="resume cursor (default: from the beginning)")
+    p.add_argument("--journal", metavar="DIR",
+                   help="offline: replay events from this CAS directory")
+
     args = ap.parse_args(argv)
     if args.cmd in ("validate", "submit") and not (
             args.spec or args.template):
         ap.error(f"{args.cmd} requires a spec file or --template")
-    api = FabricAPI(FabricService(seed=args.seed))
+    if args.cmd == "serve" and args.url:
+        ap.error("serve runs an in-process fabric; it cannot proxy --url")
+
+    if args.url:
+        api = RemoteAPI(args.url)
+    elif args.cmd == "serve" and args.journal:
+        cas = DiskCAS(args.journal)     # artifacts + journal share one store
+        journal = EventJournal(cas)
+        svc = FabricService(seed=args.seed, cas=cas, journal=journal)
+        if journal.head is not None:
+            stats = svc.restore_from_journal()
+            print(f"restored {stats['jobs']} jobs from "
+                  f"{stats['events']} journaled events "
+                  f"({stats['interrupted']} interrupted)", flush=True)
+        api = FabricAPI(svc)
+    else:
+        api = FabricAPI(FabricService(seed=args.seed))
     return {"templates": cmd_templates, "validate": cmd_validate,
-            "submit": cmd_submit, "demo": cmd_demo}[args.cmd](api, args)
+            "submit": cmd_submit, "demo": cmd_demo, "serve": cmd_serve,
+            "tail": cmd_tail}[args.cmd](api, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""CI smoke for the cross-process path: start `fabric_cli.py serve` as a
+real subprocess, submit a spec over sockets, tail the job's event feed to
+completion, and verify lineage + usage — so the HTTP shim can't rot.
+
+    PYTHONPATH=src python scripts/http_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.fabric import TERMINAL_STATUSES as _TERMINAL  # noqa: E402
+from repro.fabric import RemoteAPI  # noqa: E402
+
+CLI = os.path.join(os.path.dirname(__file__), "fabric_cli.py")
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["PYTHONUNBUFFERED"] = "1"
+    proc = subprocess.Popen(
+        [sys.executable, CLI, "serve", "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+    try:
+        line = proc.stdout.readline()
+        assert "listening on" in line, f"unexpected startup line: {line!r}"
+        url = line.strip().rsplit(" ", 1)[-1]
+        api = RemoteAPI(url, timeout_s=30.0)
+
+        code, health = api.handle("GET", "/health")
+        assert code == 200 and health["status"] == "ok", health
+
+        spec = {"tenant": "smoke", "deadline_s": 900.0, "ops": [
+            {"name": "gen", "op_type": "generate",
+             "model_id": "llama-3.2-1b", "inputs": ["prompt:http-smoke"],
+             "tokens_in": 128, "tokens_out": 32},
+            {"name": "score", "op_type": "score", "model_id": "reward-1b",
+             "inputs": [{"ref": "gen"}], "tokens_in": 128, "tokens_out": 8},
+        ]}
+        code, job = api.handle("POST", "/workflows", {"spec": spec})
+        assert code == 201, (code, job)
+        job_id = job["job_id"]
+        print(f"submitted {job_id} over {url}")
+
+        # tail the feed with a resuming cursor (server auto-pumps)
+        cursor, kinds, deadline = -1, [], time.time() + 60.0
+        while True:
+            code, feed = api.handle(
+                "GET", f"/jobs/{job_id}/events?since={cursor}&wait_s=5")
+            assert code == 200, (code, feed)
+            kinds += [e["kind"] for e in feed["events"]]
+            cursor = feed["cursor"]
+            if feed["status"] in _TERMINAL and not feed["events"]:
+                break
+            assert time.time() < deadline, f"timed out; saw {kinds}"
+        assert feed["status"] == "completed", feed
+        assert "workflow_submitted" in kinds and "workflow_completed" in kinds
+        assert kinds.count("op_completed") == 2, kinds
+        print(f"event feed: {len(kinds)} events, kinds={sorted(set(kinds))}")
+
+        code, done = api.handle("GET", f"/jobs/{job_id}")
+        assert code == 200 and done["status"] == "completed", done
+        assert done["deadline"]["predicted_miss"] is False, done
+        code, lin = api.handle("GET", f"/jobs/{job_id}/lineage")
+        assert code == 200 and len(lin["lineage"]) == 2, lin
+        code, usage = api.handle("GET", "/tenants/smoke/usage")
+        assert code == 200 and usage["spend"]["usd"] > 0, usage
+        print(f"lineage rows={len(lin['lineage'])} "
+              f"spend=${usage['spend']['usd']:.6f} "
+              f"latency={done['latency_s']:.1f}s (virtual)")
+        print("HTTP smoke OK")
+        return 0
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

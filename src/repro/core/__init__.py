@@ -9,8 +9,10 @@ from .cas import CAS, DiskCAS
 from .consolidation import ReadyPool
 from .control_plane import EngineConfig, FlowMeshEngine
 from .dag import OperatorSpec, OpState, OpType, Ref, WorkflowDAG
+from .events import EventBus, FabricEvent, event_from_dict
 from .identity import (canonical, content_hash, exec_signature, model_hash,
                        task_hash)
+from .journal import EventJournal
 from .scheduler import (POLICIES, FirstFitScheduler, FlowMeshScheduler,
                         RoundRobinScheduler, StaticRoutingScheduler)
 from .simulator import FaultInjector, SimExecutor
@@ -21,6 +23,7 @@ from .workloads import WorkloadCfg, WorkloadGen
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "KubernetesBackend", "VastAiBackend",
     "CAS", "DiskCAS", "ReadyPool", "EngineConfig", "FlowMeshEngine",
+    "EventBus", "FabricEvent", "event_from_dict", "EventJournal",
     "OperatorSpec", "OpState", "OpType", "Ref", "WorkflowDAG",
     "canonical", "content_hash", "exec_signature", "model_hash", "task_hash",
     "POLICIES", "FirstFitScheduler", "FlowMeshScheduler",

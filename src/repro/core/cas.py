@@ -31,11 +31,24 @@ class CAS:
 
     def __init__(self) -> None:
         self._blobs: dict[str, bytes] = {}
+        self._refs: dict[str, str] = {}
         self._lock = threading.Lock()
         self.puts = 0            # write attempts
         self.dedup_hits = 0      # writes skipped because content already present
         self.gets = 0
         self.bytes_written = 0
+
+    # -- named refs ----------------------------------------------------------
+    # The one deliberately *mutable* cell per name in an otherwise immutable
+    # store: a ref names the head of a hash-chained structure (e.g. the
+    # event journal), and advancing it is the only non-idempotent write.
+    def set_ref(self, name: str, key: str) -> None:
+        with self._lock:
+            self._refs[name] = key
+
+    def get_ref(self, name: str) -> str | None:
+        with self._lock:
+            return self._refs.get(name)
 
     # -- raw byte interface -------------------------------------------------
     def put_bytes(self, data: bytes) -> str:
@@ -107,6 +120,27 @@ class DiskCAS(CAS):
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], key)
 
+    # -- named refs (cross-process: survive restarts) ------------------------
+    def _ref_path(self, name: str) -> str:
+        safe = name.replace("/", "_")
+        return os.path.join(self.root, "refs", safe)
+
+    def set_ref(self, name: str, key: str) -> None:
+        path = self._ref_path(name)
+        with self._lock:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "w") as f:
+                f.write(key)
+            os.replace(tmp, path)       # atomic head advance
+
+    def get_ref(self, name: str) -> str | None:
+        try:
+            with open(self._ref_path(name)) as f:
+                return f.read().strip() or None
+        except FileNotFoundError:
+            return None
+
     def put_bytes(self, data: bytes) -> str:
         key = content_hash(data)
         path = self._path(key)
@@ -139,12 +173,16 @@ class DiskCAS(CAS):
     def __contains__(self, key: str) -> bool:
         return os.path.exists(self._path(key))
 
+    def __len__(self) -> int:
+        return sum(1 for _ in self.keys())
+
     def keys(self) -> Iterator[str]:
         for sub in os.listdir(self.root):
             subdir = os.path.join(self.root, sub)
-            if os.path.isdir(subdir):
+            # only hash-prefix shards are keyspace; skips refs/ and strays
+            if len(sub) == 2 and os.path.isdir(subdir):
                 for k in os.listdir(subdir):
-                    if not k.endswith(tuple(f".tmp.{''}",)) and ".tmp." not in k:
+                    if ".tmp." not in k:
                         yield k
 
     def publish(self, data: bytes) -> tuple[str, bool]:

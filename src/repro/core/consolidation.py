@@ -55,7 +55,10 @@ class ReadyPool:
         self.stats._bump(self.stats.arrived_by_tenant, dag.tenant)
         spec = dag.ops[op_name]
         h_task = dag.h_task[op_name]
-        inst = TaskInstance(dag.dag_id, op_name, dag.tenant)
+        deadline_s = dag.metadata.get("deadline_s")
+        inst = TaskInstance(dag.dag_id, op_name, dag.tenant,
+                            deadline_at=(dag.submitted_at + float(deadline_s)
+                                         if deadline_s else None))
 
         if dedup and h_task in result_index:
             self.stats.cache_skips += 1

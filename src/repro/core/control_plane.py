@@ -5,6 +5,12 @@ and real (JAX compute, measured durations) execution — the control-plane
 logic (consolidation, Eq. 1 scheduling, continuous admission, watchdog
 recovery, speculation, autoscaling) is byte-identical across modes and across
 scheduler policies, which is what makes the baseline comparisons fair.
+
+The engine is **event-sourced** (DESIGN.md §7): every state transition is
+published as a typed event on ``self.bus``; ``Telemetry`` derives all of its
+aggregates as a bus subscriber, and further subscribers (the CAS journal,
+per-job feeds) hang off the same stream. Handlers never poke telemetry
+fields directly — the event log *is* the control plane's history.
 """
 from __future__ import annotations
 
@@ -15,12 +21,14 @@ import statistics
 from dataclasses import dataclass, field
 from typing import Any
 
+from . import events as E
 from .autoscaler import Autoscaler, AutoscalerConfig
 from .backends import KubernetesBackend, Provisioner
 from .cas import CAS
 from .consolidation import ReadyPool
 from .cost_model import DEVICE_CLASSES, model_vram_gb
 from .dag import OpState, OperatorSpec, OpType, TRAINING_TYPES, WorkflowDAG
+from .events import EventBus
 from .scheduler import (FlowMeshScheduler, SchedulerPolicy, estimate_exec,
                         feasible, vram_needed_gb)
 from .telemetry import Telemetry
@@ -49,6 +57,9 @@ class EngineConfig:
     dispatch_window_s: float = 0.25
     #: virtual-time stall guard: abort if no progress for this long
     stall_limit_s: float = 1800.0
+    #: ring-buffer size for telemetry distribution fields (None = full
+    #: history; set for never-restarting service deployments)
+    telemetry_window: int | None = None
     seed: int = 0
 
 
@@ -61,7 +72,11 @@ class FlowMeshEngine:
                  admission: Any | None = None) -> None:
         self.policy = policy or FlowMeshScheduler()
         self.executor = executor
-        self.cas = cas or CAS()
+        # identity check, not truthiness: an *empty* CAS is falsy (len == 0),
+        # and `cas or CAS()` would silently swap a fresh DiskCAS for an
+        # in-memory store — artifacts (and the journal's replay contract)
+        # would never reach disk
+        self.cas = cas if cas is not None else CAS()
         self.backend = backend or KubernetesBackend()
         self.cfg = config or EngineConfig()
         self.autoscaler = Autoscaler(autoscaler or AutoscalerConfig(),
@@ -78,7 +93,13 @@ class FlowMeshEngine:
         self.pool = ReadyPool()
         self.workers: dict[str, Worker] = {}
         self.result_index: dict[str, str] = {}     # H_task -> output hash
-        self.telemetry = Telemetry()
+        #: the control plane's single observable output stream; telemetry,
+        #: journal, and job feeds are all subscribers
+        self.bus = EventBus()
+        self.telemetry = Telemetry(window=self.cfg.telemetry_window)
+        self.bus.subscribe(self.telemetry.on_event)
+        self._arrivals_in_window = 0               # since last autoscale tick
+        self._last_scale_t = 0.0
         self._service_times: dict[str, list[float]] = {}   # h_exec -> durations
         self._unfinished = 0
         self._inflight_batches = 0                 # batch_done events queued
@@ -92,6 +113,11 @@ class FlowMeshEngine:
     # ------------------------------------------------------------- events --
     def _push(self, t: float, kind: str, payload: Any = None) -> None:
         heapq.heappush(self._events, _Event(t, next(self._seq), kind, payload))
+
+    def _emit(self, event: E.FabricEvent) -> E.FabricEvent:
+        """Publish one control-plane event, stamped with the current time."""
+        event.time = self.now
+        return self.bus.publish(event)
 
     # ---------------------------------------------------------- public API --
     def bootstrap_workers(self, device_classes: list[str], *,
@@ -171,7 +197,9 @@ class FlowMeshEngine:
             return False
         if (self._unfinished and
                 ev.time - self._last_progress > self.cfg.stall_limit_s):
-            self.stalled = True
+            if not self.stalled:           # emit once per stall onset
+                self.stalled = True
+                self._emit(E.StallDetected(pending=self._unfinished))
             return False
         heapq.heappop(self._events)
         self.now = max(self.now, ev.time)
@@ -217,6 +245,7 @@ class FlowMeshEngine:
         self._unfinished -= 1
         self._last_progress = self.now
         self.stalled = False       # real progress clears a prior starvation
+        self._emit(E.WorkflowCancelled(dag_id=dag_id, tenant=dag.tenant))
         return True
 
     # ------------------------------------------------------------ handlers --
@@ -229,6 +258,10 @@ class FlowMeshEngine:
         self.dags[dag.dag_id] = dag
         self._last_progress = self.now
         self.stalled = False       # real progress clears a prior starvation
+        self._arrivals_in_window += 1
+        self._emit(E.WorkflowSubmitted(
+            dag_id=dag.dag_id, tenant=dag.tenant, ops=tuple(dag.ops),
+            metadata=dict(dag.metadata)))
         self._arm_recurring()            # service mode: timers may have lapsed
         self._refresh_and_offer(dag)
         self._schedule_dispatch()
@@ -284,8 +317,6 @@ class FlowMeshEngine:
     def _fail_worker(self, w: Worker) -> None:
         """Crash path: atomically return RUNNING work to READY (§3.3)."""
         crashed_at = getattr(w, "crashed_at", self.now)
-        self.telemetry.failures_detected.append(
-            (self.now, w.worker_id, self.now - crashed_at))
         w.state = WorkerState.DEAD
         w.meter.retired_at = self.now
         requeued = 0
@@ -306,7 +337,9 @@ class FlowMeshEngine:
                         # every consumer cancelled mid-flight: abandon the
                         # ghost instead of requeueing work nobody wants
                         self.pool.finish(g)
-        self.telemetry.retries += requeued
+        self._emit(E.WorkerFailed(worker_id=w.worker_id,
+                                  detect_s=self.now - crashed_at,
+                                  requeued=requeued))
         self.backend.terminate(w.worker_id, self.now)
 
     def _on_autoscale(self, _=None) -> None:
@@ -331,16 +364,28 @@ class FlowMeshEngine:
             self.workers[wid] = w
             self.autoscaler.pending_leases += 1
             self._push(ready_at, "worker_ready", wid)
+            self._emit(E.WorkerLeased(worker_id=wid,
+                                      device_class=offer.dev.name,
+                                      backend=self.backend.name,
+                                      ready_at=ready_at))
+        retired = 0
         for wid in decision.retire:
             w = self.workers.get(wid)
             if w and w.state is WorkerState.ACTIVE and w.current is None:
                 w.state = WorkerState.DEAD
                 w.meter.retired_at = self.now
                 self.backend.terminate(wid, self.now)
+                self._emit(E.WorkerRetired(worker_id=wid))
+                retired += 1
         n_active = sum(1 for w in self.workers.values()
                        if w.state is WorkerState.ACTIVE)
-        self.telemetry.scaling_trace.append(
-            (self.now, n_active, self.pool.depth))
+        elapsed = self.now - self._last_scale_t
+        rate = self._arrivals_in_window / elapsed if elapsed > 0 else 0.0
+        self._arrivals_in_window = 0
+        self._last_scale_t = self.now
+        self._emit(E.ScaleDecision(
+            active_workers=n_active, pending_depth=self.pool.depth,
+            arriving_rate=rate, leased=len(decision.leases), retired=retired))
         if self._unfinished:
             self._arm("autoscale")
 
@@ -369,7 +414,8 @@ class FlowMeshEngine:
                               speculative=True)
         g.running_on.add(w.worker_id)
         g.attempts += 1
-        self.telemetry.speculative_launches += 1
+        self._emit(E.SpeculativeLaunched(h_task=g.h_task,
+                                         worker=w.worker_id))
         w.admit(batch)
         if w.current is None:
             self._start_next(w)
@@ -377,6 +423,9 @@ class FlowMeshEngine:
     # ------------------------------------------------------- dispatch path --
     def _refresh_and_offer(self, dag: WorkflowDAG) -> None:
         for name in dag.refresh_ready(self.cas):
+            self._emit(E.OpReady(
+                dag_id=dag.dag_id, tenant=dag.tenant, op=name,
+                h_task=dag.h_task[name], h_exec=dag.ops[name].h_exec()))
             self._offer(dag, name)
 
     def _offer(self, dag: WorkflowDAG, op_name: str) -> None:
@@ -386,22 +435,26 @@ class FlowMeshEngine:
         if disp == "cached":
             # instant completion from the result index (dedup across time)
             out = self.result_index[dag.h_task[op_name]]
-            self.telemetry.dedup_savings += 1
+            self._emit(E.DedupHit(
+                dag_id=dag.dag_id, tenant=dag.tenant, op=op_name,
+                h_task=dag.h_task[op_name], source="index", savings=1))
             if self.admission:
                 self.admission.note_deduped(dag.tenant, 1)
             dag.state[op_name] = OpState.COMPLETED
             dag.complete(op_name, out, executed=False, worker=None,
                          now=self.now)
+            self._emit(E.OpCompleted(
+                dag_id=dag.dag_id, tenant=dag.tenant, op=op_name,
+                h_task=dag.h_task[op_name], output_hash=out, executed=False,
+                worker=None, input_hashes=dag.input_hashes.get(op_name, ())))
             self._after_complete(dag)
 
     def _after_complete(self, dag: WorkflowDAG) -> None:
         if dag.done:
             self._unfinished -= 1
-            lat = dag.latency or 0.0
-            self.telemetry.dag_latencies.append(lat)
-            self.telemetry.dag_completions.append(self.now)
-            self.telemetry.tenant_latencies.setdefault(
-                dag.tenant, []).append(lat)
+            self._emit(E.WorkflowCompleted(
+                dag_id=dag.dag_id, tenant=dag.tenant,
+                latency=dag.latency or 0.0))
             if self.admission:
                 self.admission.note_workflow_done(dag, self.now)
         else:
@@ -432,7 +485,12 @@ class FlowMeshEngine:
             batch = p.to_batch(self.now)
             for g in p.groups:
                 if g.dispatch_at is None:
-                    self.telemetry.op_queue_waits.append(self.now - g.ready_at)
+                    self._emit(E.OpDispatched(
+                        h_task=g.h_task, h_exec=g.h_exec,
+                        worker=p.worker.worker_id,
+                        queue_wait=self.now - g.ready_at,
+                        tenants=tuple(sorted({c.tenant
+                                              for c in g.consumers}))))
                     if self.admission:
                         self.admission.note_dispatch(g)
                 g.dispatch_at = self.now
@@ -453,17 +511,16 @@ class FlowMeshEngine:
         hot = (not spec.model_id) or w.is_hot_for(spec.h_model)
         result = self.executor.execute(batch, w, self.cas)
         dur = (result.duration_s + result.load_s) * w.perf_noise
-        if result.load_s > 0:
-            self.telemetry.model_loads += 1
-        elif spec.model_id:
-            self.telemetry.hot_hits += 1
+        self._emit(E.BatchStarted(
+            worker=w.worker_id, h_exec=batch.h_exec,
+            n_groups=len(batch.groups), duration=dur, load_s=result.load_s,
+            flops=result.flops, model_id=spec.model_id))
         if spec.model_id and not result.failed:
             w.make_resident(spec.h_model, spec.model_id)
         for g in batch.groups:
             w.local_cache.update(g.input_hashes)
         w.meter.note_active(dur)
         w.busy_until = self.now + dur
-        self.telemetry.total_flops += result.flops
         self._inflight_batches += 1
         self._push(w.busy_until, "batch_done", (w.worker_id, batch, result, dur))
 
@@ -480,9 +537,9 @@ class FlowMeshEngine:
         if result.failed:
             # e.g. wrong resource spec: worker proactively reports shortage;
             # control plane corrects the demand hint and resubmits (§5.3)
-            self.telemetry.retries += len(batch.groups)
-            self.telemetry.failures_detected.append(
-                (self.now, f"{wid}:{result.failure}", dur))
+            self._emit(E.BatchFailed(
+                worker=wid, h_exec=batch.h_exec, failure=result.failure or "",
+                n_groups=len(batch.groups), duration=dur))
             for g in batch.groups:
                 g.running_on.discard(wid)
                 if result.failure == "resource_shortage":
@@ -506,28 +563,31 @@ class FlowMeshEngine:
             return
 
         self._service_times.setdefault(batch.h_exec, []).append(dur)
-        self.telemetry.executions += 1
-        self.telemetry.batch_sizes.append(
-            sum(g.fanout for g in batch.groups))
+        self._emit(E.BatchDone(
+            worker=wid, h_exec=batch.h_exec, n_groups=len(batch.groups),
+            batch_size=sum(g.fanout for g in batch.groups), duration=dur))
+        cost_share = dur * w.dev.price_hr / 3600.0 / max(1, len(batch.groups))
         for g, out in zip(batch.groups, result.outputs):
             key, won = self.cas.publish(out)
             w.local_cache.add(key)
             if g.done:
                 # a speculative rival already published — discard by identity
-                self.telemetry.speculative_discards += 1
+                self._emit(E.SpeculativeDiscarded(h_task=g.h_task,
+                                                  worker=wid))
                 continue
             g.running_on.discard(wid)
             self.result_index[g.h_task] = key
             self.pool.finish(g)
+            billed = [c.tenant for c in g.consumers]
             if self.admission:
-                self.admission.note_executed(
-                    g, cost=dur * w.dev.price_hr / 3600.0
-                    / max(1, len(batch.groups)),
-                    duration=dur, now=self.now)
-            savings = g.fanout - 1
-            if savings > 0:
-                self.telemetry.dedup_savings += savings
-            self.telemetry.op_service_times.append(dur)
+                billed = self.admission.note_executed(
+                    g, cost=cost_share, duration=dur, now=self.now)
+            self._emit(E.GroupCompleted(
+                h_task=g.h_task, h_exec=g.h_exec, worker=wid, duration=dur,
+                output_hash=key, cost=cost_share,
+                consumers=tuple((c.dag_id, c.op_name, c.tenant)
+                                for c in g.consumers),
+                billed=tuple(billed)))
             # ordered dedup: refresh consumer DAGs in consumer order, not in
             # set-hash order — dag ids are strings, and hash-ordered
             # iteration would make the schedule depend on the process hash
@@ -538,6 +598,11 @@ class FlowMeshEngine:
                 dag.complete(inst.op_name, key,
                              executed=(inst is g.consumers[0]),
                              worker=wid, now=self.now)
+                self._emit(E.OpCompleted(
+                    dag_id=inst.dag_id, tenant=inst.tenant, op=inst.op_name,
+                    h_task=g.h_task, output_hash=key,
+                    executed=(inst is g.consumers[0]), worker=wid,
+                    input_hashes=g.input_hashes))
             for d in touched:
                 self._after_complete(self.dags[d])
         w.current = None
@@ -551,8 +616,9 @@ class FlowMeshEngine:
             d, j = w.meter.totals(self.now)
             cost += d
             energy += j
-        self.telemetry.total_cost = cost
-        self.telemetry.total_energy_j = energy
+        # $ and J are meter integrals, not transitions: snapshotted through
+        # the bus so telemetry stays purely event-derived
+        self._emit(E.CostSnapshot(total_cost=cost, total_energy_j=energy))
 
     # ----------------------------------------------------------- MF helper --
     def _monolithize(self, dag: WorkflowDAG) -> WorkflowDAG:

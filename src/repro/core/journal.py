@@ -1,0 +1,90 @@
+"""CAS-backed event journal: the control plane's durable history.
+
+A bus subscriber that appends event batches to the CAS as a hash chain
+(DESIGN.md §7). Each flushed segment is one immutable blob::
+
+    {"prev": <key of previous segment | None>, "events": [event dicts]}
+
+and a single mutable *named ref* (``CAS.set_ref``) points at the newest
+segment. The write order is blob-then-ref, so a crash mid-flush leaves at
+worst an orphan blob — the head never dangles, and replay always sees a
+consistent prefix of history. Because every segment names its predecessor
+by content hash, the chain is tamper-evident end to end (``DiskCAS`` also
+re-hashes on read).
+
+``replay()`` walks the chain head→tail, reverses it, and yields typed
+events oldest-first — the input to ``FabricService.restore_from_journal``
+and to offline provenance tooling (``fabric_cli.py tail --journal``).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from .cas import CAS
+from .events import FabricEvent, event_from_dict
+
+HEAD_REF = "journal-head"
+
+
+class EventJournal:
+    """Append-only, chained event log on top of a CAS."""
+
+    def __init__(self, cas: CAS, *, batch_size: int = 256,
+                 ref: str = HEAD_REF) -> None:
+        self.cas = cas
+        self.batch_size = max(1, batch_size)
+        self.ref = ref
+        self._buf: list[dict] = []
+        self.segments_written = 0
+        self.events_written = 0
+
+    # ------------------------------------------------------------- write --
+    def on_event(self, e: FabricEvent) -> None:
+        """Bus subscriber: buffer the event; flush a full batch."""
+        self._buf.append(e.to_dict())
+        if len(self._buf) >= self.batch_size:
+            self.flush()
+
+    def flush(self) -> str | None:
+        """Persist buffered events as one chained segment; returns its key
+        (None when the buffer was empty)."""
+        if not self._buf:
+            return None
+        key = self.cas.put({"prev": self.head, "events": self._buf})
+        self.cas.set_ref(self.ref, key)     # blob first, then the head
+        self.segments_written += 1
+        self.events_written += len(self._buf)
+        self._buf = []
+        return key
+
+    @property
+    def head(self) -> str | None:
+        return self.cas.get_ref(self.ref)
+
+    @property
+    def pending(self) -> int:
+        """Buffered events not yet durable (lost if the process dies now)."""
+        return len(self._buf)
+
+    # -------------------------------------------------------------- read --
+    def _segment_keys(self) -> list[str]:
+        keys: list[str] = []
+        key = self.head
+        while key is not None:
+            keys.append(key)
+            key = self.cas.get(key)["prev"]
+        keys.reverse()                      # oldest first
+        return keys
+
+    def replay(self) -> Iterator[FabricEvent]:
+        """Yield the journaled history oldest-first as typed events.
+        Events still sitting in the write buffer are included (so an
+        in-process reader sees everything the bus has published)."""
+        for key in self._segment_keys():
+            for d in self.cas.get(key)["events"]:
+                yield event_from_dict(d)
+        for d in self._buf:
+            yield event_from_dict(d)
+
+    def __len__(self) -> int:
+        return self.events_written + len(self._buf)

@@ -31,6 +31,9 @@ class TaskInstance:
     dag_id: str
     op_name: str
     tenant: str = "default"    # owning tenant (admission metering / fair share)
+    #: absolute workflow deadline (submitted_at + deadline_s metadata), or
+    #: None — admission folds this into fair share as an EDF-flavored boost
+    deadline_at: float | None = None
 
 
 @dataclass

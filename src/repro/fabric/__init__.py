@@ -1,20 +1,24 @@
 """FlowMesh fabric: the tenant-facing service layer.
 
 ``spec``       — declarative workflow documents + named templates
-``admission``  — per-tenant quotas, fair share, usage metering
-``service``    — the long-lived FabricService wrapping one live engine
+``admission``  — per-tenant quotas, fair share (+EDF boost), usage metering
+``service``    — the long-lived FabricService wrapping one live engine,
+                 with per-job event feeds and journal restore
 ``api``        — in-process request/response handler table (HTTP-shaped)
+``http``       — socket server + urllib client over the same handler table
 """
 from .admission import (AdmissionController, QuotaExceeded, TenantQuota,
                         TenantUsage)
 from .api import FabricAPI
-from .service import FabricService, JobStatus
+from .http import FabricHTTPServer, RemoteAPI
+from .service import TERMINAL_STATUSES, FabricService, JobStatus
 from .spec import (SpecError, compile_spec, default_resource_class,
                    list_templates, render_template, validate_spec)
 
 __all__ = [
     "AdmissionController", "QuotaExceeded", "TenantQuota", "TenantUsage",
-    "FabricAPI", "FabricService", "JobStatus",
-    "SpecError", "compile_spec", "default_resource_class",
+    "FabricAPI", "FabricHTTPServer", "RemoteAPI", "FabricService",
+    "JobStatus", "TERMINAL_STATUSES", "SpecError", "compile_spec",
+    "default_resource_class",
     "list_templates", "render_template", "validate_spec",
 ]

@@ -60,7 +60,14 @@ class QuotaExceeded(Exception):
 
 
 class AdmissionController:
-    def __init__(self, default_quota: TenantQuota | None = None) -> None:
+    #: EDF-flavored deadline pressure: a group whose nearest consumer
+    #: deadline has ``slack`` seconds left is ordered as if its tenant's
+    #: virtual time were ``deadline_boost / max(1, slack)`` smaller. Bounded
+    #: (slack clamped at 1 s) so a hopeless deadline cannot permanently
+    #: outrank every other tenant's clock.
+    def __init__(self, default_quota: TenantQuota | None = None, *,
+                 deadline_boost: float = 0.05) -> None:
+        self.deadline_boost = deadline_boost
         self.default_quota = default_quota or TenantQuota()
         self.quotas: dict[str, TenantQuota] = {}
         self.usage: dict[str, TenantUsage] = defaultdict(TenantUsage)
@@ -91,6 +98,12 @@ class AdmissionController:
             raise QuotaExceeded(
                 dag.tenant, f"budget exhausted "
                 f"(${u.spend_usd:.4f} of ${q.budget_usd:.4f})")
+        self._workflow_started(dag.tenant)
+
+    # shared by the live note_* hooks and journal replay — one body, so
+    # restored accounting cannot drift from what the live fabric computed
+    def _workflow_started(self, tenant: str) -> None:
+        u = self.usage[tenant]
         if u.active_workflows == 0:
             # WFQ start-time rule: a joining (or returning) tenant enters at
             # the system virtual time, not at zero — otherwise a newcomer
@@ -100,15 +113,21 @@ class AdmissionController:
         u.submitted += 1
         u.active_workflows += 1
 
-    def note_workflow_done(self, dag: WorkflowDAG, now: float) -> None:
-        u = self.usage[dag.tenant]
+    def _workflow_done(self, tenant: str) -> None:
+        u = self.usage[tenant]
         u.active_workflows = max(0, u.active_workflows - 1)
         u.completed += 1
 
-    def note_workflow_cancelled(self, dag: WorkflowDAG) -> None:
-        u = self.usage[dag.tenant]
+    def _workflow_cancelled(self, tenant: str) -> None:
+        u = self.usage[tenant]
         u.active_workflows = max(0, u.active_workflows - 1)
         u.cancelled += 1
+
+    def note_workflow_done(self, dag: WorkflowDAG, now: float) -> None:
+        self._workflow_done(dag.tenant)
+
+    def note_workflow_cancelled(self, dag: WorkflowDAG) -> None:
+        self._workflow_cancelled(dag.tenant)
 
     # ------------------------------------------------ ready-pool boundary --
     def _vtime(self, tenant: str) -> float:
@@ -151,7 +170,8 @@ class AdmissionController:
         out: dict[str, list[ExecutionGroup]] = {}
         for h_exec, groups in pending.items():
             ordered = sorted(groups, key=lambda g: (
-                min((vtime[c.tenant] for c in g.consumers), default=0.0),
+                min((vtime[c.tenant] for c in g.consumers), default=0.0)
+                - self._edf_boost(g, now),
                 g.ready_at))
             visible: list[ExecutionGroup] = []
             for g in ordered:
@@ -168,6 +188,16 @@ class AdmissionController:
             if visible:
                 out[h_exec] = visible
         return out
+
+    def _edf_boost(self, g: ExecutionGroup, now: float) -> float:
+        """Deadline pressure for a group: earliest consumer deadline wins
+        (SLO-aware admission — specs carry ``deadline_s`` into DAG metadata
+        and the ready pool stamps it onto each TaskInstance)."""
+        deadline = min((c.deadline_at for c in g.consumers
+                        if c.deadline_at is not None), default=None)
+        if deadline is None:
+            return 0.0
+        return self.deadline_boost / max(1.0, deadline - now)
 
     # ------------------------------------------------------ engine events --
     def note_dispatch(self, g: ExecutionGroup) -> None:
@@ -189,18 +219,27 @@ class AdmissionController:
         self._uncount(g)
 
     def note_executed(self, g: ExecutionGroup, *, cost: float,
-                      duration: float, now: float) -> None:
+                      duration: float, now: float) -> list[str]:
         """One batched execution finished for this group: credit the first
         consumer with the run, every later consumer with a dedup save, and
         split the cost across all consumer instances (shared work, shared
         bill). If every consumer was detached by cancellation mid-flight,
         the work still ran on their behalf — bill the tenants recorded at
-        dispatch, or submit-and-cancel would burn GPU time for free."""
+        dispatch, or submit-and-cancel would burn GPU time for free.
+
+        Returns the billed tenant list (in charge order) so the engine can
+        record it on the ``GroupCompleted`` event for journal replay."""
         dispatched_for = self._counted.pop(id(g), [])
         for t in dispatched_for:
             self.usage[t].inflight_ops = max(
                 0, self.usage[t].inflight_ops - 1)
         tenants = [c.tenant for c in g.consumers] or list(dispatched_for)
+        self._charge(tenants, cost, duration)
+        return tenants
+
+    def _charge(self, tenants: list[str], cost: float,
+                duration: float) -> None:
+        """Shared accounting core for the live path and journal replay."""
         if not tenants:
             return
         share = cost / len(tenants)
@@ -222,6 +261,32 @@ class AdmissionController:
     def note_deduped(self, tenant: str, n: int = 1) -> None:
         """Ops satisfied instantly from the result index (dedup across time)."""
         self.usage[tenant].ops_deduped += n
+
+    # ------------------------------------------------------ journal replay --
+    def replay_event(self, e) -> None:
+        """Rebuild usage accounting from one journaled event (the restore
+        path — see ``FabricService.restore_from_journal``). Mirrors the
+        live hooks; transient scheduling counters (``inflight_ops``,
+        ``held_ops``) are runtime-only state and are not reconstructed."""
+        kind = e.kind
+        if kind == "workflow_submitted":
+            self._workflow_started(e.tenant)
+        elif kind == "workflow_completed":
+            self._workflow_done(e.tenant)
+        elif kind == "workflow_cancelled":
+            self._workflow_cancelled(e.tenant)
+        elif kind == "job_rejected":
+            self.usage[e.tenant].rejected += 1
+        elif kind == "dedup_hit":
+            self.note_deduped(e.tenant, e.savings)
+        elif kind == "group_completed":
+            self._charge(list(e.billed), e.cost, e.duration)
+
+    def replay_interrupted(self, tenant: str) -> None:
+        """A job that was live when the fabric died: its workflow state is
+        unrecoverable (in-flight engine state is not journaled), so the
+        restored record is closed out as cancelled."""
+        self._workflow_cancelled(tenant)
 
     # ----------------------------------------------------------- reporting --
     def usage_snapshot(self, tenant: str) -> dict:

@@ -12,12 +12,17 @@ Routes:
     GET  /workflows/templates
     GET  /jobs                       ?tenant=<id>
     GET  /jobs/{id}
+    GET  /jobs/{id}/events           ?since=<cursor>&limit=<n>
     GET  /jobs/{id}/lineage
     POST /jobs/{id}/cancel
     GET  /tenants/{id}/usage
     GET  /health
     POST /pump                       {"max_steps": n?, "until": t?}
     POST /drain                      {"until": t?}   (run_until_idle)
+
+The events feed is cursor-based: pass the ``cursor`` from the previous
+response as ``since`` to receive only newer events — no duplicates, no
+gaps, suitable for long-polling (the HTTP shim adds ``wait_s``).
 """
 from __future__ import annotations
 
@@ -37,6 +42,7 @@ class FabricAPI:
             ("GET", ("workflows", "templates"), self._get_templates),
             ("GET", ("jobs",), self._list_jobs),
             ("GET", ("jobs", "{id}"), self._get_job),
+            ("GET", ("jobs", "{id}", "events"), self._get_events),
             ("GET", ("jobs", "{id}", "lineage"), self._get_lineage),
             ("POST", ("jobs", "{id}", "cancel"), self._cancel_job),
             ("GET", ("tenants", "{id}", "usage"), self._get_usage),
@@ -121,6 +127,21 @@ class FabricAPI:
         if job is None:
             return 404, {"error": "no_such_job", "job_id": params["id"]}
         return 200, job
+
+    def _get_events(self, params, query, body) -> tuple[int, Any]:
+        try:
+            since = int(query.get("since", -1))
+            limit = int(query["limit"]) if "limit" in query else None
+        except (TypeError, ValueError):
+            return 400, {"error": "invalid_query",
+                         "detail": ["'since'/'limit' must be integers"]}
+        if limit is not None and limit <= 0:
+            return 400, {"error": "invalid_query",
+                         "detail": ["'limit' must be positive"]}
+        feed = self.service.events(params["id"], since=since, limit=limit)
+        if feed is None:
+            return 404, {"error": "no_such_job", "job_id": params["id"]}
+        return 200, feed
 
     def _get_lineage(self, params, query, body) -> tuple[int, Any]:
         lin = self.service.lineage(params["id"])

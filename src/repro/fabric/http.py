@@ -1,0 +1,214 @@
+"""HTTP shim: the FabricAPI handler table behind a real socket server.
+
+Stdlib-only (``http.server`` + ``urllib``), as the ROADMAP prescribes: the
+in-process ``FabricAPI.handle()`` already speaks (method, path, JSON body) —
+this module just moves those triples across TCP so tenants can drive a
+fabric from another process.
+
+  * ``FabricHTTPServer`` — threading HTTP server. All API calls are
+    serialized through one lock (the engine is single-threaded by design);
+    an optional **auto-pump** thread advances the live engine between
+    requests so submitted work makes progress without a client driving
+    ``POST /pump``.
+  * Long-polling — ``GET /jobs/{id}/events?since=<cursor>&wait_s=<s>``
+    holds the request open (lock released between probes) until new events
+    land, the job goes terminal, or the wait budget expires: a tenant can
+    ``tail`` a job feed over plain HTTP with no websockets.
+  * ``RemoteAPI`` — urllib client with the same ``handle()`` signature as
+    ``FabricAPI``, so the CLI/examples/tests run unchanged against either
+    an in-process fabric or a remote one.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qsl, urlsplit
+
+from .api import FabricAPI
+from .service import TERMINAL_STATUSES as _TERMINAL
+
+#: cap one long-poll hold; clients re-issue with the same cursor
+MAX_WAIT_S = 30.0
+
+
+class FabricHTTPServer:
+    """Serve one FabricAPI over TCP. ``port=0`` picks a free port."""
+
+    def __init__(self, api: FabricAPI, host: str = "127.0.0.1",
+                 port: int = 0, *, auto_pump: bool = True,
+                 pump_steps: int = 256, pump_interval_s: float = 0.02,
+                 ) -> None:
+        self.api = api
+        self.lock = threading.RLock()
+        self.auto_pump = auto_pump
+        self.pump_steps = pump_steps
+        self.pump_interval_s = pump_interval_s
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._pump_thread: threading.Thread | None = None
+        self.httpd = ThreadingHTTPServer((host, port), self._handler_class())
+        self.httpd.daemon_threads = True
+        self.host, self.port = self.httpd.server_address[:2]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    # ------------------------------------------------------------- driving --
+    def _pump_loop(self) -> None:
+        svc = self.api.service
+        while not self._stop.is_set():
+            with self.lock:
+                stepped = svc.pump(max_steps=self.pump_steps)
+                if stepped == 0 and getattr(svc, "journal", None) is not None \
+                        and svc.journal.pending:
+                    svc.journal.flush()    # idle point: make history durable
+            if stepped == 0:        # idle or stalled: back off, don't spin
+                self._stop.wait(self.pump_interval_s)
+
+    def _start_pump(self) -> None:
+        if self.auto_pump:
+            self._pump_thread = threading.Thread(target=self._pump_loop,
+                                                 daemon=True)
+            self._pump_thread.start()
+
+    def start(self) -> "FabricHTTPServer":
+        """Run the server (and pump) in daemon threads; returns self."""
+        t = threading.Thread(target=self.httpd.serve_forever, daemon=True)
+        t.start()
+        self._threads.append(t)
+        self._start_pump()
+        return self
+
+    def serve_forever(self) -> None:
+        """Foreground variant for the CLI ``serve`` command."""
+        self._start_pump()
+        try:
+            self.httpd.serve_forever()
+        finally:
+            self.stop()
+
+    def stop(self) -> None:
+        if self._stop.is_set():
+            return
+        self._stop.set()
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        # the pump thread may buffer more events after any flush we take —
+        # join it first so the shutdown flush is really the last word
+        if self._pump_thread is not None:
+            self._pump_thread.join(timeout=10.0)
+        svc = self.api.service
+        if getattr(svc, "journal", None) is not None:
+            with self.lock:
+                svc.journal.flush()    # clean shutdown loses nothing
+
+    def __enter__(self) -> "FabricHTTPServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------ handler --
+    def _handle_locked(self, method: str, path: str, body):
+        with self.lock:
+            return self.api.handle(method, path, body)
+
+    def _handle(self, method: str, path: str, body):
+        """One request; events GETs honor ``wait_s`` by re-probing with the
+        lock released so the pump thread keeps making progress."""
+        url = urlsplit(path)
+        query = dict(parse_qsl(url.query))
+        wait_s = 0.0
+        if method == "GET" and url.path.rstrip("/").endswith("/events"):
+            try:
+                wait_s = min(float(query.get("wait_s", 0.0)), MAX_WAIT_S)
+            except (TypeError, ValueError):
+                return 400, {"error": "invalid_query",
+                             "detail": ["'wait_s' must be a number"]}
+        deadline = time.monotonic() + wait_s
+        while True:
+            code, payload = self._handle_locked(method, path, body)
+            if (code != 200 or payload.get("events")
+                    or payload.get("status") in _TERMINAL
+                    or time.monotonic() >= deadline):
+                return code, payload
+            time.sleep(0.01)
+
+    def _handler_class(self):
+        shim = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, *args) -> None:      # quiet by default
+                pass
+
+            def _respond(self, code: int, payload) -> None:
+                data = json.dumps(payload, default=str).encode()
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(data)))
+                self.end_headers()
+                self.wfile.write(data)
+
+            def _dispatch(self, method: str) -> None:
+                body = None
+                length = int(self.headers.get("Content-Length") or 0)
+                if length:
+                    try:
+                        body = json.loads(self.rfile.read(length))
+                    except (ValueError, UnicodeDecodeError):
+                        self._respond(400, {
+                            "error": "invalid_body",
+                            "detail": ["request body must be JSON"]})
+                        return
+                try:
+                    code, payload = shim._handle(method, self.path, body)
+                except Exception as e:      # never leak a stack over the wire
+                    code, payload = 500, {"error": "internal_error",
+                                          "detail": [str(e)]}
+                self._respond(code, payload)
+
+            def do_GET(self) -> None:
+                self._dispatch("GET")
+
+            def do_POST(self) -> None:
+                self._dispatch("POST")
+
+            def do_DELETE(self) -> None:
+                self._dispatch("DELETE")
+
+        return Handler
+
+
+class RemoteAPI:
+    """Drop-in for ``FabricAPI`` that speaks to a ``FabricHTTPServer``."""
+
+    def __init__(self, base_url: str, *, timeout_s: float = 60.0) -> None:
+        self.base_url = base_url.rstrip("/")
+        self.timeout_s = timeout_s
+
+    def handle(self, method: str, path: str,
+               body: dict | None = None) -> tuple[int, object]:
+        data = None if body is None else json.dumps(body).encode()
+        req = urllib.request.Request(
+            self.base_url + path, data=data, method=method.upper(),
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+                return resp.status, json.loads(resp.read() or b"null")
+        except urllib.error.HTTPError as e:
+            try:
+                payload = json.loads(e.read() or b"null")
+            except ValueError:
+                payload = {"error": "non_json_response"}
+            return e.code, payload
+        except OSError as e:      # URLError / refused / timeout: the server
+            # is unreachable — a structured error, not a raw traceback
+            return 503, {"error": "unreachable",
+                         "detail": [f"{self.base_url}: {e}"]}

@@ -8,14 +8,26 @@ ids, and the caller pumps the engine incrementally (``pump`` /
 Nothing restarts between submissions — dedup, worker warmth, and the result
 index all persist across the fabric's lifetime, which is exactly what makes
 cross-tenant consolidation pay off.
+
+The service is an **event-plane consumer** (DESIGN.md §7): it subscribes to
+the engine's bus to maintain per-job event feeds (cursor-based incremental
+reads behind ``GET /jobs/{id}/events``), optionally attaches a CAS-backed
+``EventJournal``, and — after a restart — ``restore_from_journal`` replays
+that journal to rebuild job records, lineage, per-tenant usage accounting,
+and the result index (so dedup keeps working across restarts).
 """
 from __future__ import annotations
 
+import bisect
 import enum
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
+from repro.core import events as E
 from repro.core.control_plane import EngineConfig, FlowMeshEngine
-from repro.core.dag import WorkflowDAG
+from repro.core.cost_model import DEVICE_CLASSES
+from repro.core.dag import OpState, WorkflowDAG
+from repro.core.journal import EventJournal
+from repro.core.scheduler import estimate_exec
 from repro.core.simulator import SimExecutor
 from repro.core.telemetry import Telemetry
 from repro.core.worker import WorkerState
@@ -24,6 +36,10 @@ from .admission import AdmissionController, QuotaExceeded, TenantQuota
 from .spec import SpecError, compile_spec, render_template
 
 DEFAULT_DEVICE_CLASSES = ("h100-nvl-94g", "rtx4090-48g", "rtx4090-24g")
+
+#: event kinds that appear in a job's tenant-visible feed
+FEED_KINDS = {"workflow_submitted", "op_ready", "dedup_hit", "op_completed",
+              "workflow_completed", "workflow_cancelled", "job_rejected"}
 
 
 class JobStatus(str, enum.Enum):
@@ -34,15 +50,28 @@ class JobStatus(str, enum.Enum):
     CANCELLED = "cancelled"
 
 
+#: statuses with no further transitions — feed pollers stop here (single
+#: source for the CLI tail, the HTTP long-poll, and the smoke scripts)
+TERMINAL_STATUSES = frozenset((JobStatus.COMPLETED.value,
+                               JobStatus.CANCELLED.value,
+                               JobStatus.REJECTED.value))
+
+
 @dataclass
 class JobRecord:
     job_id: str
     tenant: str
-    dag: WorkflowDAG
     submitted: bool            # False => rejected at admission
     submitted_at: float
+    #: live records hold the compiled DAG; journal-restored records hold
+    #: None and answer queries from the event-sourced fields below
+    dag: WorkflowDAG | None = None
     error: str | None = None
     cancelled: bool = False
+    op_states: dict[str, str] = field(default_factory=dict)
+    lineage_rows: list[dict] = field(default_factory=list)
+    metadata: dict = field(default_factory=dict)
+    completed_at: float | None = None
 
 
 class FabricService:
@@ -53,7 +82,8 @@ class FabricService:
                  executor=None, policy=None, config: EngineConfig | None = None,
                  autoscaler=None,
                  device_classes: tuple[str, ...] = DEFAULT_DEVICE_CLASSES,
-                 seed: int = 0, retention: int = 10_000) -> None:
+                 seed: int = 0, retention: int = 10_000,
+                 cas=None, journal: EventJournal | None = None) -> None:
         #: terminal (completed/cancelled/rejected) job records kept queryable;
         #: beyond this the oldest are evicted so a fabric that never restarts
         #: does not grow without bound. Usage accounting is unaffected.
@@ -62,17 +92,149 @@ class FabricService:
         if engine is None:
             engine = FlowMeshEngine(
                 policy=policy, executor=executor or SimExecutor(seed=seed),
-                config=config or EngineConfig(seed=seed),
+                cas=cas, config=config or EngineConfig(seed=seed),
                 autoscaler=autoscaler, admission=self.admission)
             engine.bootstrap_workers(list(device_classes))
         else:
             engine.admission = self.admission
         self.engine = engine
         self.jobs: dict[str, JobRecord] = {}
+        self._restored = False
+        #: per-job event feeds: job_id -> [event dicts] (bus-seq ordered)
+        self._feeds: dict[str, list[dict]] = {}
+        self.engine.bus.subscribe(self._on_event)
+        self.journal = journal
+        if journal is not None:
+            self.engine.bus.subscribe(journal.on_event)
+        self._ref_dev = DEVICE_CLASSES["h100-nvl-94g"]
 
     # ------------------------------------------------------------ tenants --
     def set_quota(self, tenant: str, quota: TenantQuota) -> None:
         self.admission.set_quota(tenant, quota)
+
+    # ------------------------------------------------------- event plane ----
+    def _on_event(self, e: E.FabricEvent) -> None:
+        """Bus subscriber: route job-scoped events into per-job feeds."""
+        if e.kind not in FEED_KINDS:
+            return
+        dag_id = getattr(e, "dag_id", None)
+        if dag_id in self.jobs:
+            self._feeds.setdefault(dag_id, []).append(e.to_dict())
+
+    def events(self, job_id: str, since: int = -1,
+               limit: int | None = None) -> dict | None:
+        """Cursor-based incremental read of one job's event feed.
+
+        Returns events with bus seq strictly greater than ``since`` (so a
+        client that remembers the returned ``cursor`` resumes without
+        duplicates or gaps, across ``pump()`` boundaries and across a
+        journal-restored restart) plus the job's current status — pollers
+        stop when the status is terminal and the feed is drained.
+        """
+        rec = self.jobs.get(job_id)
+        if rec is None:
+            return None
+        feed = self._feeds.get(job_id, [])
+        # feeds append in bus-seq order, so the resume point is a bisect,
+        # not a scan — long-polling re-probes this under the API lock
+        start = bisect.bisect_right(feed, since, key=lambda d: d["seq"])
+        out = feed[start:] if limit is None else feed[start:start + limit]
+        return {
+            "job_id": job_id,
+            "status": self._status(rec).value,
+            "events": out,
+            "cursor": out[-1]["seq"] if out else since,
+        }
+
+    # ----------------------------------------------------------- restore ----
+    def restore_from_journal(self, journal: EventJournal | None = None,
+                             ) -> dict:
+        """Rebuild service state from a journaled event history.
+
+        Replays the chain oldest-first: job records (with per-op states and
+        lineage rows), per-job feeds (original seqs — tenant cursors resume
+        without gaps), per-tenant usage accounting, and the engine's result
+        index (artifacts still in the CAS keep deduping across the restart).
+        Jobs that were live mid-journal are closed out as cancelled with an
+        ``interrupted`` error — their in-flight engine state is gone; thanks
+        to the result index a resubmission only pays for unfinished ops.
+        """
+        journal = journal if journal is not None else self.journal
+        if journal is None:
+            raise ValueError("no journal attached and none given")
+        if self.jobs or self._restored:
+            # replaying into a non-fresh service would double every usage
+            # charge and re-append feed events under their original seqs
+            raise ValueError("restore_from_journal requires a fresh service")
+        self._restored = True
+        n = max_seq = 0
+        for e in journal.replay():
+            n += 1
+            max_seq = max(max_seq, e.seq)
+            self._restore_event(e)
+        self.engine.bus.advance_past(max_seq)
+        self.engine.now = max(self.engine.now,
+                              max((r.completed_at or r.submitted_at
+                                   for r in self.jobs.values()), default=0.0))
+        self.engine._last_progress = self.engine.now
+        interrupted = 0
+        for rec in self.jobs.values():
+            if (rec.submitted and not rec.cancelled
+                    and rec.completed_at is None and rec.dag is None):
+                rec.cancelled = True
+                rec.error = "interrupted by fabric restart"
+                self.admission.replay_interrupted(rec.tenant)
+                interrupted += 1
+        return {"events": n, "jobs": len(self.jobs),
+                "interrupted": interrupted}
+
+    def _restore_event(self, e: E.FabricEvent) -> None:
+        kind = e.kind
+        if kind == "workflow_submitted":
+            self.jobs[e.dag_id] = JobRecord(
+                job_id=e.dag_id, tenant=e.tenant, submitted=True,
+                submitted_at=e.time, dag=None,
+                op_states={op: OpState.PENDING.value for op in e.ops},
+                metadata=dict(e.metadata))
+        elif kind == "job_rejected":
+            self.jobs[e.dag_id] = JobRecord(
+                job_id=e.dag_id, tenant=e.tenant, submitted=False,
+                submitted_at=e.time, dag=None, error=e.reason,
+                op_states={op: OpState.PENDING.value for op in e.ops})
+        else:
+            rec = self.jobs.get(getattr(e, "dag_id", None))
+            if kind == "op_ready" and rec is not None:
+                rec.op_states[e.op] = OpState.READY.value
+            elif kind == "op_completed" and rec is not None:
+                rec.op_states[e.op] = OpState.COMPLETED.value
+                rec.lineage_rows.append({
+                    "op": e.op, "executed": e.executed, "worker": e.worker,
+                    "output_hash": e.output_hash,
+                    "input_hashes": list(e.input_hashes),
+                    "h_task": e.h_task, "t_complete": e.time,
+                })
+            elif kind == "dedup_hit" and rec is not None:
+                rec.op_states[e.op] = OpState.COMPLETED.value
+            elif kind == "workflow_completed" and rec is not None:
+                rec.completed_at = e.time
+            elif kind == "workflow_cancelled":
+                if rec is None:
+                    # cancelled before the arrival event was consumed: the
+                    # journal never saw workflow_submitted, but the tenant
+                    # saw a cancelled job — synthesize the record and the
+                    # submit side of the accounting (the live path counted
+                    # it at admit_workflow time)
+                    rec = self.jobs[e.dag_id] = JobRecord(
+                        job_id=e.dag_id, tenant=e.tenant, submitted=True,
+                        submitted_at=e.time, dag=None)
+                    self.admission.replay_event(E.WorkflowSubmitted(
+                        time=e.time, dag_id=e.dag_id, tenant=e.tenant))
+                rec.cancelled = True
+        if kind == "group_completed" and e.output_hash in self.engine.cas:
+            # dedup across restarts: the artifact survived in the CAS
+            self.engine.result_index[e.h_task] = e.output_hash
+        self.admission.replay_event(e)
+        self._on_event(e)                  # feeds keep their original seqs
 
     # ----------------------------------------------------------- submit ----
     def submit(self, doc: dict) -> dict:
@@ -83,6 +245,11 @@ class FabricService:
         tenant can inspect the reason through the normal job API.
         """
         dag = compile_spec(doc)
+        # the dag-N counter is process-local: after a journal restore the
+        # restarted process starts at dag-0 again, which must not clobber a
+        # restored record (or any still-queryable terminal job)
+        while dag.dag_id in self.jobs or dag.dag_id in self.engine.dags:
+            dag = compile_spec(doc)
         rec = JobRecord(job_id=dag.dag_id, tenant=dag.tenant, dag=dag,
                         submitted=False, submitted_at=self.engine.now)
         self.jobs[rec.job_id] = rec
@@ -90,6 +257,9 @@ class FabricService:
             self.admission.admit_workflow(dag)
         except QuotaExceeded as e:
             rec.error = e.reason
+            self.engine.bus.publish(E.JobRejected(
+                time=self.engine.now, dag_id=rec.job_id, tenant=rec.tenant,
+                reason=e.reason, ops=tuple(dag.ops)))
             self._evict_terminal()       # a rejection flood must not pile up
             return self.job(rec.job_id)
         rec.submitted = True
@@ -104,7 +274,8 @@ class FabricService:
         rec = self.jobs.get(job_id)
         if rec is None:
             return None
-        if rec.submitted and not rec.cancelled and not self._dag(rec).done:
+        if rec.submitted and not rec.cancelled and rec.dag is not None \
+                and not self._dag(rec).done:
             if self.engine.cancel(job_id):
                 rec.cancelled = True
                 self.admission.note_workflow_cancelled(rec.dag)
@@ -124,11 +295,14 @@ class FabricService:
         return steps
 
     def run_until_idle(self, until: float | None = None):
-        return self.engine.run_until_idle(until)
+        tel = self.engine.run_until_idle(until)
+        if self.journal is not None:
+            self.journal.flush()       # idle point: make history durable
+        return tel
 
     def _evict_terminal(self) -> None:
         """Drop the oldest terminal job records (and their engine-side DAG
-        state) once more than ``retention`` of them have accumulated."""
+        state and event feed) once more than ``retention`` have accumulated."""
         # hysteresis: trim back to `retention` only once ~10% over it, so at
         # steady state the O(jobs) scan amortizes to O(1) per submission
         if len(self.jobs) <= max(self.retention + 1,
@@ -145,6 +319,7 @@ class FabricService:
                      and jid not in self.engine.dags)]
         for jid in terminal[:max(0, len(terminal) - self.retention)]:
             del self.jobs[jid]                   # insertion order == oldest
+            self._feeds.pop(jid, None)
             self.engine.dags.pop(jid, None)
             self.engine.cancelled.discard(jid)
 
@@ -159,34 +334,93 @@ class FabricService:
             return JobStatus.REJECTED
         if rec.cancelled:
             return JobStatus.CANCELLED
+        if rec.dag is None:                      # journal-restored record
+            return (JobStatus.COMPLETED if rec.completed_at is not None
+                    else JobStatus.QUEUED)
         if self._dag(rec).done:
             return JobStatus.COMPLETED
         if rec.job_id in self.engine.dags:
             return JobStatus.RUNNING
         return JobStatus.QUEUED
 
-    def job(self, job_id: str) -> dict | None:
+    def job(self, job_id: str, *, deadline_view: bool = True) -> dict | None:
         rec = self.jobs.get(job_id)
         if rec is None:
             return None
         dag = self._dag(rec)
+        if dag is not None:
+            ops = {n: s.value for n, s in dag.state.items()}
+            metadata = dag.metadata
+            completed_at = dag.completed_at
+            latency = dag.latency
+        else:                                    # journal-restored record
+            ops = dict(rec.op_states)
+            metadata = rec.metadata
+            completed_at = rec.completed_at
+            latency = (None if completed_at is None
+                       else completed_at - rec.submitted_at)
         out = {
             "job_id": rec.job_id,
             "tenant": rec.tenant,
             "status": self._status(rec).value,
             "submitted_at": rec.submitted_at,
-            "ops": {n: s.value for n, s in dag.state.items()},
-            "metadata": dag.metadata,
+            "ops": ops,
+            "metadata": metadata,
         }
         if rec.error:
             out["error"] = rec.error
-        if dag.done:
-            out["completed_at"] = dag.completed_at
-            out["latency_s"] = dag.latency
+        if completed_at is not None:
+            out["completed_at"] = completed_at
+            out["latency_s"] = latency
+        deadline = metadata.get("deadline_s") if metadata else None
+        if deadline is not None and deadline_view:
+            out["deadline"] = self._deadline_view(
+                rec, dag, float(deadline), latency)
         return out
 
+    def _deadline_view(self, rec: JobRecord, dag: WorkflowDAG | None,
+                       deadline_s: float, latency: float | None) -> dict:
+        """SLO surface for ``GET /jobs/{id}``: compare the deadline against
+        the realized latency (terminal jobs) or elapsed time + the
+        critical-path estimate of the remaining ops (live jobs)."""
+        view = {"deadline_s": deadline_s}
+        if latency is not None:                  # terminal: realized outcome
+            view["predicted_miss"] = latency > deadline_s
+            view["critical_path_s"] = 0.0
+            return view
+        if dag is None:                          # restored + interrupted
+            view["predicted_miss"] = True
+            return view
+        remaining = self._critical_path_s(dag)
+        elapsed = max(0.0, self.engine.now - rec.submitted_at)
+        view["critical_path_s"] = round(remaining, 3)
+        view["predicted_miss"] = elapsed + remaining > deadline_s
+        return view
+
+    def _critical_path_s(self, dag: WorkflowDAG) -> float:
+        """Longest chain of estimated single-instance durations over the
+        DAG's incomplete ops on the reference device (optimistic: hot model,
+        no queueing) — the paper's predicted-miss signal, not a guarantee."""
+        memo: dict[str, float] = {}
+
+        def path(name: str) -> float:
+            if dag.state.get(name) is OpState.COMPLETED:
+                return 0.0
+            if name in memo:
+                return memo[name]
+            dur, _, _ = estimate_exec(dag.ops[name], 1, self._ref_dev,
+                                      hot=True)
+            memo[name] = dur + max((path(p) for p in dag.parents(name)),
+                                   default=0.0)
+            return memo[name]
+
+        return max((path(n) for n in dag.ops), default=0.0)
+
     def list_jobs(self, tenant: str | None = None) -> list[dict]:
-        return [self.job(jid) for jid, rec in self.jobs.items()
+        # listings skip the per-job critical-path walk (O(ops) each, and
+        # /jobs may enumerate thousands) — the single-job GET carries it
+        return [self.job(jid, deadline_view=False)
+                for jid, rec in self.jobs.items()
                 if tenant is None or rec.tenant == tenant]
 
     def lineage(self, job_id: str) -> list[dict] | None:
@@ -195,11 +429,14 @@ class FabricService:
         rec = self.jobs.get(job_id)
         if rec is None:
             return None
+        dag = self._dag(rec)
+        if dag is None:                          # journal-restored record
+            return sorted(rec.lineage_rows, key=lambda r: r["t_complete"])
         return [{
             "op": l.op, "executed": l.executed, "worker": l.worker,
             "output_hash": l.output_hash, "input_hashes": list(l.input_hashes),
             "h_task": l.h_task, "t_complete": l.t_complete,
-        } for l in self._dag(rec).replay_order()]
+        } for l in dag.replay_order()]
 
     def usage(self, tenant: str) -> dict:
         out = self.admission.usage_snapshot(tenant)
@@ -223,7 +460,7 @@ class FabricService:
             s = self._status(rec).value
             by_status[s] = by_status.get(s, 0) + 1
         workers = list(eng.workers.values())
-        return {
+        out = {
             "status": "stalled" if eng.stalled else "ok",
             "now": eng.now,
             "idle": eng.idle,
@@ -238,3 +475,10 @@ class FabricService:
             "executions": eng.telemetry.executions,
             "dedup_savings": eng.telemetry.dedup_savings,
         }
+        if self.journal is not None:
+            # `written` counts this process only — after a restore the
+            # durable history lives behind `head`, not in this counter
+            out["journal"] = {"head": self.journal.head,
+                              "written": self.journal.events_written,
+                              "pending": self.journal.pending}
+        return out

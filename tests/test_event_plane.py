@@ -1,0 +1,461 @@
+"""Event-sourced control plane tests: typed bus, windowed telemetry, the
+CAS-backed journal + restore contract, per-job event feeds, SLO admission,
+and the HTTP shim (DESIGN.md §7).
+"""
+import json
+import threading
+
+import pytest
+
+from repro.core import events as E
+from repro.core.cas import CAS, DiskCAS
+from repro.core.control_plane import EngineConfig, FlowMeshEngine
+from repro.core.journal import EventJournal
+from repro.core.simulator import SimExecutor
+from repro.core.telemetry import Telemetry
+from repro.fabric import (FabricAPI, FabricHTTPServer, FabricService,
+                          RemoteAPI, TenantQuota)
+
+TERMINAL = {"completed", "cancelled", "rejected"}
+
+
+def one_op_spec(tenant, prompt, *, max_batch=24, deadline_s=None,
+                tokens_out=64):
+    doc = {
+        "tenant": tenant,
+        "ops": [
+            {"name": "gen", "op_type": "generate", "model_id": "llama-3.2-1b",
+             "params": {"max_batch": max_batch}, "inputs": [prompt],
+             "tokens_in": 256, "tokens_out": tokens_out},
+        ],
+    }
+    if deadline_s is not None:
+        doc["deadline_s"] = deadline_s
+    return doc
+
+
+def chain_spec(tenant, tag):
+    return {
+        "tenant": tenant,
+        "ops": [
+            {"name": "gen", "op_type": "generate", "model_id": "llama-3.2-1b",
+             "inputs": [f"prompt:{tag}"], "tokens_in": 256, "tokens_out": 64},
+            {"name": "score", "op_type": "score", "model_id": "reward-1b",
+             "inputs": [{"ref": "gen"}], "tokens_in": 256, "tokens_out": 8},
+        ],
+    }
+
+
+def journaled_service(root, seed=7, batch_size=4):
+    cas = DiskCAS(str(root))
+    return FabricService(seed=seed, cas=cas,
+                         device_classes=("h100-nvl-94g", "rtx4090-24g"),
+                         journal=EventJournal(cas, batch_size=batch_size))
+
+
+# ---------------------------------------------------------------------------
+# events + bus
+# ---------------------------------------------------------------------------
+def test_event_round_trip_and_registry():
+    ev = E.GroupCompleted(time=3.5, seq=9, h_task="t", h_exec="x",
+                          worker="w0", duration=1.25, output_hash="abc",
+                          cost=0.01, consumers=(("d0", "gen", "acme"),),
+                          billed=("acme",))
+    d = ev.to_dict()
+    assert d["kind"] == "group_completed"
+    assert json.loads(json.dumps(d, default=list))     # JSON-shaped
+    back = E.event_from_dict(d)
+    assert back == ev
+    # unknown fields are dropped, not fatal (forward compat)
+    d["future_field"] = 1
+    assert E.event_from_dict(d) == ev
+    assert E.event_from_dict({"kind": "no_such_kind", "time": 1.0}).time == 1.0
+
+
+def test_bus_assigns_monotone_seqs_and_survives_advance():
+    bus = E.EventBus()
+    seen = []
+    bus.subscribe(lambda e: seen.append(e.seq))
+    for _ in range(3):
+        bus.publish(E.StallDetected(pending=1))
+    assert seen == [0, 1, 2]
+    bus.advance_past(100)
+    bus.publish(E.StallDetected(pending=1))
+    assert seen[-1] == 101
+
+
+def test_engine_emits_no_direct_telemetry_mutations():
+    """The engine's telemetry must be reconstructible from the bus alone:
+    an independent subscriber folding the same events reaches an identical
+    summary — events are the only write path."""
+    eng = FlowMeshEngine(executor=SimExecutor(seed=3),
+                         config=EngineConfig(seed=3))
+    eng.bootstrap_workers(["h100-nvl-94g", "rtx4090-24g"])
+    shadow = Telemetry()
+    eng.bus.subscribe(shadow.on_event)
+    svc = FabricService(engine=eng)
+    for i in range(4):
+        svc.submit(chain_spec("acme", f"t{i % 2}"))
+    tel = svc.run_until_idle()
+    assert shadow.summary() == tel.summary()
+    assert shadow.scaling_trace == tel.scaling_trace
+
+
+# ---------------------------------------------------------------------------
+# telemetry: ring-buffer mode + 4-tuple scaling trace
+# ---------------------------------------------------------------------------
+def run_seeded(window=None):
+    eng = FlowMeshEngine(executor=SimExecutor(seed=11),
+                         config=EngineConfig(seed=11,
+                                             telemetry_window=window))
+    eng.bootstrap_workers(["h100-nvl-94g", "rtx4090-24g"])
+    svc = FabricService(engine=eng)
+    for i in range(6):
+        svc.submit(one_op_spec("acme", f"prompt:w{i}", max_batch=1))
+    svc.run_until_idle()
+    return eng.telemetry
+
+
+def test_ring_buffer_telemetry_equivalent_on_bounded_window():
+    full = run_seeded(window=None)
+    wide = run_seeded(window=10_000)      # window >= samples: no truncation
+    assert wide.summary() == full.summary()
+    assert list(wide.dag_latencies) == list(full.dag_latencies)
+    assert list(wide.scaling_trace) == list(full.scaling_trace)
+
+    tight = run_seeded(window=3)
+    assert len(tight.dag_latencies) == 3            # bounded distributions
+    assert list(tight.dag_latencies) == list(full.dag_latencies)[-3:]
+    # scalar counters stay cumulative in ring-buffer mode
+    assert tight.executions == full.executions
+    assert tight.dedup_savings == full.dedup_savings
+    assert tight.summary()["tasks"] == 3            # rolling summary
+
+
+def test_scaling_trace_is_documented_4_tuple():
+    tel = run_seeded()
+    assert tel.scaling_trace, "autoscaler ticked at least once"
+    for sample in tel.scaling_trace:
+        t, active, depth, rate = sample               # unpacks as documented
+        assert active >= 0 and depth >= 0 and rate >= 0.0
+    # arrivals happened inside some tick window -> a nonzero rate somewhere
+    assert any(s[3] > 0 for s in tel.scaling_trace)
+
+
+# ---------------------------------------------------------------------------
+# journal: chain format + replay determinism + restore
+# ---------------------------------------------------------------------------
+def test_journal_chain_and_flush_semantics():
+    cas = CAS()
+    j = EventJournal(cas, batch_size=2)
+    for i in range(5):
+        j.on_event(E.StallDetected(time=float(i), seq=i, pending=i))
+    assert j.segments_written == 2 and j.pending == 1
+    # replay covers flushed segments AND the unflushed tail, in order
+    assert [e.seq for e in j.replay()] == [0, 1, 2, 3, 4]
+    j.flush()
+    assert j.pending == 0 and j.segments_written == 3
+    # chain walks prev-pointers from the head ref
+    head = cas.get(j.head)
+    assert head["prev"] is not None and len(head["events"]) == 1
+    assert len(j) == 5
+
+
+def test_journal_replay_rebuilds_jobs_lineage_usage(tmp_path):
+    svc = journaled_service(tmp_path)
+    svc.set_quota("acme", TenantQuota(max_active_workflows=2))
+    svc.submit(chain_spec("acme", "shared"))
+    svc.submit(chain_spec("globex", "shared"))     # cross-tenant dedup
+    rejected = svc.submit(chain_spec("acme", "x"))
+    assert rejected["status"] in ("queued", "running")
+    rej = svc.submit(chain_spec("acme", "y"))      # 3rd active -> rejected
+    assert rej["status"] == "rejected"
+    svc.run_until_idle()
+
+    jobs = {jid: svc.job(jid) for jid in svc.jobs}
+    lineages = {jid: svc.lineage(jid) for jid in svc.jobs}
+    usage = {t: svc.usage(t) for t in ("acme", "globex")}
+
+    svc2 = journaled_service(tmp_path)
+    stats = svc2.restore_from_journal()
+    assert stats["jobs"] == len(jobs) and stats["interrupted"] == 0
+    for jid, before in jobs.items():
+        after = svc2.job(jid)
+        assert after["status"] == before["status"]
+        assert after["ops"] == before["ops"]
+        assert after.get("completed_at") == before.get("completed_at")
+        if before["status"] == "rejected":
+            assert after["error"] == before["error"]
+        # lineage rows identical, including executed flags (provenance)
+        assert svc2.lineage(jid) == lineages[jid]
+    for t, before in usage.items():
+        after = svc2.usage(t)
+        assert after["workflows"] == before["workflows"]
+        assert after["ops"] == before["ops"]
+        assert after["spend"] == before["spend"]
+        assert after["fair_share"]["vtime"] == pytest.approx(
+            before["fair_share"]["vtime"])
+
+
+def test_restart_resumes_feed_cursors_and_dedups_across_restart(tmp_path):
+    svc = journaled_service(tmp_path)
+    job = svc.submit(chain_spec("acme", "restartable"))
+    jid = job["job_id"]
+    svc.run_until_idle()
+    feed = svc.events(jid)
+    cursor = feed["cursor"]
+    assert feed["events"] and feed["status"] == "completed"
+
+    # "kill" the process: a fresh service on the same CAS directory
+    svc2 = journaled_service(tmp_path)
+    svc2.restore_from_journal()
+    resumed = svc2.events(jid, since=cursor)
+    assert resumed["events"] == []                  # no duplicates
+    assert svc2.events(jid)["events"] == feed["events"]   # no gaps
+    # new submissions continue the seq-space beyond journaled history
+    job2 = svc2.submit(chain_spec("globex", "restartable"))
+    svc2.run_until_idle()
+    new_feed = svc2.events(job2["job_id"])
+    assert min(e["seq"] for e in new_feed["events"]) > cursor
+    # the restored result index serves the identical ops without re-running
+    rows = {r["op"]: r for r in svc2.lineage(job2["job_id"])}
+    assert not rows["gen"]["executed"] and not rows["score"]["executed"]
+    assert svc2.engine.telemetry.executions == 0
+
+
+def test_restore_preserves_cancel_before_arrival_and_guards_reuse(tmp_path):
+    svc = journaled_service(tmp_path)
+    q = svc.submit(chain_spec("acme", "early-cancel"))
+    svc.cancel(q["job_id"])            # arrival never consumed -> the
+    svc.run_until_idle()               # journal has only workflow_cancelled
+    before = svc.usage("acme")["workflows"]
+
+    svc2 = journaled_service(tmp_path)
+    svc2.restore_from_journal()
+    restored = svc2.job(q["job_id"])
+    assert restored is not None and restored["status"] == "cancelled"
+    assert [e["kind"] for e in svc2.events(q["job_id"])["events"]] == \
+        ["workflow_cancelled"]
+    after = svc2.usage("acme")["workflows"]
+    assert after == before             # submitted=1, cancelled=1 — no skew
+    # a second replay would double accounting: refuse non-fresh restores
+    with pytest.raises(ValueError, match="fresh"):
+        svc2.restore_from_journal()
+
+
+def test_restored_records_survive_dag_id_counter_reuse(tmp_path):
+    """The dag-N counter is process-local: after a restart it hands out ids
+    the restored history already owns — submit() must not clobber them."""
+    import repro.core.dag as dag_mod
+
+    svc = journaled_service(tmp_path)
+    old = svc.submit(one_op_spec("acme", "prompt:owner"))
+    svc.run_until_idle()
+    feed_before = svc.events(old["job_id"])["events"]
+
+    svc2 = journaled_service(tmp_path)
+    svc2.restore_from_journal()
+    # simulate the restarted process: the id counter begins again at the
+    # number the restored job already carries
+    start = int(old["job_id"].split("-")[1])
+    dag_mod._dag_ids = iter(range(start, start + 10_000))
+    fresh = svc2.submit(one_op_spec("globex", "prompt:newcomer"))
+    assert fresh["job_id"] != old["job_id"]
+    svc2.run_until_idle()
+    assert svc2.job(old["job_id"])["tenant"] == "acme"
+    assert svc2.events(old["job_id"])["events"] == feed_before
+    assert svc2.job(fresh["job_id"])["status"] == "completed"
+
+
+def test_disk_cas_refs_do_not_pollute_keyspace(tmp_path):
+    cas = DiskCAS(str(tmp_path))
+    key = cas.put_bytes(b"artifact")
+    cas.set_ref("journal-head", key)
+    assert list(cas.keys()) == [key]
+    assert len(cas) == 1
+    for k in cas.keys():              # integrity sweep must not KeyError
+        cas.get_bytes(k)
+    assert cas.get_ref("journal-head") == key
+
+
+def test_restore_marks_mid_flight_jobs_interrupted(tmp_path):
+    svc = journaled_service(tmp_path)
+    done = svc.submit(one_op_spec("acme", "prompt:done", max_batch=1))
+    while svc.job(done["job_id"])["status"] != "completed":
+        assert svc.pump(max_steps=1) == 1
+    live = svc.submit(one_op_spec("acme", "prompt:live", max_batch=1,
+                                  tokens_out=2048))
+    svc.pump(max_steps=3)                  # submitted, far from done
+    assert svc.job(live["job_id"])["status"] in ("queued", "running")
+    svc.journal.flush()                    # ...and the process dies here
+
+    svc2 = journaled_service(tmp_path)
+    stats = svc2.restore_from_journal()
+    assert stats["interrupted"] == 1
+    restored = svc2.job(live["job_id"])
+    assert restored["status"] == "cancelled"
+    assert "interrupted" in restored["error"]
+    assert svc2.job(done["job_id"])["status"] == "completed"
+    u = svc2.usage("acme")
+    assert u["workflows"]["active"] == 0
+    assert u["workflows"]["completed"] == 1
+    assert u["workflows"]["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# per-job event feeds: cursor semantics
+# ---------------------------------------------------------------------------
+def test_feed_cursor_no_drops_or_dups_across_pump_boundaries():
+    svc = FabricService(seed=7)
+    a = svc.submit(chain_spec("acme", "feed"))
+    b = svc.submit(chain_spec("globex", "feed"))
+    seen, cursor = [], -1
+    while not svc.engine.idle:
+        svc.pump(max_steps=2)              # tiny increments: many boundaries
+        chunk = svc.events(a["job_id"], since=cursor)
+        seen += chunk["events"]
+        cursor = chunk["cursor"]
+    full = svc.events(a["job_id"])["events"]
+    assert [e["seq"] for e in seen] == [e["seq"] for e in full]
+    seqs = [e["seq"] for e in seen]
+    assert seqs == sorted(set(seqs)), "duplicated or reordered events"
+    kinds = [e["kind"] for e in seen]
+    assert kinds[0] == "workflow_submitted"
+    assert kinds[-1] == "workflow_completed"
+    assert kinds.count("op_completed") == 2
+    # the other tenant's feed is isolated but shares the seq space
+    other = svc.events(b["job_id"])["events"]
+    assert {e["seq"] for e in other}.isdisjoint(seqs)
+
+
+def test_feed_cancel_before_arrival_and_limit():
+    svc = FabricService(seed=7)
+    q = svc.submit(chain_spec("acme", "cancel-early"))
+    svc.cancel(q["job_id"])                # arrival not yet processed
+    svc.run_until_idle()
+    feed = svc.events(q["job_id"])
+    assert feed["status"] == "cancelled"
+    kinds = [e["kind"] for e in feed["events"]]
+    assert kinds == ["workflow_cancelled"]         # never submitted-to-engine
+    # limit paginates without skipping
+    r = svc.submit(chain_spec("acme", "paged"))
+    svc.run_until_idle()
+    cursor, pages = -1, []
+    while True:
+        chunk = svc.events(r["job_id"], since=cursor, limit=2)
+        if not chunk["events"]:
+            break
+        assert len(chunk["events"]) <= 2
+        pages += chunk["events"]
+        cursor = chunk["cursor"]
+    assert pages == svc.events(r["job_id"])["events"]
+    assert svc.events("no-such-job") is None
+
+
+def test_feed_evicted_with_job_record():
+    svc = FabricService(seed=7, retention=2)
+    ids = []
+    for i in range(6):
+        job = svc.submit(one_op_spec("acme", f"prompt:e{i}"))
+        ids.append(job["job_id"])
+        svc.run_until_idle()
+    assert svc.events(ids[0]) is None
+    assert len(svc._feeds) <= 3
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission: EDF boost + predicted_miss
+# ---------------------------------------------------------------------------
+def test_deadline_boost_reorders_compatible_set():
+    def completion_order(with_deadline: bool):
+        svc = FabricService(seed=9, device_classes=("rtx4090-24g",))
+        relaxed = svc.submit(one_op_spec("slow-co", "prompt:relaxed",
+                                         max_batch=1))
+        urgent = svc.submit(one_op_spec(
+            "fast-co", "prompt:urgent", max_batch=1,
+            deadline_s=30.0 if with_deadline else None))
+        svc.run_until_idle()
+        t = {jid: svc.job(jid)["completed_at"]
+             for jid in (relaxed["job_id"], urgent["job_id"])}
+        return t[urgent["job_id"]] < t[relaxed["job_id"]]
+
+    # FIFO tie-break serves the earlier submission first...
+    assert completion_order(with_deadline=False) is False
+    # ...but deadline pressure pulls the urgent job ahead (same S(H_exec))
+    assert completion_order(with_deadline=True) is True
+
+
+def test_predicted_miss_surfaced_in_job_view():
+    svc = FabricService(seed=9, device_classes=("rtx4090-24g",))
+    tight = svc.submit(one_op_spec("acme", "prompt:tight", deadline_s=0.5))
+    view = svc.job(tight["job_id"])
+    assert view["deadline"]["predicted_miss"] is True
+    assert view["deadline"]["critical_path_s"] > 0.5
+    roomy = svc.submit(one_op_spec("acme", "prompt:roomy", deadline_s=9000.0))
+    assert svc.job(roomy["job_id"])["deadline"]["predicted_miss"] is False
+    svc.run_until_idle()
+    done = svc.job(roomy["job_id"])
+    assert done["deadline"] == {"deadline_s": 9000.0,
+                                "predicted_miss": False,
+                                "critical_path_s": 0.0}
+    missed = svc.job(tight["job_id"])["deadline"]
+    assert missed["predicted_miss"] is True        # realized outcome
+
+
+# ---------------------------------------------------------------------------
+# HTTP shim
+# ---------------------------------------------------------------------------
+def test_http_shim_round_trip_and_long_poll():
+    svc = FabricService(seed=7)
+    with FabricHTTPServer(FabricAPI(svc)) as server:
+        api = RemoteAPI(server.url, timeout_s=30.0)
+        code, health = api.handle("GET", "/health")
+        assert code == 200 and health["status"] == "ok"
+        code, job = api.handle("POST", "/workflows",
+                               {"spec": chain_spec("acme", "http")})
+        assert code == 201
+        jid = job["job_id"]
+        cursor, kinds = -1, []
+        while True:
+            code, feed = api.handle(
+                "GET", f"/jobs/{jid}/events?since={cursor}&wait_s=5")
+            assert code == 200
+            kinds += [e["kind"] for e in feed["events"]]
+            cursor = feed["cursor"]
+            if feed["status"] in TERMINAL and not feed["events"]:
+                break
+        assert feed["status"] == "completed"
+        assert kinds.count("op_completed") == 2
+        code, lin = api.handle("GET", f"/jobs/{jid}/lineage")
+        assert code == 200 and len(lin["lineage"]) == 2
+        # error paths surface as JSON statuses, not hung sockets
+        assert api.handle("GET", "/jobs/nope/events")[0] == 404
+        assert api.handle("GET", f"/jobs/{jid}/events?since=abc")[0] == 400
+        assert api.handle("GET", "/nope")[0] == 404
+        assert api.handle("DELETE", "/health")[0] == 405
+        code, bad = api.handle("POST", "/workflows", {"spec": {"ops": []}})
+        assert code == 400 and bad["error"] == "invalid_spec"
+
+
+def test_http_shim_concurrent_clients_are_serialized():
+    svc = FabricService(seed=7)
+    with FabricHTTPServer(FabricAPI(svc)) as server:
+        api = RemoteAPI(server.url, timeout_s=30.0)
+        results = []
+
+        def submit(i):
+            results.append(api.handle(
+                "POST", "/workflows",
+                {"spec": one_op_spec(f"t{i}", f"prompt:c{i}")}))
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert all(code == 201 for code, _ in results)
+        ids = {job["job_id"] for _, job in results}
+        assert len(ids) == 4
+        code, listed = api.handle("GET", "/jobs")
+        assert code == 200 and len(listed["jobs"]) == 4

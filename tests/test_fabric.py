@@ -143,7 +143,7 @@ def test_elastic_scale_up_and_down():
         eng.submit(dag, at=t)
     tel = eng.run()
     assert tel.n_tasks == 40
-    peak = max(n for _, n, _ in tel.scaling_trace)
+    peak = max(n for _, n, _, _ in tel.scaling_trace)
     end = tel.scaling_trace[-1][1]
     assert peak > 1          # scaled up under burst
     assert end < peak        # scaled back down in the lull
