@@ -21,4 +21,20 @@ echo "== HTTP shim smoke (real sockets) =="
 PYTHONPATH=src python scripts/http_smoke.py
 
 echo
+echo "== journal compaction + GC smoke (DiskCAS) =="
+# exercises the on-disk path every run: journal a couple of runs into a
+# tempdir CAS, fold them into a snapshot, sweep the dead segments, and
+# prove the compacted chain still replays
+COMPACT_TMP=$(mktemp -d)
+trap 'rm -rf "$COMPACT_TMP"' EXIT
+PYTHONPATH=src python scripts/fabric_cli.py submit --template distill \
+    --param tenant=acme --journal "$COMPACT_TMP/cas" > /dev/null
+PYTHONPATH=src python scripts/fabric_cli.py submit --template distill \
+    --param tenant=globex --journal "$COMPACT_TMP/cas" > /dev/null
+PYTHONPATH=src python scripts/fabric_cli.py compact --journal "$COMPACT_TMP/cas"
+PYTHONPATH=src python scripts/fabric_cli.py gc --journal "$COMPACT_TMP/cas"
+PYTHONPATH=src python scripts/fabric_cli.py tail --journal "$COMPACT_TMP/cas" \
+    > /dev/null
+
+echo
 echo "CI OK"

@@ -24,6 +24,11 @@ against a fabric started by ``serve``.
     # offline provenance: replay a journal straight from the CAS
     PYTHONPATH=src python scripts/fabric_cli.py tail <job_id> \
         --journal /tmp/fabric-cas
+
+    # retention: fold old segments into a snapshot, then reclaim the
+    # unreferenced blobs (also available live: POST /admin/{compact,gc})
+    PYTHONPATH=src python scripts/fabric_cli.py compact --journal /tmp/fabric-cas
+    PYTHONPATH=src python scripts/fabric_cli.py gc --journal /tmp/fabric-cas
 """
 from __future__ import annotations
 
@@ -36,7 +41,7 @@ from repro.core.cas import DiskCAS
 from repro.core.journal import EventJournal
 from repro.fabric import (TERMINAL_STATUSES as _TERMINAL, FabricAPI,
                           FabricHTTPServer, FabricService, RemoteAPI,
-                          render_template, validate_spec)
+                          render_template, snapshot_fold, validate_spec)
 
 
 def _parse_params(pairs: list[str]) -> dict:
@@ -98,6 +103,11 @@ def cmd_submit(api, args) -> int:
         _, usage = api.handle("GET", f"/tenants/{job['tenant']}/usage")
         _print({"job": job, "lineage": lineage["lineage"], "usage": usage})
     else:
+        # drain is what flushes the journal; without it the buffered events
+        # (at least the submission) must still reach the CAS before exit
+        svc = getattr(api, "service", None)
+        if svc is not None and svc.journal is not None:
+            svc.journal.flush()
         _print(job)
     return 0
 
@@ -143,6 +153,10 @@ def cmd_tail(api, args) -> int:
     """Follow a job's event feed: live over HTTP, or offline from a journal."""
     if args.journal and not args.url:
         journal = EventJournal(DiskCAS(args.journal))
+        base = journal.base_state()
+        if base is not None:
+            print(f"# snapshot base: {base['events']} events folded over "
+                  f"{len(base['jobs'])} jobs", file=sys.stderr)
         n = 0
         for e in journal.replay():
             d = e.to_dict()
@@ -171,6 +185,35 @@ def cmd_tail(api, args) -> int:
             return 0
 
 
+def cmd_compact(api, args) -> int:
+    """Fold old journal segments into a snapshot node (retention)."""
+    if args.url:
+        code, stats = api.handle("POST", "/admin/compact",
+                                 {"keep_segments": args.keep})
+        _print(stats)
+        return 0 if code == 200 else 1
+    journal = EventJournal(DiskCAS(args.journal))
+    if journal.head is None:
+        print("empty journal (no head ref)", file=sys.stderr)
+        return 1
+    # offline fold runs with default quota config; like restore, fair-share
+    # weights only replay correctly if compaction sees the same quotas the
+    # restoring fabric will apply (DESIGN.md §8)
+    stats = journal.compact(snapshot_fold(), keep_segments=args.keep)
+    _print(stats)
+    return 0
+
+
+def cmd_gc(api, args) -> int:
+    """Mark-and-sweep the CAS from its named refs (journal heads)."""
+    if args.url:
+        code, stats = api.handle("POST", "/admin/gc", {})
+        _print(stats)
+        return 0 if code == 200 else 1
+    _print(DiskCAS(args.journal).gc())
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="fabric_cli", description=__doc__)
     ap.add_argument("--seed", type=int, default=0)
@@ -190,6 +233,9 @@ def main(argv: list[str] | None = None) -> int:
         if name == "submit":
             p.add_argument("--no-drain", action="store_true",
                            help="submit only; do not run to idle")
+            p.add_argument("--journal", metavar="DIR",
+                           help="journal the run to this CAS directory "
+                                "(restores prior history first)")
 
     sub.add_parser("demo", help="multi-tenant dedup demo")
 
@@ -208,16 +254,29 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--journal", metavar="DIR",
                    help="offline: replay events from this CAS directory")
 
+    p = sub.add_parser("compact",
+                       help="fold old journal segments into a snapshot")
+    p.add_argument("--journal", metavar="DIR",
+                   help="CAS directory holding the journal (offline mode)")
+    p.add_argument("--keep", type=int, default=0,
+                   help="newest segments to keep un-compacted (default 0)")
+
+    p = sub.add_parser("gc", help="mark-and-sweep unreferenced CAS blobs")
+    p.add_argument("--journal", metavar="DIR",
+                   help="CAS directory to sweep (offline mode)")
+
     args = ap.parse_args(argv)
     if args.cmd in ("validate", "submit") and not (
             args.spec or args.template):
         ap.error(f"{args.cmd} requires a spec file or --template")
     if args.cmd == "serve" and args.url:
         ap.error("serve runs an in-process fabric; it cannot proxy --url")
+    if args.cmd in ("compact", "gc") and not (args.journal or args.url):
+        ap.error(f"{args.cmd} needs --journal (offline) or --url (live)")
 
     if args.url:
         api = RemoteAPI(args.url)
-    elif args.cmd == "serve" and args.journal:
+    elif args.cmd in ("serve", "submit") and getattr(args, "journal", None):
         cas = DiskCAS(args.journal)     # artifacts + journal share one store
         journal = EventJournal(cas)
         svc = FabricService(seed=args.seed, cas=cas, journal=journal)
@@ -225,13 +284,17 @@ def main(argv: list[str] | None = None) -> int:
             stats = svc.restore_from_journal()
             print(f"restored {stats['jobs']} jobs from "
                   f"{stats['events']} journaled events "
-                  f"({stats['interrupted']} interrupted)", flush=True)
+                  f"({stats['interrupted']} interrupted, "
+                  f"{stats['from_snapshot']} from snapshot)", flush=True)
         api = FabricAPI(svc)
+    elif args.cmd in ("compact", "gc"):
+        api = None                      # offline: handled against the CAS
     else:
         api = FabricAPI(FabricService(seed=args.seed))
     return {"templates": cmd_templates, "validate": cmd_validate,
             "submit": cmd_submit, "demo": cmd_demo, "serve": cmd_serve,
-            "tail": cmd_tail}[args.cmd](api, args)
+            "tail": cmd_tail, "compact": cmd_compact,
+            "gc": cmd_gc}[args.cmd](api, args)
 
 
 if __name__ == "__main__":

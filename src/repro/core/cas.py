@@ -14,16 +14,43 @@ Backends: in-memory dict (simulation / tests) and a directory on disk
 """
 from __future__ import annotations
 
+import json
 import os
 import pickle
+import re
 import threading
-from typing import Any, Iterator
+from typing import Any, Iterable, Iterator
 
-from .identity import content_hash
+from .identity import HASH_LEN, content_hash
 
 
 class IntegrityError(RuntimeError):
     pass
+
+
+#: what a CAS key looks like in a decoded blob (see ``CAS.gc``)
+_KEY_RE = re.compile(rf"^[0-9a-f]{{{HASH_LEN}}}$")
+
+
+def _candidate_keys(obj: Any) -> Iterator[str]:
+    """Recursively yield every string in ``obj`` shaped like a CAS key.
+
+    The GC tracer is deliberately format-agnostic: journal segments name
+    their predecessor (``prev``), snapshots carry a result index, and events
+    carry artifact hashes — all plain hex strings. Treating *any* key-shaped
+    string found in a live blob as a reference is conservative (a false
+    positive retains a blob; it never frees a live one)."""
+    stack = [obj]
+    while stack:
+        x = stack.pop()
+        if isinstance(x, str):
+            if _KEY_RE.match(x):
+                yield x
+        elif isinstance(x, dict):
+            stack.extend(x.keys())
+            stack.extend(x.values())
+        elif isinstance(x, (list, tuple, set, frozenset)):
+            stack.extend(x)
 
 
 class CAS:
@@ -49,6 +76,11 @@ class CAS:
     def get_ref(self, name: str) -> str | None:
         with self._lock:
             return self._refs.get(name)
+
+    def refs(self) -> dict[str, str]:
+        """All named refs — the GC root set."""
+        with self._lock:
+            return dict(self._refs)
 
     # -- raw byte interface -------------------------------------------------
     def put_bytes(self, data: bytes) -> str:
@@ -82,6 +114,62 @@ class CAS:
 
     def size_of(self, key: str) -> int:
         return len(self._blobs[key])
+
+    def delete(self, key: str) -> None:
+        """Drop one blob (GC only — callers must hold no live reference)."""
+        with self._lock:
+            self._blobs.pop(key, None)
+
+    @staticmethod
+    def _decode_for_trace(data: bytes) -> Any | None:
+        """Decode a blob for reference tracing: pickle (journal segments,
+        snapshots) or JSON (checkpoint manifests/pointers); anything else —
+        raw artifact/tensor bytes — is an opaque leaf."""
+        try:
+            return pickle.loads(data)
+        except Exception:
+            pass
+        try:
+            return json.loads(data)
+        except Exception:
+            return None
+
+    # -- garbage collection ---------------------------------------------------
+    def gc(self, roots: Iterable[str] = ()) -> dict:
+        """Mark-and-sweep: drop every blob unreachable from the named refs
+        plus ``roots``.
+
+        Mark walks *into* blobs: a reachable blob is decoded (pickle; raw
+        artifacts are opaque leaves) and any key-shaped string it contains
+        that names a stored blob is followed. This covers journal segments
+        (``prev`` chains), snapshots (result index, lineage hashes), and the
+        artifact hashes inside journaled events — so dedup-across-restart
+        artifacts survive as long as the history naming them does. A crash
+        between ``put`` and ``set_ref`` leaves exactly the orphan this
+        reclaims. Callers are responsible for quiescence: blobs written but
+        not yet referenced by a ref/root at sweep time are collected.
+        """
+        live: set[str] = set()
+        queue: list[str] = [k for k in self.refs().values() if k]
+        queue.extend(roots)
+        while queue:
+            key = queue.pop()
+            if key in live or key not in self:
+                continue
+            live.add(key)
+            obj = self._decode_for_trace(self.get_bytes(key))
+            if obj is not None:
+                queue.extend(_candidate_keys(obj))
+        swept = [k for k in self.keys() if k not in live]
+        reclaimed = 0
+        for k in swept:
+            try:
+                reclaimed += self.size_of(k)
+            except (KeyError, OSError):
+                pass
+            self.delete(k)
+        return {"kept": len(live), "deleted": len(swept),
+                "bytes_reclaimed": reclaimed}
 
     # -- object interface (pickle round-trip) --------------------------------
     def put(self, obj: Any) -> str:
@@ -141,6 +229,21 @@ class DiskCAS(CAS):
         except FileNotFoundError:
             return None
 
+    def refs(self) -> dict[str, str]:
+        refs_dir = os.path.join(self.root, "refs")
+        out: dict[str, str] = {}
+        try:
+            names = os.listdir(refs_dir)
+        except FileNotFoundError:
+            return out
+        for name in names:
+            if ".tmp." in name:
+                continue
+            key = self.get_ref(name)
+            if key:
+                out[name] = key
+        return out
+
     def put_bytes(self, data: bytes) -> str:
         key = content_hash(data)
         path = self._path(key)
@@ -175,6 +278,19 @@ class DiskCAS(CAS):
 
     def __len__(self) -> int:
         return sum(1 for _ in self.keys())
+
+    def size_of(self, key: str) -> int:
+        try:
+            return os.path.getsize(self._path(key))
+        except FileNotFoundError:
+            raise KeyError(f"CAS miss: {key}") from None
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            try:
+                os.remove(self._path(key))
+            except FileNotFoundError:
+                pass
 
     def keys(self) -> Iterator[str]:
         for sub in os.listdir(self.root):

@@ -82,8 +82,10 @@ class FlowMeshEngine:
         self.autoscaler = Autoscaler(autoscaler or AutoscalerConfig(),
                                      self.backend)
         #: optional multi-tenant gate (see fabric.admission): filters/orders
-        #: the ready pool before Eq. 1 scheduling and meters per-tenant usage
-        self.admission = admission
+        #: the ready pool before Eq. 1 scheduling. All of its *accounting*
+        #: is event-derived — it is a bus subscriber, never called
+        #: imperatively for usage mutations (one write path, DESIGN.md §8)
+        self.admission = None
         self.rng = random.Random(self.cfg.seed)
 
         self.now = 0.0
@@ -98,6 +100,7 @@ class FlowMeshEngine:
         self.bus = EventBus()
         self.telemetry = Telemetry(window=self.cfg.telemetry_window)
         self.bus.subscribe(self.telemetry.on_event)
+        self.attach_admission(admission)
         self._arrivals_in_window = 0               # since last autoscale tick
         self._last_scale_t = 0.0
         self._service_times: dict[str, list[float]] = {}   # h_exec -> durations
@@ -118,6 +121,17 @@ class FlowMeshEngine:
         """Publish one control-plane event, stamped with the current time."""
         event.time = self.now
         return self.bus.publish(event)
+
+    def attach_admission(self, admission: Any | None) -> None:
+        """Install (or replace) the multi-tenant admission gate and wire its
+        accounting to the bus — subscribing is what makes the controller's
+        live bookkeeping and journal replay share exactly one body."""
+        if self.admission is not None and self.admission is not admission:
+            self.bus.unsubscribe(self.admission.on_event)
+        self.admission = admission
+        if admission is not None:
+            self.bus.unsubscribe(admission.on_event)    # never twice
+            self.bus.subscribe(admission.on_event)
 
     # ---------------------------------------------------------- public API --
     def bootstrap_workers(self, device_classes: list[str], *,
@@ -144,6 +158,13 @@ class FlowMeshEngine:
         dag.submitted_at = at
         self._unfinished += 1
         self._arrival_horizon = max(self._arrival_horizon, at)
+        # the submission is journaled history from the moment it is accepted
+        # (not when the arrival event is consumed): quota accounting — an
+        # event-bus subscriber — must see it before the next admission check,
+        # and a cancel-before-arrival must leave a self-contained journal
+        self.bus.publish(E.WorkflowSubmitted(
+            time=at, dag_id=dag.dag_id, tenant=dag.tenant,
+            ops=tuple(dag.ops), metadata=dict(dag.metadata)))
         self._push(at, "arrival", dag)
 
     def inject_crash(self, worker_id_or_index, at: float) -> None:
@@ -259,9 +280,6 @@ class FlowMeshEngine:
         self._last_progress = self.now
         self.stalled = False       # real progress clears a prior starvation
         self._arrivals_in_window += 1
-        self._emit(E.WorkflowSubmitted(
-            dag_id=dag.dag_id, tenant=dag.tenant, ops=tuple(dag.ops),
-            metadata=dict(dag.metadata)))
         self._arm_recurring()            # service mode: timers may have lapsed
         self._refresh_and_offer(dag)
         self._schedule_dispatch()
@@ -328,8 +346,6 @@ class FlowMeshEngine:
             for g in b.groups:
                 g.running_on.discard(w.worker_id)
                 if not g.done and not g.running_on:
-                    if self.admission:
-                        self.admission.note_requeue(g)
                     if g.consumers:
                         self.pool.requeue(g)
                         requeued += 1
@@ -337,6 +353,10 @@ class FlowMeshEngine:
                         # every consumer cancelled mid-flight: abandon the
                         # ghost instead of requeueing work nobody wants
                         self.pool.finish(g)
+                    # releases the tenants' in-flight admission slots
+                    self._emit(E.GroupRequeued(
+                        h_task=g.h_task, h_exec=g.h_exec,
+                        worker=w.worker_id, requeued=bool(g.consumers)))
         self._emit(E.WorkerFailed(worker_id=w.worker_id,
                                   detect_s=self.now - crashed_at,
                                   requeued=requeued))
@@ -438,8 +458,6 @@ class FlowMeshEngine:
             self._emit(E.DedupHit(
                 dag_id=dag.dag_id, tenant=dag.tenant, op=op_name,
                 h_task=dag.h_task[op_name], source="index", savings=1))
-            if self.admission:
-                self.admission.note_deduped(dag.tenant, 1)
             dag.state[op_name] = OpState.COMPLETED
             dag.complete(op_name, out, executed=False, worker=None,
                          now=self.now)
@@ -454,9 +472,8 @@ class FlowMeshEngine:
             self._unfinished -= 1
             self._emit(E.WorkflowCompleted(
                 dag_id=dag.dag_id, tenant=dag.tenant,
-                latency=dag.latency or 0.0))
-            if self.admission:
-                self.admission.note_workflow_done(dag, self.now)
+                latency=dag.latency or 0.0,
+                deadline_s=float(dag.metadata.get("deadline_s") or 0.0)))
         else:
             self._refresh_and_offer(dag)
 
@@ -485,14 +502,13 @@ class FlowMeshEngine:
             batch = p.to_batch(self.now)
             for g in p.groups:
                 if g.dispatch_at is None:
+                    g.dispatch_tenants = tuple(sorted({c.tenant
+                                                       for c in g.consumers}))
                     self._emit(E.OpDispatched(
                         h_task=g.h_task, h_exec=g.h_exec,
                         worker=p.worker.worker_id,
                         queue_wait=self.now - g.ready_at,
-                        tenants=tuple(sorted({c.tenant
-                                              for c in g.consumers}))))
-                    if self.admission:
-                        self.admission.note_dispatch(g)
+                        tenants=g.dispatch_tenants))
                 g.dispatch_at = self.now
                 g.running_on.add(p.worker.worker_id)
                 g.attempts += 1
@@ -547,16 +563,18 @@ class FlowMeshEngine:
                     if actual:
                         g.spec.params["min_vram_gb"] = float(actual)
                 if not g.done and not g.running_on:
-                    if g.consumers and g.attempts < self.cfg.max_attempts:
+                    retryable = g.consumers and g.attempts < self.cfg.max_attempts
+                    if retryable:
                         self.pool.requeue(g)
                     else:
                         # attempts exhausted, or cancelled out from under the
                         # failure: abandon rather than retry for nobody
                         self.pool.finish(g)
-                    if self.admission:
-                        # requeued or permanently dropped: either way the
-                        # group no longer occupies the tenant's in-flight cap
-                        self.admission.note_requeue(g)
+                    # requeued or permanently dropped: either way the group
+                    # no longer occupies the tenants' in-flight caps
+                    self._emit(E.GroupRequeued(
+                        h_task=g.h_task, h_exec=g.h_exec, worker=wid,
+                        requeued=bool(retryable)))
             w.current = None
             self._start_next(w)
             self._schedule_dispatch()
@@ -578,10 +596,12 @@ class FlowMeshEngine:
             g.running_on.discard(wid)
             self.result_index[g.h_task] = key
             self.pool.finish(g)
-            billed = [c.tenant for c in g.consumers]
-            if self.admission:
-                billed = self.admission.note_executed(
-                    g, cost=cost_share, duration=dur, now=self.now)
+            # bill the consumers (shared work, shared bill) — or, when every
+            # consumer cancelled mid-flight, the tenants recorded at dispatch
+            # (the run still happened on their behalf). The event carries the
+            # final list; the admission subscriber charges from it, live and
+            # on replay alike.
+            billed = [c.tenant for c in g.consumers] or list(g.dispatch_tenants)
             self._emit(E.GroupCompleted(
                 h_task=g.h_task, h_exec=g.h_exec, worker=wid, duration=dur,
                 output_hash=key, cost=cost_share,

@@ -60,7 +60,10 @@ def event_from_dict(d: dict) -> FabricEvent:
 @register
 @dataclass(kw_only=True)
 class WorkflowSubmitted(FabricEvent):
-    """Arrival processed: the workflow is live in the engine."""
+    """Submission accepted (published by ``Engine.submit`` with the arrival
+    time, *before* the arrival event is consumed — the workflow may not be
+    in ``engine.dags`` yet). Quota accounting and the journal both key on
+    acceptance, so a cancel-before-arrival history is self-contained."""
     kind: ClassVar[str] = "workflow_submitted"
     dag_id: str
     tenant: str
@@ -79,6 +82,9 @@ class WorkflowCompleted(FabricEvent):
     dag_id: str
     tenant: str
     latency: float = 0.0
+    #: workflow SLO carried from spec metadata (0.0 = none) — telemetry
+    #: derives *realized* deadline misses from latency > deadline_s
+    deadline_s: float = 0.0
 
 
 @register
@@ -190,6 +196,20 @@ class GroupCompleted(FabricEvent):
     def __post_init__(self) -> None:
         self.consumers = tuple(tuple(c) for c in self.consumers)
         self.billed = tuple(self.billed)
+
+
+@register
+@dataclass(kw_only=True)
+class GroupRequeued(FabricEvent):
+    """A dispatched group left its worker without completing (worker crash
+    or batch failure): it returned to READY — or was abandoned when every
+    consumer cancelled / attempts ran out (``requeued=False``). Either way
+    the tenants' in-flight admission slots are released on this event."""
+    kind: ClassVar[str] = "group_requeued"
+    h_task: str
+    h_exec: str = ""
+    worker: str = ""
+    requeued: bool = True
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,7 @@
 """CAS-backed event journal: the control plane's durable history.
 
 A bus subscriber that appends event batches to the CAS as a hash chain
-(DESIGN.md §7). Each flushed segment is one immutable blob::
+(DESIGN.md §7–8). Each flushed segment is one immutable blob::
 
     {"prev": <key of previous segment | None>, "events": [event dicts]}
 
@@ -15,15 +15,43 @@ re-hashes on read).
 ``replay()`` walks the chain head→tail, reverses it, and yields typed
 events oldest-first — the input to ``FabricService.restore_from_journal``
 and to offline provenance tooling (``fabric_cli.py tail --journal``).
+
+**Compaction** (DESIGN.md §8): without retention the chain grows one
+segment per ``batch_size`` events forever. ``compact()`` folds the oldest
+segments through a caller-supplied *fold* (the same event-fold restore
+uses — ``repro.fabric.replay.ReplayState``) and replaces them with one
+**snapshot node** at the root of the chain::
+
+    {"prev": None, "snapshot": <fold state blob>, "events": []}
+
+The kept tail segments are re-chained on top of the snapshot (their
+``prev`` pointers change, so they are rewritten content-addressed), and a
+single ``set_ref`` publishes the new head *after* every blob is durable —
+the same crash discipline as ``flush``: a crash mid-compaction leaves the
+old chain fully intact plus orphan blobs that ``CAS.gc`` reclaims. The
+old segments become unreachable and are likewise reclaimed by GC.
 """
 from __future__ import annotations
 
-from typing import Iterator
+from typing import Callable, Iterator, Protocol
 
 from .cas import CAS
 from .events import FabricEvent, event_from_dict
 
 HEAD_REF = "journal-head"
+
+
+class SnapshotFold(Protocol):
+    """What ``compact()`` needs from a fold: apply events, serialize state.
+
+    The canonical implementation is ``repro.fabric.replay.ReplayState`` —
+    the *same* object ``FabricService.restore_from_journal`` folds events
+    through, which is what makes restore-from-(snapshot+tail) byte-identical
+    to restore-from-full-replay."""
+
+    def apply(self, e: FabricEvent) -> None: ...
+
+    def to_blob(self) -> dict: ...
 
 
 class EventJournal:
@@ -76,10 +104,20 @@ class EventJournal:
         keys.reverse()                      # oldest first
         return keys
 
+    def base_state(self) -> dict | None:
+        """The snapshot blob at the root of the chain, if compaction has
+        run — the fold state restore starts from before tail replay."""
+        keys = self._segment_keys()
+        if not keys:
+            return None
+        return self.cas.get(keys[0]).get("snapshot")
+
     def replay(self) -> Iterator[FabricEvent]:
-        """Yield the journaled history oldest-first as typed events.
-        Events still sitting in the write buffer are included (so an
-        in-process reader sees everything the bus has published)."""
+        """Yield the journaled history oldest-first as typed events (the
+        *tail* after any snapshot node — compacted history is carried by
+        ``base_state()``, not re-yielded). Events still sitting in the
+        write buffer are included (so an in-process reader sees everything
+        the bus has published)."""
         for key in self._segment_keys():
             for d in self.cas.get(key)["events"]:
                 yield event_from_dict(d)
@@ -88,3 +126,49 @@ class EventJournal:
 
     def __len__(self) -> int:
         return self.events_written + len(self._buf)
+
+    # --------------------------------------------------------- compaction --
+    def compact(self, fold_factory: Callable[[dict | None], SnapshotFold],
+                *, keep_segments: int = 0) -> dict:
+        """Fold all but the newest ``keep_segments`` segments into a snapshot
+        node and re-chain the head on top of it.
+
+        ``fold_factory(base)`` must return a fold pre-loaded with ``base``
+        (the existing snapshot state, or None) — compaction is incremental:
+        an already-compacted chain folds only the segments that accumulated
+        since the last snapshot. The caller supplies the fold because the
+        journal is policy-agnostic: the fold's quota configuration (fair-
+        share weights) must match what restore will use, exactly as the
+        restore contract already requires (DESIGN.md §7).
+
+        Write order: snapshot blob, rewritten tail blobs, then ONE
+        ``set_ref`` — a crash anywhere before the ref advance leaves the old
+        chain intact (orphans at worst, reclaimed by ``CAS.gc``).
+        """
+        self.flush()
+        keys = self._segment_keys()
+        base: dict | None = None
+        if keys and "snapshot" in (root := self.cas.get(keys[0])):
+            base = root["snapshot"]
+            keys = keys[1:]
+        cut = len(keys) - max(0, keep_segments)
+        if cut <= 0:
+            return {"snapshot": None, "head": self.head,
+                    "folded_segments": 0, "folded_events": 0,
+                    "kept_segments": len(keys)}
+        fold = fold_factory(base)
+        folded_events = 0
+        for key in keys[:cut]:
+            for d in self.cas.get(key)["events"]:
+                fold.apply(event_from_dict(d))
+                folded_events += 1
+        snap_key = self.cas.put({"prev": None, "snapshot": fold.to_blob(),
+                                 "events": []})
+        head = snap_key
+        for key in keys[cut:]:              # re-chain the kept tail
+            head = self.cas.put({"prev": head,
+                                 "events": self.cas.get(key)["events"]})
+        self.cas.set_ref(self.ref, head)    # single atomic head advance
+        return {"snapshot": snap_key, "head": head,
+                "folded_segments": cut, "folded_events": folded_events,
+                "kept_segments": len(keys) - cut}

@@ -37,6 +37,11 @@ class Telemetry:
     # per-operator
     op_queue_waits: list[float] = field(default_factory=list)
     op_service_times: list[float] = field(default_factory=list)
+    # SLO outcomes: *realized* deadline misses (completed workflows whose
+    # latency exceeded their deadline_s metadata), not predictions — the
+    # counterpart of the job view's `predicted_miss` estimate
+    deadline_misses: int = 0
+    deadline_completions: int = 0   # completed workflows that carried an SLO
     # consolidation
     executions: int = 0
     dedup_savings: int = 0          # op-instances satisfied without execution
@@ -86,6 +91,10 @@ class Telemetry:
         self.dag_latencies.append(e.latency)
         self.dag_completions.append(e.time)
         self._tenant_bucket(e.tenant).append(e.latency)
+        if e.deadline_s > 0:
+            self.deadline_completions += 1
+            if e.latency > e.deadline_s:
+                self.deadline_misses += 1
 
     def _on_dedup_hit(self, e: ev.DedupHit) -> None:
         self.dedup_savings += e.savings
@@ -208,4 +217,6 @@ class Telemetry:
             "hot_hits": self.hot_hits,
             "retries": self.retries,
             "spec_launches": self.speculative_launches,
+            "deadline_misses": self.deadline_misses,
+            "deadline_completions": self.deadline_completions,
         }

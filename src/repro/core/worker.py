@@ -50,6 +50,9 @@ class ExecutionGroup:
     consumers: list[TaskInstance] = field(default_factory=list)
     ready_at: float = 0.0
     dispatch_at: float | None = None
+    #: tenants recorded at first dispatch — the billing fallback when every
+    #: consumer cancels mid-flight (work that ran must still be charged)
+    dispatch_tenants: tuple[str, ...] = ()
     attempts: int = 0
     running_on: set[str] = field(default_factory=set)   # workers (speculation)
     done: bool = False

@@ -1,9 +1,11 @@
 """FlowMesh fabric: the tenant-facing service layer.
 
 ``spec``       — declarative workflow documents + named templates
-``admission``  — per-tenant quotas, fair share (+EDF boost), usage metering
+``admission``  — per-tenant quotas, fair share (+EDF boost); all usage
+                 accounting event-derived (bus subscriber)
+``replay``     — the event fold shared by journal restore and compaction
 ``service``    — the long-lived FabricService wrapping one live engine,
-                 with per-job event feeds and journal restore
+                 with per-job event feeds, journal restore, compaction + GC
 ``api``        — in-process request/response handler table (HTTP-shaped)
 ``http``       — socket server + urllib client over the same handler table
 """
@@ -11,6 +13,7 @@ from .admission import (AdmissionController, QuotaExceeded, TenantQuota,
                         TenantUsage)
 from .api import FabricAPI
 from .http import FabricHTTPServer, RemoteAPI
+from .replay import FEED_KINDS, JobRecord, ReplayState, snapshot_fold
 from .service import TERMINAL_STATUSES, FabricService, JobStatus
 from .spec import (SpecError, compile_spec, default_resource_class,
                    list_templates, render_template, validate_spec)
@@ -18,6 +21,7 @@ from .spec import (SpecError, compile_spec, default_resource_class,
 __all__ = [
     "AdmissionController", "QuotaExceeded", "TenantQuota", "TenantUsage",
     "FabricAPI", "FabricHTTPServer", "RemoteAPI", "FabricService",
+    "FEED_KINDS", "JobRecord", "ReplayState", "snapshot_fold",
     "JobStatus", "TERMINAL_STATUSES", "SpecError", "compile_spec",
     "default_resource_class",
     "list_templates", "render_template", "validate_spec",

@@ -15,13 +15,19 @@ The controller also meters per-tenant usage: ops run vs. deduped, dollar
 spend (cost of executed batches split across every consumer tenant — shared
 work is shared cost), and workflow latency percentiles.
 
-The engine stays tenant-agnostic: it calls the five ``note_*``/``filter_*``
-hooks when an admission controller is installed, and never reads quotas.
+**All accounting is event-derived** (DESIGN.md §8): the controller is an
+``EventBus`` subscriber, and ``on_event`` is the *single* write path for
+usage state — the live fabric publishes events at every transition, and
+journal replay feeds the very same handler, so restored accounting cannot
+drift from what the live fabric computed. The engine stays tenant-agnostic:
+the only imperative surface is ``admit_workflow`` (a read-only quota check)
+and ``filter_pending`` (quota holds + fair-share ordering at the ready-pool
+boundary).
 """
 from __future__ import annotations
 
 from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 from repro.core.worker import ExecutionGroup
 from repro.core.dag import WorkflowDAG
@@ -71,9 +77,11 @@ class AdmissionController:
         self.default_quota = default_quota or TenantQuota()
         self.quotas: dict[str, TenantQuota] = {}
         self.usage: dict[str, TenantUsage] = defaultdict(TenantUsage)
-        #: groups we incremented inflight for -> tenants charged, keyed by
-        #: object id (entry removed on completion/requeue, so ids never stale)
-        self._counted: dict[int, list[str]] = {}
+        #: dispatch-time tenant attribution awaiting completion/requeue:
+        #: h_task -> FIFO of tenant lists (one entry per live dispatch; the
+        #: pool keeps at most one live group per h_task, the FIFO is a
+        #: belt-and-braces guard for dedup-disabled baselines)
+        self._counted: dict[str, list[list[str]]] = {}
         #: monotone fair-share clock floor (survives idle windows)
         self._vtime_floor = 0.0
 
@@ -85,23 +93,54 @@ class AdmissionController:
 
     # ---------------------------------------------------- submission gate --
     def admit_workflow(self, dag: WorkflowDAG) -> None:
-        """Raise ``QuotaExceeded`` if the tenant may not submit right now."""
+        """Raise ``QuotaExceeded`` if the tenant may not submit right now.
+
+        Read-only: the accounting consequences (submitted/rejected counts,
+        active-workflow tracking) flow from the ``workflow_submitted`` /
+        ``job_rejected`` events the caller publishes on the outcome."""
         q, u = self.quota(dag.tenant), self.usage[dag.tenant]
         if (q.max_active_workflows is not None
                 and u.active_workflows >= q.max_active_workflows):
-            u.rejected += 1
             raise QuotaExceeded(
                 dag.tenant, f"max_active_workflows={q.max_active_workflows} "
                 f"reached ({u.active_workflows} active)")
         if q.budget_usd is not None and u.spend_usd >= q.budget_usd:
-            u.rejected += 1
             raise QuotaExceeded(
                 dag.tenant, f"budget exhausted "
                 f"(${u.spend_usd:.4f} of ${q.budget_usd:.4f})")
-        self._workflow_started(dag.tenant)
 
-    # shared by the live note_* hooks and journal replay — one body, so
-    # restored accounting cannot drift from what the live fabric computed
+    # --------------------------------------------- the single write path ----
+    def on_event(self, e) -> None:
+        """Fold one control-plane event into per-tenant usage accounting.
+
+        THE write path: the live bus and journal replay (including the
+        snapshot fold in ``EventJournal.compact``) all call this one body —
+        there is no imperative accounting hook left to diverge from it."""
+        kind = e.kind
+        if kind == "workflow_submitted":
+            self._workflow_started(e.tenant)
+        elif kind == "workflow_completed":
+            self._workflow_done(e.tenant)
+        elif kind == "workflow_cancelled":
+            self._workflow_cancelled(e.tenant)
+        elif kind == "job_rejected":
+            self.usage[e.tenant].rejected += 1
+        elif kind == "dedup_hit":
+            self.usage[e.tenant].ops_deduped += e.savings
+        elif kind == "dispatch":
+            # one physical op per group: count each tenant once, no matter
+            # how many of their workflow instances dedup onto it — this
+            # mirrors the per-group headroom charge in filter_pending, so
+            # one dispatch round cannot overshoot max_inflight_ops
+            for t in e.tenants:
+                self.usage[t].inflight_ops += 1
+            self._counted.setdefault(e.h_task, []).append(list(e.tenants))
+        elif kind == "group_requeued":
+            self._uncount(e.h_task)
+        elif kind == "group_completed":
+            self._uncount(e.h_task)
+            self._charge(list(e.billed), e.cost, e.duration)
+
     def _workflow_started(self, tenant: str) -> None:
         u = self.usage[tenant]
         if u.active_workflows == 0:
@@ -123,11 +162,38 @@ class AdmissionController:
         u.active_workflows = max(0, u.active_workflows - 1)
         u.cancelled += 1
 
-    def note_workflow_done(self, dag: WorkflowDAG, now: float) -> None:
-        self._workflow_done(dag.tenant)
+    def _uncount(self, h_task: str) -> None:
+        stack = self._counted.get(h_task)
+        if not stack:
+            return        # re-dispatch after requeue was never re-counted
+        for t in stack.pop(0):
+            self.usage[t].inflight_ops = max(
+                0, self.usage[t].inflight_ops - 1)
+        if not stack:
+            del self._counted[h_task]
 
-    def note_workflow_cancelled(self, dag: WorkflowDAG) -> None:
-        self._workflow_cancelled(dag.tenant)
+    def _charge(self, tenants: list[str], cost: float,
+                duration: float) -> None:
+        """Accounting core: credit the first consumer with the run, every
+        later consumer with a dedup save, and split the cost across all
+        consumer instances (shared work, shared bill)."""
+        if not tenants:
+            return
+        share = cost / len(tenants)
+        t_share = duration / len(tenants)
+        for i, t in enumerate(tenants):
+            u = self.usage[t]
+            if i == 0:
+                u.ops_executed += 1
+            else:
+                u.ops_deduped += 1
+            u.spend_usd += share
+            u.gpu_seconds += t_share
+            # epsilon keeps zero-cost (CPU) ops from being free under fair
+            # share; weight scales how fast the tenant's clock advances
+            u.vtime += (share + 1e-6) / max(self.quota(t).weight, 1e-9)
+        # refresh the monotone fair-share floor while service is observable
+        self._system_vtime()
 
     # ------------------------------------------------ ready-pool boundary --
     def _vtime(self, tenant: str) -> float:
@@ -157,6 +223,10 @@ class AdmissionController:
         held only when *every* consumer tenant is out of headroom — shared
         work proceeds as long as one consumer can pay for it (holding it
         would punish the under-cap tenant for sharing).
+
+        ``held_ops`` is metered here directly: a hold is a scheduling
+        decision, not a journaled state transition — like ``inflight_ops``
+        it is runtime-only and deliberately absent from replayed history.
         """
         tenants_of = {id(g): {c.tenant for c in g.consumers}
                       for groups in pending.values() for g in groups}
@@ -199,94 +269,43 @@ class AdmissionController:
             return 0.0
         return self.deadline_boost / max(1.0, deadline - now)
 
-    # ------------------------------------------------------ engine events --
-    def note_dispatch(self, g: ExecutionGroup) -> None:
-        # one physical op per group: count each tenant once, no matter how
-        # many of their workflow instances dedup onto it — this mirrors the
-        # per-group headroom charge in filter_pending, so one dispatch round
-        # cannot overshoot max_inflight_ops
-        tenants = sorted({c.tenant for c in g.consumers})
-        for t in tenants:
-            self.usage[t].inflight_ops += 1
-        self._counted[id(g)] = tenants
-
-    def _uncount(self, g: ExecutionGroup) -> None:
-        for t in self._counted.pop(id(g), ()):
-            self.usage[t].inflight_ops = max(
-                0, self.usage[t].inflight_ops - 1)
-
-    def note_requeue(self, g: ExecutionGroup) -> None:
-        self._uncount(g)
-
-    def note_executed(self, g: ExecutionGroup, *, cost: float,
-                      duration: float, now: float) -> list[str]:
-        """One batched execution finished for this group: credit the first
-        consumer with the run, every later consumer with a dedup save, and
-        split the cost across all consumer instances (shared work, shared
-        bill). If every consumer was detached by cancellation mid-flight,
-        the work still ran on their behalf — bill the tenants recorded at
-        dispatch, or submit-and-cancel would burn GPU time for free.
-
-        Returns the billed tenant list (in charge order) so the engine can
-        record it on the ``GroupCompleted`` event for journal replay."""
-        dispatched_for = self._counted.pop(id(g), [])
-        for t in dispatched_for:
-            self.usage[t].inflight_ops = max(
-                0, self.usage[t].inflight_ops - 1)
-        tenants = [c.tenant for c in g.consumers] or list(dispatched_for)
-        self._charge(tenants, cost, duration)
-        return tenants
-
-    def _charge(self, tenants: list[str], cost: float,
-                duration: float) -> None:
-        """Shared accounting core for the live path and journal replay."""
-        if not tenants:
-            return
-        share = cost / len(tenants)
-        t_share = duration / len(tenants)
-        for i, t in enumerate(tenants):
-            u = self.usage[t]
-            if i == 0:
-                u.ops_executed += 1
-            else:
-                u.ops_deduped += 1
-            u.spend_usd += share
-            u.gpu_seconds += t_share
-            # epsilon keeps zero-cost (CPU) ops from being free under fair
-            # share; weight scales how fast the tenant's clock advances
-            u.vtime += (share + 1e-6) / max(self.quota(t).weight, 1e-9)
-        # refresh the monotone fair-share floor while service is observable
-        self._system_vtime()
-
-    def note_deduped(self, tenant: str, n: int = 1) -> None:
-        """Ops satisfied instantly from the result index (dedup across time)."""
-        self.usage[tenant].ops_deduped += n
-
-    # ------------------------------------------------------ journal replay --
-    def replay_event(self, e) -> None:
-        """Rebuild usage accounting from one journaled event (the restore
-        path — see ``FabricService.restore_from_journal``). Mirrors the
-        live hooks; transient scheduling counters (``inflight_ops``,
-        ``held_ops``) are runtime-only state and are not reconstructed."""
-        kind = e.kind
-        if kind == "workflow_submitted":
-            self._workflow_started(e.tenant)
-        elif kind == "workflow_completed":
-            self._workflow_done(e.tenant)
-        elif kind == "workflow_cancelled":
-            self._workflow_cancelled(e.tenant)
-        elif kind == "job_rejected":
-            self.usage[e.tenant].rejected += 1
-        elif kind == "dedup_hit":
-            self.note_deduped(e.tenant, e.savings)
-        elif kind == "group_completed":
-            self._charge(list(e.billed), e.cost, e.duration)
-
+    # ---------------------------------------------------- restore support --
     def replay_interrupted(self, tenant: str) -> None:
         """A job that was live when the fabric died: its workflow state is
         unrecoverable (in-flight engine state is not journaled), so the
         restored record is closed out as cancelled."""
         self._workflow_cancelled(tenant)
+
+    def reset_transients(self) -> None:
+        """Drop in-flight scheduling state after a restore: the groups it
+        tracks died with the old process and will never complete — keeping
+        their counts would permanently eat into ``max_inflight_ops``."""
+        self._counted.clear()
+        for u in self.usage.values():
+            u.inflight_ops = 0
+
+    # -------------------------------------------- snapshot serialization --
+    def dump_state(self) -> dict:
+        """Usage accounting as a JSON-shaped blob for journal snapshots.
+
+        Includes the dispatch attributions (``_counted``) so a snapshot cut
+        mid-flight folds the tail's completions exactly like full replay
+        would. Quotas are operator config, not history — they are NOT
+        serialized (re-apply them before restoring, DESIGN.md §7)."""
+        return {
+            "usage": {t: asdict(u) for t, u in self.usage.items()},
+            "vtime_floor": self._vtime_floor,
+            "counted": {h: [list(ts) for ts in stack]
+                        for h, stack in self._counted.items()},
+        }
+
+    def load_state(self, blob: dict) -> None:
+        self.usage.clear()
+        for t, d in blob["usage"].items():
+            self.usage[t] = TenantUsage(**d)
+        self._vtime_floor = blob["vtime_floor"]
+        self._counted = {h: [list(ts) for ts in stack]
+                         for h, stack in blob["counted"].items()}
 
     # ----------------------------------------------------------- reporting --
     def usage_snapshot(self, tenant: str) -> dict:

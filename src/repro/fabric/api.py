@@ -19,6 +19,8 @@ Routes:
     GET  /health
     POST /pump                       {"max_steps": n?, "until": t?}
     POST /drain                      {"until": t?}   (run_until_idle)
+    POST /admin/compact              {"keep_segments": n?}  (409 w/o journal)
+    POST /admin/gc
 
 The events feed is cursor-based: pass the ``cursor`` from the previous
 response as ``since`` to receive only newer events — no duplicates, no
@@ -49,6 +51,8 @@ class FabricAPI:
             ("GET", ("health",), self._get_health),
             ("POST", ("pump",), self._pump),
             ("POST", ("drain",), self._drain),
+            ("POST", ("admin", "compact"), self._compact),
+            ("POST", ("admin", "gc"), self._gc),
         ]
 
     # ------------------------------------------------------------ routing --
@@ -187,3 +191,14 @@ class FabricAPI:
         tel = self.service.run_until_idle(until)
         return 200, {"now": self.service.engine.now,
                      "summary": tel.summary()}
+
+    def _compact(self, params, query, body) -> tuple[int, Any]:
+        keep, err = self._number(body, "keep_segments")
+        if err:
+            return 400, err
+        if self.service.journal is None:
+            return 409, {"error": "no_journal"}
+        return 200, self.service.compact(keep_segments=int(keep or 0))
+
+    def _gc(self, params, query, body) -> tuple[int, Any]:
+        return 200, self.service.gc()

@@ -1,0 +1,178 @@
+"""The event fold shared by journal restore and journal compaction.
+
+``ReplayState`` rebuilds tenant-observable service state from the typed
+event stream: job records (per-op states, lineage rows), per-job feeds
+(original bus seqs — cursors resume without gaps), the result index, and —
+through the attached ``AdmissionController``'s ``on_event`` — per-tenant
+usage accounting. It is the *only* body that interprets history:
+
+  * ``FabricService.restore_from_journal`` folds (snapshot base + tail
+    events) through it after a restart;
+  * ``EventJournal.compact`` folds the oldest segments through it and
+    serializes ``to_blob()`` as the chain's snapshot node (DESIGN.md §8).
+
+Because both paths run the same fold, restore-from-(snapshot+tail) is
+byte-identical to restore-from-full-replay — the crash/replay harness
+(tests/harness.py) asserts exactly this for arbitrary compaction points.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import events as E
+from repro.core.dag import OpState, WorkflowDAG
+
+from .admission import AdmissionController
+
+#: event kinds that appear in a job's tenant-visible feed
+FEED_KINDS = {"workflow_submitted", "op_ready", "dedup_hit", "op_completed",
+              "workflow_completed", "workflow_cancelled", "job_rejected"}
+
+#: snapshot blob schema version (bump on incompatible fold-state changes)
+SNAPSHOT_FORMAT = 1
+
+#: JobRecord fields carried by a snapshot (``dag`` is live-only state)
+_RECORD_FIELDS = ("job_id", "tenant", "submitted", "submitted_at", "error",
+                  "cancelled", "op_states", "lineage_rows", "metadata",
+                  "completed_at")
+
+
+@dataclass
+class JobRecord:
+    job_id: str
+    tenant: str
+    submitted: bool            # False => rejected at admission
+    submitted_at: float
+    #: live records hold the compiled DAG; journal-restored records hold
+    #: None and answer queries from the event-sourced fields below
+    dag: WorkflowDAG | None = None
+    error: str | None = None
+    cancelled: bool = False
+    op_states: dict[str, str] = field(default_factory=dict)
+    lineage_rows: list[dict] = field(default_factory=list)
+    metadata: dict = field(default_factory=dict)
+    completed_at: float | None = None
+
+    def to_dict(self) -> dict:
+        return {name: getattr(self, name) for name in _RECORD_FIELDS}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "JobRecord":
+        return cls(dag=None, **{name: d[name] for name in _RECORD_FIELDS})
+
+
+class ReplayState:
+    """Fold of journaled history into restorable service state."""
+
+    def __init__(self, admission: AdmissionController | None = None) -> None:
+        self.admission = admission or AdmissionController()
+        self.jobs: dict[str, JobRecord] = {}
+        self.feeds: dict[str, list[dict]] = {}
+        self.result_index: dict[str, str] = {}   # unfiltered: h_task -> key
+        self.max_seq = -1
+        self.events = 0
+
+    # ------------------------------------------------------------- fold ----
+    def apply(self, e: E.FabricEvent) -> None:
+        """Fold one journaled event — mirrors exactly what the live service
+        derives from the same event on the bus."""
+        self.events += 1
+        self.max_seq = max(self.max_seq, e.seq)
+        kind = e.kind
+        if kind == "workflow_submitted":
+            self.jobs[e.dag_id] = JobRecord(
+                job_id=e.dag_id, tenant=e.tenant, submitted=True,
+                submitted_at=e.time, dag=None,
+                op_states={op: OpState.PENDING.value for op in e.ops},
+                metadata=dict(e.metadata))
+        elif kind == "job_rejected":
+            self.jobs[e.dag_id] = JobRecord(
+                job_id=e.dag_id, tenant=e.tenant, submitted=False,
+                submitted_at=e.time, dag=None, error=e.reason,
+                op_states={op: OpState.PENDING.value for op in e.ops})
+        else:
+            rec = self.jobs.get(getattr(e, "dag_id", None))
+            if kind == "op_ready" and rec is not None:
+                rec.op_states[e.op] = OpState.READY.value
+            elif kind == "op_completed" and rec is not None:
+                rec.op_states[e.op] = OpState.COMPLETED.value
+                rec.lineage_rows.append({
+                    "op": e.op, "executed": e.executed, "worker": e.worker,
+                    "output_hash": e.output_hash,
+                    "input_hashes": list(e.input_hashes),
+                    "h_task": e.h_task, "t_complete": e.time,
+                })
+            elif kind == "dedup_hit" and rec is not None:
+                rec.op_states[e.op] = OpState.COMPLETED.value
+            elif kind == "workflow_completed" and rec is not None:
+                rec.completed_at = e.time
+            elif kind == "workflow_cancelled":
+                if rec is None:
+                    # defensive: a journal whose submission event predates
+                    # the chain (e.g. written before submissions were
+                    # journaled) — synthesize the record and the submit side
+                    # of the accounting so counts cannot skew
+                    rec = self.jobs[e.dag_id] = JobRecord(
+                        job_id=e.dag_id, tenant=e.tenant, submitted=True,
+                        submitted_at=e.time, dag=None)
+                    self.admission.on_event(E.WorkflowSubmitted(
+                        time=e.time, dag_id=e.dag_id, tenant=e.tenant))
+                rec.cancelled = True
+        if kind == "group_completed":
+            # unfiltered here; restore keeps only entries whose artifact
+            # still exists in the CAS (dedup across restarts)
+            self.result_index[e.h_task] = e.output_hash
+        self.admission.on_event(e)
+        if kind in FEED_KINDS:
+            dag_id = getattr(e, "dag_id", None)
+            if dag_id in self.jobs:
+                self.feeds.setdefault(dag_id, []).append(e.to_dict())
+
+    # -------------------------------------------------------- snapshotting --
+    def to_blob(self) -> dict:
+        """Serialize the fold as the journal's snapshot node payload."""
+        return {
+            "format": SNAPSHOT_FORMAT,
+            "events": self.events,
+            "max_seq": self.max_seq,
+            "jobs": {jid: rec.to_dict() for jid, rec in self.jobs.items()},
+            "feeds": {jid: [dict(d) for d in evs]
+                      for jid, evs in self.feeds.items()},
+            "result_index": dict(self.result_index),
+            "admission": self.admission.dump_state(),
+        }
+
+    def load(self, blob: dict) -> None:
+        """Resume the fold from a snapshot node (inverse of ``to_blob``)."""
+        if blob.get("format") != SNAPSHOT_FORMAT:
+            raise ValueError(
+                f"unsupported snapshot format {blob.get('format')!r}")
+        self.events = blob["events"]
+        self.max_seq = blob["max_seq"]
+        self.jobs = {jid: JobRecord.from_dict(d)
+                     for jid, d in blob["jobs"].items()}
+        self.feeds = {jid: [dict(d) for d in evs]
+                      for jid, evs in blob["feeds"].items()}
+        self.result_index = dict(blob["result_index"])
+        self.admission.load_state(blob["admission"])
+
+
+def snapshot_fold(admission_template: AdmissionController | None = None):
+    """Build the ``fold_factory`` that ``EventJournal.compact`` expects.
+
+    ``admission_template`` supplies quota configuration (fair-share weights
+    change how vtime folds); usage state always starts from the snapshot
+    base, never from the template — compaction must not absorb the live
+    controller's runtime state.
+    """
+    def factory(base: dict | None) -> ReplayState:
+        adm = AdmissionController()
+        if admission_template is not None:
+            adm.deadline_boost = admission_template.deadline_boost
+            adm.default_quota = admission_template.default_quota
+            adm.quotas = dict(admission_template.quotas)
+        state = ReplayState(adm)
+        if base is not None:
+            state.load(base)
+        return state
+    return factory

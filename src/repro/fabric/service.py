@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import bisect
 import enum
-from dataclasses import dataclass, field
 
 from repro.core import events as E
 from repro.core.control_plane import EngineConfig, FlowMeshEngine
@@ -33,13 +32,10 @@ from repro.core.telemetry import Telemetry
 from repro.core.worker import WorkerState
 
 from .admission import AdmissionController, QuotaExceeded, TenantQuota
+from .replay import FEED_KINDS, JobRecord, ReplayState, snapshot_fold
 from .spec import SpecError, compile_spec, render_template
 
 DEFAULT_DEVICE_CLASSES = ("h100-nvl-94g", "rtx4090-48g", "rtx4090-24g")
-
-#: event kinds that appear in a job's tenant-visible feed
-FEED_KINDS = {"workflow_submitted", "op_ready", "dedup_hit", "op_completed",
-              "workflow_completed", "workflow_cancelled", "job_rejected"}
 
 
 class JobStatus(str, enum.Enum):
@@ -55,23 +51,6 @@ class JobStatus(str, enum.Enum):
 TERMINAL_STATUSES = frozenset((JobStatus.COMPLETED.value,
                                JobStatus.CANCELLED.value,
                                JobStatus.REJECTED.value))
-
-
-@dataclass
-class JobRecord:
-    job_id: str
-    tenant: str
-    submitted: bool            # False => rejected at admission
-    submitted_at: float
-    #: live records hold the compiled DAG; journal-restored records hold
-    #: None and answer queries from the event-sourced fields below
-    dag: WorkflowDAG | None = None
-    error: str | None = None
-    cancelled: bool = False
-    op_states: dict[str, str] = field(default_factory=dict)
-    lineage_rows: list[dict] = field(default_factory=list)
-    metadata: dict = field(default_factory=dict)
-    completed_at: float | None = None
 
 
 class FabricService:
@@ -96,7 +75,7 @@ class FabricService:
                 autoscaler=autoscaler, admission=self.admission)
             engine.bootstrap_workers(list(device_classes))
         else:
-            engine.admission = self.admission
+            engine.attach_admission(self.admission)
         self.engine = engine
         self.jobs: dict[str, JobRecord] = {}
         self._restored = False
@@ -151,10 +130,13 @@ class FabricService:
                              ) -> dict:
         """Rebuild service state from a journaled event history.
 
-        Replays the chain oldest-first: job records (with per-op states and
-        lineage rows), per-job feeds (original seqs — tenant cursors resume
-        without gaps), per-tenant usage accounting, and the engine's result
-        index (artifacts still in the CAS keep deduping across the restart).
+        Loads the chain's snapshot node (if compaction has run), then folds
+        the tail oldest-first — both through the same ``ReplayState`` the
+        compactor uses, so a snapshot+tail restore is byte-identical to a
+        full-chain replay. Rebuilt: job records (per-op states, lineage
+        rows), per-job feeds (original seqs — tenant cursors resume without
+        gaps), per-tenant usage accounting, and the engine's result index
+        (artifacts still in the CAS keep deduping across the restart).
         Jobs that were live mid-journal are closed out as cancelled with an
         ``interrupted`` error — their in-flight engine state is gone; thanks
         to the result index a resubmission only pays for unfinished ops.
@@ -167,12 +149,21 @@ class FabricService:
             # charge and re-append feed events under their original seqs
             raise ValueError("restore_from_journal requires a fresh service")
         self._restored = True
-        n = max_seq = 0
+        state = ReplayState(self.admission)
+        base = journal.base_state()
+        from_snapshot = 0
+        if base is not None:
+            state.load(base)
+            from_snapshot = state.events
         for e in journal.replay():
-            n += 1
-            max_seq = max(max_seq, e.seq)
-            self._restore_event(e)
-        self.engine.bus.advance_past(max_seq)
+            state.apply(e)
+        self.jobs = state.jobs
+        self._feeds = state.feeds
+        for h_task, key in state.result_index.items():
+            if key in self.engine.cas:
+                # dedup across restarts: the artifact survived in the CAS
+                self.engine.result_index[h_task] = key
+        self.engine.bus.advance_past(state.max_seq)
         self.engine.now = max(self.engine.now,
                               max((r.completed_at or r.submitted_at
                                    for r in self.jobs.values()), default=0.0))
@@ -185,56 +176,37 @@ class FabricService:
                 rec.error = "interrupted by fabric restart"
                 self.admission.replay_interrupted(rec.tenant)
                 interrupted += 1
-        return {"events": n, "jobs": len(self.jobs),
-                "interrupted": interrupted}
+        # in-flight scheduling counters died with the old process
+        self.admission.reset_transients()
+        return {"events": state.events, "jobs": len(self.jobs),
+                "interrupted": interrupted, "from_snapshot": from_snapshot}
 
-    def _restore_event(self, e: E.FabricEvent) -> None:
-        kind = e.kind
-        if kind == "workflow_submitted":
-            self.jobs[e.dag_id] = JobRecord(
-                job_id=e.dag_id, tenant=e.tenant, submitted=True,
-                submitted_at=e.time, dag=None,
-                op_states={op: OpState.PENDING.value for op in e.ops},
-                metadata=dict(e.metadata))
-        elif kind == "job_rejected":
-            self.jobs[e.dag_id] = JobRecord(
-                job_id=e.dag_id, tenant=e.tenant, submitted=False,
-                submitted_at=e.time, dag=None, error=e.reason,
-                op_states={op: OpState.PENDING.value for op in e.ops})
-        else:
-            rec = self.jobs.get(getattr(e, "dag_id", None))
-            if kind == "op_ready" and rec is not None:
-                rec.op_states[e.op] = OpState.READY.value
-            elif kind == "op_completed" and rec is not None:
-                rec.op_states[e.op] = OpState.COMPLETED.value
-                rec.lineage_rows.append({
-                    "op": e.op, "executed": e.executed, "worker": e.worker,
-                    "output_hash": e.output_hash,
-                    "input_hashes": list(e.input_hashes),
-                    "h_task": e.h_task, "t_complete": e.time,
-                })
-            elif kind == "dedup_hit" and rec is not None:
-                rec.op_states[e.op] = OpState.COMPLETED.value
-            elif kind == "workflow_completed" and rec is not None:
-                rec.completed_at = e.time
-            elif kind == "workflow_cancelled":
-                if rec is None:
-                    # cancelled before the arrival event was consumed: the
-                    # journal never saw workflow_submitted, but the tenant
-                    # saw a cancelled job — synthesize the record and the
-                    # submit side of the accounting (the live path counted
-                    # it at admit_workflow time)
-                    rec = self.jobs[e.dag_id] = JobRecord(
-                        job_id=e.dag_id, tenant=e.tenant, submitted=True,
-                        submitted_at=e.time, dag=None)
-                    self.admission.replay_event(E.WorkflowSubmitted(
-                        time=e.time, dag_id=e.dag_id, tenant=e.tenant))
-                rec.cancelled = True
-        if kind == "group_completed" and e.output_hash in self.engine.cas:
-            # dedup across restarts: the artifact survived in the CAS
-            self.engine.result_index[e.h_task] = e.output_hash
-        self.admission.replay_event(e)
-        self._on_event(e)                  # feeds keep their original seqs
+    # -------------------------------------------------------- retention ----
+    def compact(self, *, keep_segments: int = 0) -> dict:
+        """Fold the journal's oldest segments into a snapshot node
+        (DESIGN.md §8) using this service's quota configuration for the
+        fold. Leaves live state untouched — only the durable chain changes;
+        the old segments become garbage for ``gc`` to reclaim."""
+        if self.journal is None:
+            raise ValueError("no journal attached")
+        return self.journal.compact(snapshot_fold(self.admission),
+                                    keep_segments=keep_segments)
+
+    def gc(self, extra_roots: tuple[str, ...] = ()) -> dict:
+        """Mark-and-sweep the engine's CAS. Roots: every named ref (journal
+        heads), the live result index's artifacts, the resolved inputs of
+        every live workflow (interned literals are in no journaled event
+        until ``op_completed`` — an in-flight op must still find them), and
+        ``extra_roots``. The journal buffer is flushed first so nothing
+        reachable only through pending events is swept."""
+        if self.journal is not None:
+            self.journal.flush()
+        roots = set(extra_roots) | set(self.engine.result_index.values())
+        for dag in self.engine.dags.values():
+            for hashes in dag.input_hashes.values():
+                roots.update(hashes)
+            roots.update(dag.output_hash.values())
+        return self.engine.cas.gc(roots=roots)
 
     # ----------------------------------------------------------- submit ----
     def submit(self, doc: dict) -> dict:
@@ -277,8 +249,7 @@ class FabricService:
         if rec.submitted and not rec.cancelled and rec.dag is not None \
                 and not self._dag(rec).done:
             if self.engine.cancel(job_id):
-                rec.cancelled = True
-                self.admission.note_workflow_cancelled(rec.dag)
+                rec.cancelled = True     # accounting flows from the event
         return self.job(job_id)
 
     # ------------------------------------------------------------- drive ----

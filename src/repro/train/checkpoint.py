@@ -47,7 +47,14 @@ class Checkpointer:
     def __init__(self, cas: CAS, run_name: str = "run") -> None:
         self.cas = cas
         self.run_name = run_name
-        self._pointers: dict[str, str] = {}    # run -> latest manifest hash
+
+    @property
+    def _ref(self) -> str:
+        # a *named ref* (not an orphan pointer blob): it survives restarts,
+        # `restore()` finds it without a manifest hash, and it roots the
+        # whole checkpoint chain against `CAS.gc` (manifests are JSON, which
+        # the GC tracer decodes to reach every leaf hash)
+        return f"checkpoint/{self.run_name}"
 
     def save(self, state: Any, step: int, *, extra: dict | None = None) -> str:
         leaves, treedef = jax.tree.flatten(state)
@@ -59,15 +66,11 @@ class Checkpointer:
             "extra": extra or {},
         }
         mhash = self.cas.put_bytes(json.dumps(manifest).encode())
-        self._pointers[self.run_name] = mhash
-        # durable pointer for DiskCAS runs
-        ptr = json.dumps({"run": self.run_name, "manifest": mhash,
-                          "step": step}).encode()
-        self.cas.put_bytes(ptr)
+        self.cas.set_ref(self._ref, mhash)     # blob first, then the pointer
         return mhash
 
     def restore(self, manifest_hash: str | None = None) -> tuple[Any, int, dict]:
-        mhash = manifest_hash or self._pointers.get(self.run_name)
+        mhash = manifest_hash or self.cas.get_ref(self._ref)
         if mhash is None:
             raise FileNotFoundError(f"no checkpoint for run {self.run_name}")
         manifest = json.loads(self.cas.get_bytes(mhash))
@@ -79,4 +82,4 @@ class Checkpointer:
 
     @property
     def latest(self) -> str | None:
-        return self._pointers.get(self.run_name)
+        return self.cas.get_ref(self._ref)

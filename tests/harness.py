@@ -1,0 +1,232 @@
+"""Deterministic crash/replay harness for the journal + compaction stack.
+
+Three building blocks (used by tests/test_compaction.py):
+
+  * ``CrashingCAS`` — a CAS proxy that models process death at a chosen
+    write boundary (the N-th ``put`` or ``set_ref``) by raising ``Crash``
+    *before* the write lands. Arm it, poke the journal, catch ``Crash``,
+    then restore a fresh service over the inner store — exactly the
+    process-kill the blob-then-ref discipline is designed to survive.
+
+  * ``dual_service`` — one live fabric journaling the same bus to TWO heads
+    in one CAS: the *primary* (subject of compaction/crash injection) and a
+    *shadow* that is never compacted. Because both journals record the
+    identical event stream, restoring each into a fresh service gives a
+    ground-truth comparison: restore-from-(snapshot+tail) must equal
+    restore-from-full-replay, for any compaction point.
+
+  * ``run_schedule`` — drives a service through a seed-derived schedule of
+    submits / pumps / cancels / compactions, so both the hypothesis
+    property test and the no-hypothesis fallback exercise arbitrary
+    interleavings through one code path.
+"""
+from __future__ import annotations
+
+import random
+
+from repro.core.cas import CAS
+from repro.core.journal import EventJournal
+from repro.fabric import FabricService, TenantQuota
+
+DEVICES = ("h100-nvl-94g", "rtx4090-24g")
+SHADOW_REF = "shadow-head"
+
+#: schedule quota config — re-applied verbatim to every restored service
+#: (quotas are operator config, not journaled history: DESIGN.md §7)
+QUOTAS = {"acme": TenantQuota(max_active_workflows=3, weight=2.0),
+          "globex": TenantQuota(weight=0.5)}
+
+TENANTS = ("acme", "globex", "initech")
+
+
+class Crash(RuntimeError):
+    """Simulated process death mid-write."""
+
+
+class CrashingCAS:
+    """CAS proxy that dies at a chosen put/set_ref boundary.
+
+    ``arm(op, after)`` schedules a ``Crash`` raised *instead of* the
+    ``after+1``-th matching operation — the write never happens, modelling
+    a kill between the previous durable write and this one.
+    """
+
+    def __init__(self, inner: CAS) -> None:
+        self.inner = inner
+        self._armed: list | None = None      # [op, remaining]
+
+    def arm(self, op: str, after: int = 0) -> None:
+        assert op in ("put", "set_ref")
+        self._armed = [op, after]
+
+    def disarm(self) -> None:
+        self._armed = None
+
+    def _boundary(self, op: str) -> None:
+        if self._armed and self._armed[0] == op:
+            if self._armed[1] == 0:
+                self._armed = None
+                raise Crash(op)
+            self._armed[1] -= 1
+
+    # -- write boundaries ---------------------------------------------------
+    def put_bytes(self, data):
+        self._boundary("put")
+        return self.inner.put_bytes(data)
+
+    def put(self, obj):
+        self._boundary("put")
+        return self.inner.put(obj)
+
+    def publish(self, data):
+        self._boundary("put")
+        return self.inner.publish(data)
+
+    def set_ref(self, name, key):
+        self._boundary("set_ref")
+        return self.inner.set_ref(name, key)
+
+    # -- transparent reads (dunders bypass __getattr__) ----------------------
+    def __contains__(self, key):
+        return key in self.inner
+
+    def __len__(self):
+        return len(self.inner)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def clone_cas(cas) -> CAS:
+    """Snapshot a store (blobs + refs) into a fresh in-memory CAS — the
+    pre-crash reference a post-crash restore is compared against."""
+    out = CAS()
+    for key in cas.keys():
+        out._blobs[key] = cas.get_bytes(key)
+    for name, key in cas.refs().items():
+        out.set_ref(name, key)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def build_service(cas, *, seed=7, batch_size=3, ref=None,
+                  quotas=QUOTAS) -> FabricService:
+    journal = (EventJournal(cas, batch_size=batch_size) if ref is None
+               else EventJournal(cas, batch_size=batch_size, ref=ref))
+    svc = FabricService(seed=seed, cas=cas, device_classes=DEVICES,
+                        journal=journal)
+    for tenant, quota in quotas.items():
+        svc.set_quota(tenant, quota)
+    return svc
+
+
+def dual_service(cas=None, *, seed=7, batch_size=3):
+    """A live fabric whose bus feeds two journals on one CAS: the primary
+    (``journal-head``) and an uncompacted shadow (``shadow-head``)."""
+    cas = cas if cas is not None else CAS()
+    svc = build_service(cas, seed=seed, batch_size=batch_size)
+    shadow = EventJournal(cas, batch_size=batch_size, ref=SHADOW_REF)
+    svc.engine.bus.subscribe(shadow.on_event)
+    return svc, shadow
+
+
+def spec_doc(tenant: str, tag: str, *, deadline_s=None) -> dict:
+    doc = {
+        "tenant": tenant,
+        "ops": [
+            {"name": "gen", "op_type": "generate",
+             "model_id": "llama-3.2-1b", "inputs": [f"prompt:{tag}"],
+             "tokens_in": 256, "tokens_out": 64},
+            {"name": "score", "op_type": "score", "model_id": "reward-1b",
+             "inputs": [{"ref": "gen"}], "tokens_in": 256, "tokens_out": 8},
+        ],
+    }
+    if deadline_s is not None:
+        doc["deadline_s"] = deadline_s
+    return doc
+
+
+def run_schedule(svc: FabricService, schedule, *, compactor=None) -> None:
+    """Apply one schedule — a list of steps:
+
+    ``("submit", tenant_idx, tag_idx)``   submit a two-op spec (tags repeat
+                                          across tenants => cross-tenant dedup)
+    ``("pump", n)``                       advance the engine n events
+    ``("cancel", k)``                     cancel the k-th submitted job
+    ``("compact", keep)``                 compact the primary journal
+    ``("drain",)``                        run to idle (flushes the journal)
+    """
+    submitted: list[str] = []
+    for step in schedule:
+        op = step[0]
+        if op == "submit":
+            job = svc.submit(spec_doc(TENANTS[step[1] % len(TENANTS)],
+                                      f"t{step[2]}"))
+            submitted.append(job["job_id"])
+        elif op == "pump":
+            svc.pump(max_steps=step[1])
+        elif op == "cancel":
+            if submitted:
+                svc.cancel(submitted[step[1] % len(submitted)])
+        elif op == "compact":
+            (compactor or svc.compact)(keep_segments=step[1])
+        elif op == "drain":
+            svc.run_until_idle()
+        else:                              # pragma: no cover
+            raise ValueError(f"unknown step {step!r}")
+
+
+def random_schedule(rng: random.Random, *, steps=12) -> list:
+    """Seed-derived schedule generator (shared by the hypothesis strategy's
+    deterministic fallback)."""
+    out = [("submit", 0, 0)]
+    for _ in range(steps):
+        r = rng.random()
+        if r < 0.35:
+            out.append(("submit", rng.randrange(3), rng.randrange(4)))
+        elif r < 0.65:
+            out.append(("pump", rng.randrange(1, 15)))
+        elif r < 0.75:
+            out.append(("cancel", rng.randrange(6)))
+        else:
+            out.append(("compact", rng.randrange(3)))
+    out.append(("drain",))
+    if rng.random() < 0.5:                 # sometimes compact a final chain
+        out.append(("compact", rng.randrange(2)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+def observe(svc: FabricService) -> dict:
+    """Everything the acceptance criteria name, as one comparable value:
+    job views, lineage, per-job feeds, usage snapshots, result index."""
+    jids = sorted(svc.jobs)
+    tenants = sorted({rec.tenant for rec in svc.jobs.values()})
+    return {
+        "jobs": {jid: svc.job(jid) for jid in jids},
+        "lineage": {jid: svc.lineage(jid) for jid in jids},
+        "feeds": {jid: svc.events(jid) for jid in jids},
+        "usage": {t: svc.usage(t) for t in tenants},
+        "result_index": dict(svc.engine.result_index),
+    }
+
+
+def restore_fresh(cas, *, ref=None, seed=7, batch_size=3,
+                  quotas=QUOTAS) -> FabricService:
+    """A restarted process: fresh service over the same store + restore."""
+    svc = build_service(cas, seed=seed, batch_size=batch_size, ref=ref,
+                        quotas=quotas)
+    svc.restore_from_journal()
+    return svc
+
+
+def assert_restores_equal(cas, *, batch_size=3) -> dict:
+    """THE harness property: a service restored from the (possibly
+    compacted) primary journal equals one restored from the uncompacted
+    shadow, across every tenant-observable surface. Returns the common
+    observation for further assertions."""
+    primary = observe(restore_fresh(cas, batch_size=batch_size))
+    shadow = observe(restore_fresh(cas, ref=SHADOW_REF,
+                                   batch_size=batch_size))
+    assert primary == shadow
+    return primary

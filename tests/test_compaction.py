@@ -1,0 +1,418 @@
+"""Snapshot compaction, CAS garbage collection, and the single
+event-sourced write path — proven by the crash/replay harness
+(tests/harness.py, DESIGN.md §8).
+
+Covers:
+  * restore-from-(snapshot+tail) == restore-from-full-replay, for fixed,
+    seed-randomized, and hypothesis-generated schedules with arbitrary
+    compaction points;
+  * crash injection at put/set_ref boundaries during flush AND compaction:
+    the chain stays readable (orphan blob at worst) and gc reclaims the
+    orphans;
+  * gc reclaims >= the compacted segments' bytes on a DiskCAS without
+    breaking any live ref (dedup keeps working after the sweep);
+  * admission-as-subscriber: no imperative note_* hooks remain, and live
+    usage matches journal-replayed usage across all four policies;
+  * realized deadline-miss telemetry under an EDF-boosted workload.
+"""
+import random
+
+import pytest
+
+from repro.core.cas import CAS, DiskCAS
+from repro.core.control_plane import EngineConfig, FlowMeshEngine
+from repro.core.journal import EventJournal
+from repro.core.scheduler import POLICIES
+from repro.core.simulator import SimExecutor
+from repro.fabric import (AdmissionController, FabricService, ReplayState,
+                          snapshot_fold)
+
+from harness import (QUOTAS, SHADOW_REF, Crash, CrashingCAS,
+                     assert_restores_equal, build_service, clone_cas,
+                     dual_service, observe, random_schedule, restore_fresh,
+                     run_schedule, spec_doc)
+
+
+# ---------------------------------------------------------------------------
+# snapshot + tail == full replay
+# ---------------------------------------------------------------------------
+def test_compacted_restore_equals_full_replay_basic():
+    svc, shadow = dual_service()
+    for i in range(4):
+        svc.submit(spec_doc(("acme", "globex")[i % 2], f"t{i % 2}"))
+    svc.run_until_idle()
+    live_usage = {t: svc.usage(t) for t in ("acme", "globex")}
+    stats = svc.compact(keep_segments=1)
+    assert stats["folded_segments"] > 0 and stats["snapshot"] is not None
+    shadow.flush()
+    obs = assert_restores_equal(svc.engine.cas)
+    # the restored view agrees with what the live fabric computed
+    for t in ("acme", "globex"):
+        assert obs["usage"][t]["workflows"] == live_usage[t]["workflows"]
+        assert obs["usage"][t]["spend"] == live_usage[t]["spend"]
+        assert obs["usage"][t]["ops"] == live_usage[t]["ops"]
+
+
+def test_compaction_is_incremental_and_idempotent():
+    svc, shadow = dual_service()
+    svc.submit(spec_doc("acme", "a"))
+    svc.run_until_idle()
+    first = svc.compact()
+    assert first["folded_segments"] > 0
+    # nothing new: a second compaction folds zero segments, head unchanged
+    again = svc.compact()
+    assert again["folded_segments"] == 0
+    assert svc.journal.head == first["head"]
+    # more history accumulates on top of the snapshot, then folds into it
+    svc.submit(spec_doc("globex", "a"))      # dedups against acme's run
+    svc.run_until_idle()
+    second = svc.compact()
+    assert second["folded_segments"] > 0
+    assert second["snapshot"] != first["snapshot"]
+    shadow.flush()
+    assert_restores_equal(svc.engine.cas)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_arbitrary_schedules_and_compaction_points(seed):
+    """No-hypothesis fallback: seed-randomized interleavings of submit /
+    pump / cancel / compact, compared against the uncompacted shadow."""
+    svc, shadow = dual_service(seed=seed)
+    run_schedule(svc, random_schedule(random.Random(seed)))
+    svc.journal.flush()
+    shadow.flush()
+    assert_restores_equal(svc.engine.cas)
+
+
+def test_property_compaction_points_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    given, settings = hypothesis.given, hypothesis.settings
+
+    step = st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, 2), st.integers(0, 3)),
+        st.tuples(st.just("pump"), st.integers(1, 14)),
+        st.tuples(st.just("cancel"), st.integers(0, 5)),
+        st.tuples(st.just("compact"), st.integers(0, 2)),
+    )
+
+    @given(st.lists(step, min_size=1, max_size=14), st.integers(1, 5))
+    @settings(max_examples=50, deadline=None)
+    def prop(schedule, batch_size):
+        svc, shadow = dual_service(batch_size=batch_size)
+        run_schedule(svc, [("submit", 0, 0), *schedule, ("drain",)])
+        svc.journal.flush()
+        shadow.flush()
+        assert_restores_equal(svc.engine.cas, batch_size=batch_size)
+
+    prop()
+
+
+def test_restore_stats_report_snapshot_share():
+    svc, shadow = dual_service()
+    svc.submit(spec_doc("acme", "s"))
+    svc.run_until_idle()
+    svc.compact()
+    svc.submit(spec_doc("globex", "s2"))
+    svc.run_until_idle()
+    svc.journal.flush()
+    restored = build_service(svc.engine.cas)
+    stats = restored.restore_from_journal()
+    assert 0 < stats["from_snapshot"] < stats["events"]
+    assert stats["jobs"] == 2
+
+
+# ---------------------------------------------------------------------------
+# crash injection: flush and compaction write boundaries
+# ---------------------------------------------------------------------------
+def crashed_workload(arm_op, *, during="flush"):
+    """Run a fixed workload, arm the CAS, crash inside flush/compact.
+    Returns (inner_cas, pre_crash_clone)."""
+    inner = CAS()
+    cas = CrashingCAS(inner)
+    svc, shadow = dual_service(cas)
+    svc.submit(spec_doc("acme", "c0"))
+    svc.submit(spec_doc("globex", "c0"))
+    svc.run_until_idle()
+    svc.journal.flush()
+    shadow.flush()
+    if during == "compact":
+        svc.submit(spec_doc("acme", "c1"))
+        svc.run_until_idle()
+        svc.journal.flush()
+    else:
+        svc.submit(spec_doc("acme", "c1"))
+        svc.pump(max_steps=4)              # leave events in the buffer
+    pre = clone_cas(inner)
+    cas.arm(*arm_op)
+    with pytest.raises(Crash):
+        if during == "compact":
+            svc.compact()
+        else:
+            svc.journal.flush()
+    return inner, pre
+
+
+CRASH_SITES = [
+    # (label, armed boundary, phase)
+    ("flush: before segment put", ("put", 0), "flush"),
+    ("flush: between put and set_ref", ("set_ref", 0), "flush"),
+    ("compact: before snapshot put", ("put", 0), "compact"),
+    ("compact: between snapshot put and set_ref", ("set_ref", 0), "compact"),
+]
+
+
+@pytest.mark.parametrize("label,arm,phase",
+                         CRASH_SITES, ids=[c[0] for c in CRASH_SITES])
+def test_crash_leaves_readable_chain_and_gc_collects_orphans(
+        label, arm, phase):
+    inner, pre = crashed_workload(arm, during=phase)
+    # the head never dangles: the post-crash chain replays cleanly and sees
+    # exactly the history that was durable before the crash
+    after = observe(restore_fresh(inner))
+    before = observe(restore_fresh(pre))
+    assert after == before
+    # at worst the crash orphaned blobs; gc reclaims them and the chain
+    # still restores identically
+    orphans = len(inner) - len(pre._blobs)
+    assert orphans >= (1 if arm[0] == "set_ref" else 0)
+    stats = inner.gc()
+    assert stats["deleted"] >= orphans
+    assert observe(restore_fresh(inner)) == before
+
+
+def test_crash_mid_compaction_rewrite_then_retry_succeeds():
+    """Die between the tail-segment rewrites of a compaction: old chain
+    intact; a retried compaction converges and equals the shadow."""
+    inner = CAS()
+    cas = CrashingCAS(inner)
+    svc, shadow = dual_service(cas)
+    for i in range(3):
+        svc.submit(spec_doc("acme", f"r{i}"))
+        svc.run_until_idle()
+    svc.journal.flush()
+    shadow.flush()
+    head_before = svc.journal.head
+    cas.arm("put", 1)                      # snapshot put ok; die re-chaining
+    with pytest.raises(Crash):
+        svc.compact(keep_segments=2)
+    assert svc.journal.head == head_before     # ref never advanced
+    retry = svc.compact(keep_segments=2)       # clean retry on the survivor
+    assert retry["folded_segments"] > 0
+    assert_restores_equal(inner)
+    inner.gc()                                 # sweep the half-written blobs
+    assert_restores_equal(inner)
+
+
+# ---------------------------------------------------------------------------
+# GC on disk: reclaim >= compacted bytes, keep every live ref working
+# ---------------------------------------------------------------------------
+def test_disk_gc_reclaims_compacted_segments_and_preserves_dedup(tmp_path):
+    cas = DiskCAS(str(tmp_path))
+    svc = build_service(cas, quotas={})
+    for i in range(5):
+        svc.submit(spec_doc("acme", f"g{i % 3}"))
+    svc.run_until_idle()
+    svc.journal.flush()
+    old_segments = {k: cas.size_of(k) for k in _chain_keys(svc.journal)}
+    assert len(old_segments) > 1
+    pre = observe(restore_fresh(cas, quotas={}))
+
+    svc.compact()
+    stats = cas.gc()
+    # every compacted segment went unreferenced and was swept
+    assert stats["bytes_reclaimed"] >= sum(old_segments.values())
+    assert not any(k in cas for k in old_segments)
+
+    # no live ref broke: the snapshot restores the same view, artifacts
+    # survived, and identical work still dedups across the restart
+    restored = restore_fresh(cas, quotas={})
+    post = observe(restored)
+    assert post == pre
+    for rows in post["lineage"].values():
+        for row in rows:
+            if row["output_hash"]:
+                assert row["output_hash"] in cas
+    job = restored.submit(spec_doc("acme", "g0"))
+    restored.run_until_idle()
+    rows = {r["op"]: r for r in restored.lineage(job["job_id"])}
+    assert not rows["gen"]["executed"] and not rows["score"]["executed"]
+    assert restored.engine.telemetry.executions == 0
+
+
+def _chain_keys(journal):
+    keys, key = [], journal.head
+    while key is not None:
+        keys.append(key)
+        key = journal.cas.get(key)["prev"]
+    return keys
+
+
+def test_gc_traces_json_blobs_and_keeps_ref_rooted_chains(tmp_path):
+    """Checkpoint-style state — a named ref to a JSON manifest naming leaf
+    hashes — survives gc end to end; unrooted JSON blobs do not."""
+    import json
+
+    cas = DiskCAS(str(tmp_path))
+    leaves = [cas.put_bytes(b"\x00tensor-bytes-%d" % i) for i in range(3)]
+    manifest = cas.put_bytes(json.dumps({"leaves": leaves}).encode())
+    cas.set_ref("checkpoint/run", manifest)
+    stale = cas.put_bytes(json.dumps({"leaves": []}).encode())  # unrooted
+    stats = cas.gc()
+    assert stats["deleted"] == 1 and stale not in cas
+    assert manifest in cas and all(k in cas for k in leaves)
+
+
+def test_gc_keeps_inflight_literal_inputs_live():
+    """POST /admin/gc mid-flight must not sweep interned literal inputs of
+    ops that have not completed yet (they appear in no journaled event)."""
+    cas = CAS()
+    svc = build_service(cas, quotas={})
+    svc.submit(spec_doc("acme", "inflight"))
+    while not any(s == "ready" for s in
+                  svc.job(sorted(svc.jobs)[0])["ops"].values()):
+        assert svc.pump(max_steps=1) == 1
+    dag = next(iter(svc.engine.dags.values()))
+    interned = {h for hs in dag.input_hashes.values() for h in hs}
+    assert interned
+    svc.gc()
+    assert all(h in cas for h in interned)
+    svc.run_until_idle()
+    assert svc.job(sorted(svc.jobs)[0])["status"] == "completed"
+
+
+def test_gc_refuses_nothing_it_should_keep():
+    """A blob is kept iff reachable: named refs root the chain, the chain
+    roots the artifacts named in events/snapshots."""
+    cas = CAS()
+    svc = build_service(cas, quotas={})
+    svc.submit(spec_doc("acme", "keep"))
+    svc.run_until_idle()
+    svc.journal.flush()
+    n_before = len(cas)
+    stats = cas.gc()
+    assert stats["deleted"] == 0 and len(cas) == n_before
+    orphan = cas.put_bytes(b"orphan-artifact-nobody-references")
+    stats = cas.gc()
+    assert stats["deleted"] == 1 and orphan not in cas
+
+
+# ---------------------------------------------------------------------------
+# admission is a bus subscriber: one write path for live + replay
+# ---------------------------------------------------------------------------
+def test_imperative_note_hooks_are_gone():
+    import inspect
+
+    from repro.core import control_plane
+    from repro.fabric import service as service_mod
+
+    for name in ("note_dispatch", "note_executed", "note_requeue",
+                 "note_deduped", "note_workflow_done",
+                 "note_workflow_cancelled", "replay_event"):
+        assert not hasattr(AdmissionController, name), name
+    # neither the engine nor the service calls an accounting hook directly
+    for mod in (control_plane, service_mod):
+        src = inspect.getsource(mod)
+        assert "admission.note_" not in src, mod.__name__
+        assert "note_dispatch" not in src and "note_executed" not in src
+
+
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_live_usage_matches_replayed_usage_across_policies(policy_name):
+    """The PR-2 invariant, now structural: folding the journal through a
+    fresh controller reproduces the live controller's accounting exactly
+    (transient scheduling counters excepted) under every policy."""
+    cas = CAS()
+    engine = FlowMeshEngine(policy=POLICIES[policy_name](),
+                            executor=SimExecutor(seed=13),
+                            cas=cas, config=EngineConfig(seed=13))
+    engine.bootstrap_workers(["h100-nvl-94g", "rtx4090-24g"])
+    journal = EventJournal(cas, batch_size=4)
+    svc = FabricService(engine=engine, journal=journal)
+    for t, q in QUOTAS.items():
+        svc.set_quota(t, q)
+    for i in range(6):
+        svc.submit(spec_doc(("acme", "globex", "initech")[i % 3],
+                            f"p{i % 2}"))
+    svc.pump(max_steps=40)
+    svc.cancel(sorted(svc.jobs)[0])
+    svc.run_until_idle()
+    journal.flush()
+
+    fold = snapshot_fold(svc.admission)(None)
+    for e in journal.replay():
+        fold.apply(e)
+    for t in ("acme", "globex", "initech"):
+        live = svc.admission.usage_snapshot(t)
+        replayed = fold.admission.usage_snapshot(t)
+        # inflight/held are runtime-only scheduling state (holds are metered
+        # at the pool boundary, never journaled)
+        for view in (live, replayed):
+            view["ops"].pop("inflight"), view["ops"].pop("held")
+        assert replayed == live, (policy_name, t)
+
+
+def test_engine_runs_admissionless_and_emits_requeue_events():
+    """The engine never *requires* a controller — and its failure path now
+    narrates group requeues as events."""
+    engine = FlowMeshEngine(executor=SimExecutor(seed=5),
+                            config=EngineConfig(seed=5, heartbeat_s=2.0,
+                                                watchdog_s=5.0,
+                                                speculation=False))
+    engine.bootstrap_workers(["rtx4090-24g", "rtx4090-24g"])
+    seen = []
+    engine.bus.subscribe(lambda e: seen.append(e.kind))
+    svc = FabricService(engine=engine)
+    doc = spec_doc("acme", "x", deadline_s=9000.0)
+    # long op so the watchdog detects the crash while the batch is in flight
+    doc["ops"][0].update(tokens_in=4096, tokens_out=2048,
+                         params={"max_batch": 1})
+    svc.submit(doc)
+    while "dispatch" not in seen:
+        assert svc.pump(max_steps=1) == 1
+    engine.inject_crash(0, at=engine.now + 0.1)
+    svc.run_until_idle()
+    assert "worker_fail" in seen
+    assert "group_requeued" in seen
+    assert svc.job(sorted(svc.jobs)[0])["status"] == "completed"
+
+
+# ---------------------------------------------------------------------------
+# realized deadline misses (telemetry follow-on)
+# ---------------------------------------------------------------------------
+def test_realized_deadline_misses_counted_under_edf_load():
+    svc = FabricService(seed=9, device_classes=("rtx4090-24g",))
+    tight = svc.submit(spec_doc("fast-co", "edf", deadline_s=0.5))
+    roomy = svc.submit(spec_doc("slow-co", "edf2", deadline_s=90000.0))
+    svc.run_until_idle()
+    tel = svc.engine.telemetry
+    assert tel.deadline_completions == 2
+    assert tel.deadline_misses == 1            # realized, not predicted
+    assert tel.summary()["deadline_misses"] == 1
+    assert svc.job(tight["job_id"])["deadline"]["predicted_miss"] is True
+    assert svc.job(roomy["job_id"])["deadline"]["predicted_miss"] is False
+    # no-SLO workloads contribute nothing
+    svc2 = FabricService(seed=9)
+    svc2.submit(spec_doc("acme", "no-slo"))
+    svc2.run_until_idle()
+    assert svc2.engine.telemetry.deadline_completions == 0
+    assert svc2.engine.telemetry.deadline_misses == 0
+
+
+# ---------------------------------------------------------------------------
+# snapshot format guards
+# ---------------------------------------------------------------------------
+def test_snapshot_format_version_is_checked():
+    state = ReplayState()
+    with pytest.raises(ValueError, match="snapshot format"):
+        state.load({"format": 999})
+
+
+def test_compact_empty_and_unjournaled_service():
+    svc = FabricService(seed=1)
+    with pytest.raises(ValueError, match="journal"):
+        svc.compact()
+    cas = CAS()
+    journal = EventJournal(cas)
+    stats = journal.compact(snapshot_fold())
+    assert stats["folded_segments"] == 0 and stats["head"] is None

@@ -226,16 +226,16 @@ def test_restart_resumes_feed_cursors_and_dedups_across_restart(tmp_path):
 def test_restore_preserves_cancel_before_arrival_and_guards_reuse(tmp_path):
     svc = journaled_service(tmp_path)
     q = svc.submit(chain_spec("acme", "early-cancel"))
-    svc.cancel(q["job_id"])            # arrival never consumed -> the
-    svc.run_until_idle()               # journal has only workflow_cancelled
-    before = svc.usage("acme")["workflows"]
+    svc.cancel(q["job_id"])            # arrival never consumed — but the
+    svc.run_until_idle()               # journal is self-contained: it saw
+    before = svc.usage("acme")["workflows"]   # the submission too
 
     svc2 = journaled_service(tmp_path)
     svc2.restore_from_journal()
     restored = svc2.job(q["job_id"])
     assert restored is not None and restored["status"] == "cancelled"
     assert [e["kind"] for e in svc2.events(q["job_id"])["events"]] == \
-        ["workflow_cancelled"]
+        ["workflow_submitted", "workflow_cancelled"]
     after = svc2.usage("acme")["workflows"]
     assert after == before             # submitted=1, cancelled=1 — no skew
     # a second replay would double accounting: refuse non-fresh restores
@@ -336,7 +336,8 @@ def test_feed_cancel_before_arrival_and_limit():
     feed = svc.events(q["job_id"])
     assert feed["status"] == "cancelled"
     kinds = [e["kind"] for e in feed["events"]]
-    assert kinds == ["workflow_cancelled"]         # never submitted-to-engine
+    # submission is journaled at submit time; no op ever ran
+    assert kinds == ["workflow_submitted", "workflow_cancelled"]
     # limit paginates without skipping
     r = svc.submit(chain_spec("acme", "paged"))
     svc.run_until_idle()
