@@ -21,18 +21,33 @@ echo "== HTTP shim smoke (real sockets) =="
 PYTHONPATH=src python scripts/http_smoke.py
 
 echo
+echo "== retention soak (quick ~10s slice; full suite: pytest -m soak) =="
+python -m pytest -q --soak-quick tests/test_retention.py -k soak_quick
+
+echo
 echo "== journal compaction + GC smoke (DiskCAS) =="
 # exercises the on-disk path every run: journal a couple of runs into a
-# tempdir CAS, fold them into a snapshot, sweep the dead segments, and
-# prove the compacted chain still replays
+# tempdir CAS, fold them into a snapshot, sweep the dead segments (and
+# assert the sweep actually reclaimed something), and prove the compacted
+# chain still replays
 COMPACT_TMP=$(mktemp -d)
 trap 'rm -rf "$COMPACT_TMP"' EXIT
 PYTHONPATH=src python scripts/fabric_cli.py submit --template distill \
     --param tenant=acme --journal "$COMPACT_TMP/cas" > /dev/null
 PYTHONPATH=src python scripts/fabric_cli.py submit --template distill \
     --param tenant=globex --journal "$COMPACT_TMP/cas" > /dev/null
-PYTHONPATH=src python scripts/fabric_cli.py compact --journal "$COMPACT_TMP/cas"
-PYTHONPATH=src python scripts/fabric_cli.py gc --journal "$COMPACT_TMP/cas"
+PYTHONPATH=src python scripts/fabric_cli.py compact --keep 0 \
+    --journal "$COMPACT_TMP/cas"
+PYTHONPATH=src python scripts/fabric_cli.py gc --journal "$COMPACT_TMP/cas" \
+    | tee "$COMPACT_TMP/gc.json"
+python - "$COMPACT_TMP/gc.json" <<'PY'
+import json, sys
+stats = json.load(open(sys.argv[1]))
+assert stats["reclaimed_blobs"] > 0 and stats["reclaimed_bytes"] > 0, (
+    f"DiskCAS gc reclaimed nothing after compaction: {stats}")
+print(f"gc reclaimed {stats['reclaimed_blobs']} blobs / "
+      f"{stats['reclaimed_bytes']} bytes")
+PY
 PYTHONPATH=src python scripts/fabric_cli.py tail --journal "$COMPACT_TMP/cas" \
     > /dev/null
 

@@ -26,13 +26,24 @@ against a fabric started by ``serve``.
         --journal /tmp/fabric-cas
 
     # retention: fold old segments into a snapshot, then reclaim the
-    # unreferenced blobs (also available live: POST /admin/{compact,gc})
+    # unreferenced blobs (also available live: POST /admin/{compact,gc});
+    # the fold applies the quota + retention config persisted in the CAS
+    # operator document, so offline compaction agrees with the live service
     PYTHONPATH=src python scripts/fabric_cli.py compact --journal /tmp/fabric-cas
     PYTHONPATH=src python scripts/fabric_cli.py gc --journal /tmp/fabric-cas
+    PYTHONPATH=src python scripts/fabric_cli.py retention --journal /tmp/fabric-cas
+
+    # scheduled retention: the serve loop compacts + sweeps on its own once
+    # the un-folded tail crosses the thresholds (keeping a floor of
+    # segments for tail consumers); flags override the operator document,
+    # and the effective config is written back for offline agreement
+    PYTHONPATH=src python scripts/fabric_cli.py serve --journal /tmp/fabric-cas \
+        --compact-every-segments 64 --keep-segments 4 --retention-jobs 5000
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import signal
 import sys
@@ -41,6 +52,8 @@ from repro.core.cas import DiskCAS
 from repro.core.journal import EventJournal
 from repro.fabric import (TERMINAL_STATUSES as _TERMINAL, FabricAPI,
                           FabricHTTPServer, FabricService, RemoteAPI,
+                          RetentionPolicy, configured_admission,
+                          configured_retention, load_operator_doc,
                           render_template, snapshot_fold, validate_spec)
 
 
@@ -59,6 +72,41 @@ def _parse_params(pairs: list[str]) -> dict:
 
 def _print(payload) -> None:
     print(json.dumps(payload, indent=2, default=str))
+
+
+#: CLI flag -> RetentionPolicy field (a negative count means "unbounded")
+_RETENTION_FLAGS = (("retention_jobs", "max_terminal_jobs", True),
+                    ("feed_window", "feed_window", True),
+                    ("result_index_cap", "max_result_index", True),
+                    ("compact_every_segments", "compact_every_segments", True),
+                    ("compact_every_bytes", "compact_every_bytes", True),
+                    ("keep_segments", "keep_segments", False))
+
+
+def _retention_overrides(args) -> dict:
+    """The retention fields the operator set on this command line."""
+    out = {}
+    for flag, field, noneable in _RETENTION_FLAGS:
+        v = getattr(args, flag, None)
+        if v is not None:
+            out[field] = None if (noneable and v < 0) else v
+    return out
+
+
+def _resolve_retention(args, doc) -> tuple[RetentionPolicy, str]:
+    """Documented precedence (DESIGN.md §9): live flag > CAS operator
+    document > built-in default — flags patch individual fields on top of
+    whichever base applies."""
+    overrides = _retention_overrides(args)
+    try:
+        base = configured_retention(doc)
+        source = "operator-doc" if doc is not None else "default"
+        if overrides:
+            base = dataclasses.replace(base, **overrides)
+            source = "flag"
+    except ValueError as e:     # policy validation -> usage error, not a
+        sys.exit(f"invalid retention config: {e}")      # raw traceback
+    return base, source
 
 
 def cmd_templates(api, args) -> int:
@@ -192,25 +240,50 @@ def cmd_compact(api, args) -> int:
                                  {"keep_segments": args.keep})
         _print(stats)
         return 0 if code == 200 else 1
-    journal = EventJournal(DiskCAS(args.journal))
+    cas = DiskCAS(args.journal)
+    journal = EventJournal(cas)
     if journal.head is None:
         print("empty journal (no head ref)", file=sys.stderr)
         return 1
-    # offline fold runs with default quota config; like restore, fair-share
-    # weights only replay correctly if compaction sees the same quotas the
-    # restoring fabric will apply (DESIGN.md §8)
-    stats = journal.compact(snapshot_fold(), keep_segments=args.keep)
+    # fold with the persisted operator document: fair-share weights and the
+    # retention trim only replay correctly if compaction sees the same
+    # config the live fabric charged/evicted by (DESIGN.md §9); flags
+    # override, defaults apply when the store carries no document
+    doc = load_operator_doc(cas)
+    retention, _ = _resolve_retention(args, doc)
+    keep = args.keep
+    if keep is None:    # as documented: the doc's keep_segments, else 0
+        keep = retention.keep_segments if doc is not None else 0
+    stats = journal.compact(
+        snapshot_fold(configured_admission(doc), retention=retention),
+        keep_segments=keep)
     _print(stats)
     return 0
 
 
 def cmd_gc(api, args) -> int:
-    """Mark-and-sweep the CAS from its named refs (journal heads)."""
+    """Mark-and-sweep the CAS from its named refs (journal heads). The
+    response payload reports the reclamation (blobs + bytes)."""
     if args.url:
         code, stats = api.handle("POST", "/admin/gc", {})
         _print(stats)
         return 0 if code == 200 else 1
     _print(DiskCAS(args.journal).gc())
+    return 0
+
+
+def cmd_retention(api, args) -> int:
+    """Show the effective retention config: live from /admin/retention, or
+    offline from the CAS operator document + chain footprint."""
+    if args.url:
+        code, status = api.handle("GET", "/admin/retention")
+        _print(status)
+        return 0 if code == 200 else 1
+    cas = DiskCAS(args.journal)
+    doc = load_operator_doc(cas)
+    retention, source = _resolve_retention(args, doc)
+    _print({"policy": retention.to_dict(), "source": source,
+            "journal": EventJournal(cas).chain_stats()})
     return 0
 
 
@@ -236,6 +309,7 @@ def main(argv: list[str] | None = None) -> int:
             p.add_argument("--journal", metavar="DIR",
                            help="journal the run to this CAS directory "
                                 "(restores prior history first)")
+            submit_parser = p
 
     sub.add_parser("demo", help="multi-tenant dedup demo")
 
@@ -246,6 +320,7 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--journal", metavar="DIR",
                    help="CAS directory for the event journal; restores "
                         "prior history when one exists")
+    serve_parser = p
 
     p = sub.add_parser("tail", help="follow a job's event feed")
     p.add_argument("job_id", nargs="?")
@@ -258,12 +333,42 @@ def main(argv: list[str] | None = None) -> int:
                        help="fold old journal segments into a snapshot")
     p.add_argument("--journal", metavar="DIR",
                    help="CAS directory holding the journal (offline mode)")
-    p.add_argument("--keep", type=int, default=0,
-                   help="newest segments to keep un-compacted (default 0)")
+    p.add_argument("--keep", type=int, default=None,
+                   help="newest segments to keep un-compacted (default: the "
+                        "operator document's keep_segments, else 0)")
+    compact_parser = p
 
-    p = sub.add_parser("gc", help="mark-and-sweep unreferenced CAS blobs")
+    p = sub.add_parser("gc", help="mark-and-sweep unreferenced CAS blobs "
+                                  "(reports reclaimed blobs/bytes)")
     p.add_argument("--journal", metavar="DIR",
                    help="CAS directory to sweep (offline mode)")
+
+    p = sub.add_parser("retention",
+                       help="show the effective retention policy + footprint")
+    p.add_argument("--journal", metavar="DIR",
+                   help="CAS directory to inspect (offline mode)")
+    retention_parser = p
+
+    # retention flags: override the persisted operator document field-wise
+    # (live flag > CAS document > default); negative count = unbounded
+    for p in (serve_parser, submit_parser, compact_parser, retention_parser):
+        g = p.add_argument_group("retention")
+        g.add_argument("--retention-jobs", type=int, metavar="N",
+                       help="keep at most N terminal job records (<0: all)")
+        g.add_argument("--feed-window", type=int, metavar="K",
+                       help="window per-job feeds to K events with an "
+                            "explicit truncation marker (<0: unbounded)")
+        g.add_argument("--result-index-cap", type=int, metavar="N",
+                       help="keep at most N dedup result-index entries "
+                            "(<0: unbounded)")
+        g.add_argument("--compact-every-segments", type=int, metavar="N",
+                       help="auto-compact once N un-folded segments "
+                            "accumulate (<0: disable)")
+        g.add_argument("--compact-every-bytes", type=int, metavar="M",
+                       help="auto-compact once the un-folded tail exceeds "
+                            "M bytes (<0: disable)")
+        g.add_argument("--keep-segments", type=int, metavar="N",
+                       help="tail floor kept un-compacted for consumers")
 
     args = ap.parse_args(argv)
     if args.cmd in ("validate", "submit") and not (
@@ -271,7 +376,8 @@ def main(argv: list[str] | None = None) -> int:
         ap.error(f"{args.cmd} requires a spec file or --template")
     if args.cmd == "serve" and args.url:
         ap.error("serve runs an in-process fabric; it cannot proxy --url")
-    if args.cmd in ("compact", "gc") and not (args.journal or args.url):
+    if args.cmd in ("compact", "gc", "retention") and not (
+            args.journal or args.url):
         ap.error(f"{args.cmd} needs --journal (offline) or --url (live)")
 
     if args.url:
@@ -279,22 +385,37 @@ def main(argv: list[str] | None = None) -> int:
     elif args.cmd in ("serve", "submit") and getattr(args, "journal", None):
         cas = DiskCAS(args.journal)     # artifacts + journal share one store
         journal = EventJournal(cas)
-        svc = FabricService(seed=args.seed, cas=cas, journal=journal)
+        doc = load_operator_doc(cas)
+        retention, source = _resolve_retention(args, doc)
+        svc = FabricService(seed=args.seed, cas=cas, journal=journal,
+                            retention=retention)
+        svc.retention_source = source
+        # apply the persisted quota config BEFORE restoring: the replay
+        # fold charges fair-share vtime under these weights, and the
+        # write-back below must not clobber the document with defaults
+        configured_admission(doc, svc.admission)
         if journal.head is not None:
             stats = svc.restore_from_journal()
             print(f"restored {stats['jobs']} jobs from "
                   f"{stats['events']} journaled events "
                   f"({stats['interrupted']} interrupted, "
                   f"{stats['from_snapshot']} from snapshot)", flush=True)
+        # write the effective config back so offline compact/restore agree
+        svc._persist_operator_config()
         api = FabricAPI(svc)
-    elif args.cmd in ("compact", "gc"):
+    elif args.cmd in ("compact", "gc", "retention"):
         api = None                      # offline: handled against the CAS
     else:
-        api = FabricAPI(FabricService(seed=args.seed))
+        # no journal: nothing durable to compact, but in-memory retention
+        # (job cap, feed window, index cap) still honors the flags
+        retention, source = _resolve_retention(args, None)
+        svc = FabricService(seed=args.seed, retention=retention)
+        svc.retention_source = source
+        api = FabricAPI(svc)
     return {"templates": cmd_templates, "validate": cmd_validate,
             "submit": cmd_submit, "demo": cmd_demo, "serve": cmd_serve,
             "tail": cmd_tail, "compact": cmd_compact,
-            "gc": cmd_gc}[args.cmd](api, args)
+            "gc": cmd_gc, "retention": cmd_retention}[args.cmd](api, args)
 
 
 if __name__ == "__main__":

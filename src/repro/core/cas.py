@@ -168,8 +168,12 @@ class CAS:
             except (KeyError, OSError):
                 pass
             self.delete(k)
+        # `reclaimed_*` duplicate deleted/bytes_reclaimed under the names the
+        # operator surfaces (CLI `gc`, POST /admin/gc) report — one payload
+        # serves both the legacy callers and the reclamation asserts in CI
         return {"kept": len(live), "deleted": len(swept),
-                "bytes_reclaimed": reclaimed}
+                "bytes_reclaimed": reclaimed,
+                "reclaimed_blobs": len(swept), "reclaimed_bytes": reclaimed}
 
     # -- object interface (pickle round-trip) --------------------------------
     def put(self, obj: Any) -> str:

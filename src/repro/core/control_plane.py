@@ -60,6 +60,11 @@ class EngineConfig:
     #: ring-buffer size for telemetry distribution fields (None = full
     #: history; set for never-restarting service deployments)
     telemetry_window: int | None = None
+    #: fabric-level retention (a ``repro.fabric.replay.RetentionPolicy``).
+    #: Carried here so one config object provisions a whole service
+    #: deployment; the engine itself never reads it — ``FabricService``
+    #: resolves it with precedence: explicit arg > this field > default
+    retention: Any = None
     seed: int = 0
 
 
@@ -594,6 +599,10 @@ class FlowMeshEngine:
                                                   worker=wid))
                 continue
             g.running_on.discard(wid)
+            # re-insert so dict order is last-write: the fabric's retention
+            # trim (and the replay fold, which mirrors this) evicts the
+            # stalest entry, not whichever happened to be written first
+            self.result_index.pop(g.h_task, None)
             self.result_index[g.h_task] = key
             self.pool.finish(g)
             # bill the consumers (shared work, shared bill) — or, when every

@@ -65,6 +65,14 @@ class EventJournal:
         self._buf: list[dict] = []
         self.segments_written = 0
         self.events_written = 0
+        self.bytes_flushed = 0        # cumulative segment bytes (this process)
+        self.compactions = 0
+        #: un-folded tail accounting — the scheduled-retention trigger
+        #: (``FabricService.maybe_retain``) compares these against the
+        #: policy's ``compact_every_segments`` / ``compact_every_bytes``;
+        #: ``compact()`` resets them to the kept tail
+        self.segments_since_compact = 0
+        self.bytes_since_compact = 0
 
     # ------------------------------------------------------------- write --
     def on_event(self, e: FabricEvent) -> None:
@@ -82,6 +90,10 @@ class EventJournal:
         self.cas.set_ref(self.ref, key)     # blob first, then the head
         self.segments_written += 1
         self.events_written += len(self._buf)
+        size = self.cas.size_of(key)
+        self.bytes_flushed += size
+        self.segments_since_compact += 1
+        self.bytes_since_compact += size
         self._buf = []
         return key
 
@@ -127,6 +139,31 @@ class EventJournal:
     def __len__(self) -> int:
         return self.events_written + len(self._buf)
 
+    def chain_stats(self) -> dict:
+        """Walk the durable chain and report its true footprint (segments,
+        bytes, tail events, snapshot presence) — the `GET /admin/retention`
+        surface. O(segments); the hot-path trigger uses the O(1)
+        ``*_since_compact`` counters instead."""
+        segments = total_bytes = tail_bytes = tail_events = 0
+        has_snapshot = False
+        key = self.head
+        while key is not None:
+            blob = self.cas.get(key)
+            size = self.cas.size_of(key)
+            segments += 1
+            total_bytes += size
+            tail_events += len(blob["events"])
+            if "snapshot" in blob:
+                has_snapshot = True
+            else:
+                tail_bytes += size      # un-folded history, not the snapshot
+            key = blob["prev"]
+        return {"segments": segments, "bytes": total_bytes,
+                "tail_bytes": tail_bytes, "tail_events": tail_events,
+                "snapshot": has_snapshot, "pending": self.pending,
+                "since_compact": {"segments": self.segments_since_compact,
+                                  "bytes": self.bytes_since_compact}}
+
     # --------------------------------------------------------- compaction --
     def compact(self, fold_factory: Callable[[dict | None], SnapshotFold],
                 *, keep_segments: int = 0) -> dict:
@@ -165,10 +202,16 @@ class EventJournal:
         snap_key = self.cas.put({"prev": None, "snapshot": fold.to_blob(),
                                  "events": []})
         head = snap_key
+        tail_bytes = 0
         for key in keys[cut:]:              # re-chain the kept tail
             head = self.cas.put({"prev": head,
                                  "events": self.cas.get(key)["events"]})
+            tail_bytes += self.cas.size_of(head)
         self.cas.set_ref(self.ref, head)    # single atomic head advance
+        self.compactions += 1
+        # the un-folded tail is now exactly the kept segments
+        self.segments_since_compact = len(keys) - cut
+        self.bytes_since_compact = tail_bytes
         return {"snapshot": snap_key, "head": head,
                 "folded_segments": cut, "folded_events": folded_events,
                 "kept_segments": len(keys) - cut}

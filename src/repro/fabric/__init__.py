@@ -3,9 +3,13 @@
 ``spec``       — declarative workflow documents + named templates
 ``admission``  — per-tenant quotas, fair share (+EDF boost); all usage
                  accounting event-derived (bus subscriber)
-``replay``     — the event fold shared by journal restore and compaction
+``replay``     — the event fold shared by journal restore and compaction,
+                 retention-trimmed under a RetentionPolicy
+``operator``   — the CAS-rooted operator config document (quotas +
+                 retention) that offline tools and restores agree on
 ``service``    — the long-lived FabricService wrapping one live engine,
-                 with per-job event feeds, journal restore, compaction + GC
+                 with per-job event feeds, journal restore, scheduled
+                 compaction + GC
 ``api``        — in-process request/response handler table (HTTP-shaped)
 ``http``       — socket server + urllib client over the same handler table
 """
@@ -13,7 +17,11 @@ from .admission import (AdmissionController, QuotaExceeded, TenantQuota,
                         TenantUsage)
 from .api import FabricAPI
 from .http import FabricHTTPServer, RemoteAPI
-from .replay import FEED_KINDS, JobRecord, ReplayState, snapshot_fold
+from .operator import (OPERATOR_REF, configured_admission,
+                       configured_retention, load_operator_doc,
+                       save_operator_config)
+from .replay import (FEED_KINDS, TRUNCATED_KIND, JobRecord, ReplayState,
+                     RetentionPolicy, snapshot_fold, truncation_marker)
 from .service import TERMINAL_STATUSES, FabricService, JobStatus
 from .spec import (SpecError, compile_spec, default_resource_class,
                    list_templates, render_template, validate_spec)
@@ -21,7 +29,10 @@ from .spec import (SpecError, compile_spec, default_resource_class,
 __all__ = [
     "AdmissionController", "QuotaExceeded", "TenantQuota", "TenantUsage",
     "FabricAPI", "FabricHTTPServer", "RemoteAPI", "FabricService",
-    "FEED_KINDS", "JobRecord", "ReplayState", "snapshot_fold",
+    "FEED_KINDS", "TRUNCATED_KIND", "JobRecord", "ReplayState",
+    "RetentionPolicy", "snapshot_fold", "truncation_marker",
+    "OPERATOR_REF", "configured_admission", "configured_retention",
+    "load_operator_doc", "save_operator_config",
     "JobStatus", "TERMINAL_STATUSES", "SpecError", "compile_spec",
     "default_resource_class",
     "list_templates", "render_template", "validate_spec",

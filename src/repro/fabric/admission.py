@@ -284,6 +284,26 @@ class AdmissionController:
         for u in self.usage.values():
             u.inflight_ops = 0
 
+    # ---------------------------------------------- operator configuration --
+    def dump_config(self) -> dict:
+        """Quota *configuration* (not usage history) as a JSON-shaped blob —
+        the admission half of the persisted operator document (DESIGN.md §9).
+        The complement of ``dump_state``: config is what restore/compaction
+        must re-apply, state is what the fold rebuilds."""
+        return {
+            "deadline_boost": self.deadline_boost,
+            "default_quota": asdict(self.default_quota),
+            "quotas": {t: asdict(q) for t, q in self.quotas.items()},
+        }
+
+    def load_config(self, blob: dict) -> None:
+        """Apply a persisted operator document's quota configuration."""
+        self.deadline_boost = blob.get("deadline_boost", self.deadline_boost)
+        if "default_quota" in blob:
+            self.default_quota = TenantQuota(**blob["default_quota"])
+        self.quotas = {t: TenantQuota(**d)
+                       for t, d in blob.get("quotas", {}).items()}
+
     # -------------------------------------------- snapshot serialization --
     def dump_state(self) -> dict:
         """Usage accounting as a JSON-shaped blob for journal snapshots.

@@ -20,7 +20,8 @@ Routes:
     POST /pump                       {"max_steps": n?, "until": t?}
     POST /drain                      {"until": t?}   (run_until_idle)
     POST /admin/compact              {"keep_segments": n?}  (409 w/o journal)
-    POST /admin/gc
+    POST /admin/gc                   reports reclaimed blobs/bytes
+    GET  /admin/retention            effective policy + footprint + auto stats
 
 The events feed is cursor-based: pass the ``cursor`` from the previous
 response as ``since`` to receive only newer events — no duplicates, no
@@ -53,6 +54,7 @@ class FabricAPI:
             ("POST", ("drain",), self._drain),
             ("POST", ("admin", "compact"), self._compact),
             ("POST", ("admin", "gc"), self._gc),
+            ("GET", ("admin", "retention"), self._retention),
         ]
 
     # ------------------------------------------------------------ routing --
@@ -198,7 +200,12 @@ class FabricAPI:
             return 400, err
         if self.service.journal is None:
             return 409, {"error": "no_journal"}
-        return 200, self.service.compact(keep_segments=int(keep or 0))
+        if keep is None:       # the policy's tail floor, like the serve loop
+            keep = self.service.retention_policy.keep_segments
+        return 200, self.service.compact(keep_segments=int(keep))
 
     def _gc(self, params, query, body) -> tuple[int, Any]:
         return 200, self.service.gc()
+
+    def _retention(self, params, query, body) -> tuple[int, Any]:
+        return 200, self.service.retention_status()

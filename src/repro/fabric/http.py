@@ -67,6 +67,7 @@ class FabricHTTPServer:
                 if stepped == 0 and getattr(svc, "journal", None) is not None \
                         and svc.journal.pending:
                     svc.journal.flush()    # idle point: make history durable
+                    svc.maybe_retain()     # the flush may tip the thresholds
             if stepped == 0:        # idle or stalled: back off, don't spin
                 self._stop.wait(self.pump_interval_s)
 

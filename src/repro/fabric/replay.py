@@ -17,7 +17,9 @@ byte-identical to restore-from-full-replay — the crash/replay harness
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import asdict, dataclass, field, fields
+from itertools import islice
 
 from repro.core import events as E
 from repro.core.dag import OpState, WorkflowDAG
@@ -29,7 +31,129 @@ FEED_KINDS = {"workflow_submitted", "op_ready", "dedup_hit", "op_completed",
               "workflow_completed", "workflow_cancelled", "job_rejected"}
 
 #: snapshot blob schema version (bump on incompatible fold-state changes)
-SNAPSHOT_FORMAT = 1
+#: v2: retention-trimmed folds (terminal-job eviction order + feed
+#: truncation watermarks travel with the snapshot)
+SNAPSHOT_FORMAT = 2
+
+#: kind of the synthetic feed entry that marks windowed-away history; never
+#: published on the bus or journaled — ``FabricService.events`` synthesizes
+#: it per read so a cursor that predates the window start observes the loss
+#: exactly once instead of silently skipping it (DESIGN.md §9)
+TRUNCATED_KIND = "feed_truncated"
+
+#: statuses of terminal events that start the retention clock for a job
+TERMINAL_EVENT_KINDS = ("workflow_completed", "workflow_cancelled",
+                        "job_rejected")
+
+
+@dataclass(frozen=True)
+class RetentionPolicy:
+    """What a bounded fabric may forget, and when to fold the journal.
+
+    The first two fields govern *state* retention and are applied
+    identically by the live service and the replay fold (DESIGN.md §9):
+
+      * ``max_terminal_jobs`` — keep at most N terminal (completed /
+        cancelled / rejected) job records; older ones are evicted together
+        with their feeds. ``None`` = unbounded. Usage accounting is never
+        affected by eviction.
+      * ``feed_window`` — cap each per-job feed at the newest K events; a
+        read whose cursor predates the window start sees one synthetic
+        ``feed_truncated`` marker (never silent loss). ``None`` = unbounded.
+      * ``max_result_index`` — keep the newest N result-index entries
+        (last-write order). The index is a dedup cache, so eviction only
+        costs re-execution — but without a cap the dedup-disabled baseline
+        policies accrete one artifact-rooting entry per job forever, and
+        the CAS can never shrink. ``None`` = unbounded.
+
+    The rest schedule *durable* retention: the serve loop triggers
+    ``compact`` + ``gc`` once the un-folded journal tail exceeds
+    ``compact_every_segments`` segments or ``compact_every_bytes`` bytes,
+    always keeping a ``keep_segments`` floor for tail consumers.
+    """
+    max_terminal_jobs: int | None = 10_000
+    feed_window: int | None = None
+    max_result_index: int | None = None
+    compact_every_segments: int | None = None
+    compact_every_bytes: int | None = None
+    keep_segments: int = 2
+    gc_on_compact: bool = True
+
+    def __post_init__(self) -> None:
+        if self.max_terminal_jobs is not None and self.max_terminal_jobs < 0:
+            raise ValueError("max_terminal_jobs must be >= 0 or None")
+        if self.feed_window is not None and self.feed_window < 1:
+            raise ValueError("feed_window must be >= 1 or None")
+        if self.max_result_index is not None and self.max_result_index < 0:
+            raise ValueError("max_result_index must be >= 0 or None")
+        if self.keep_segments < 0:
+            raise ValueError("keep_segments must be >= 0")
+        for name in ("compact_every_segments", "compact_every_bytes"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be >= 1 or None")
+        if (self.compact_every_segments is not None
+                and self.compact_every_segments <= self.keep_segments):
+            # otherwise the trigger is permanently due while the tail can
+            # never shrink below its floor — compaction would thrash
+            raise ValueError("compact_every_segments must exceed "
+                             "keep_segments")
+
+    @property
+    def auto_compaction(self) -> bool:
+        return (self.compact_every_segments is not None
+                or self.compact_every_bytes is not None)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RetentionPolicy":
+        names = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+
+def truncation_marker(job_id: str, dropped: int, last_seq: int) -> dict:
+    """The synthetic feed entry for windowed-away history. Its ``seq`` is
+    the *last dropped* event's seq, so cursor arithmetic consumes it exactly
+    once: a client resuming at or past it never sees it again, and every
+    retained event (all with larger seqs) still follows it in order."""
+    return {"kind": TRUNCATED_KIND, "seq": last_seq, "dag_id": job_id,
+            "dropped": dropped}
+
+
+def window_feed(feeds: dict[str, list[dict]], trunc: dict[str, list[int]],
+                job_id: str, window: int | None) -> None:
+    """Trim one feed to its newest ``window`` events, advancing the
+    truncation watermark ``trunc[job_id] = [dropped_total, last_dropped_seq]``.
+
+    Shared by the live service (``FabricService._on_event``) and the replay
+    fold so a windowed restore is byte-identical to a windowed replay:
+    "keep the newest K" composes — trimming a snapshot and then folding the
+    tail drops exactly the events a full trimmed replay would have dropped,
+    and the cumulative dropped counts agree.
+    """
+    feed = feeds.get(job_id)
+    if window is None or feed is None or len(feed) <= window:
+        return
+    drop = len(feed) - window
+    entry = trunc.setdefault(job_id, [0, -1])
+    entry[0] += drop
+    entry[1] = max(entry[1], feed[drop - 1]["seq"])
+    del feed[:drop]
+
+
+def trim_result_index(index: dict[str, str], cap: int | None) -> None:
+    """Keep the newest ``cap`` result-index entries (insertion order —
+    the fold re-inserts on every write so order is last-write). Evicting a
+    dedup entry is always safe: the worst case is re-executing the op.
+    Like the other trims, "keep the newest N" composes across a snapshot
+    cut, so trimmed restores equal trimmed replays. At steady state the
+    excess is one entry, so the islice keeps the per-event cost O(1)."""
+    if cap is None or len(index) <= cap:
+        return
+    for h in list(islice(iter(index), len(index) - cap)):
+        del index[h]
 
 #: JobRecord fields carried by a snapshot (``dag`` is live-only state)
 _RECORD_FIELDS = ("job_id", "tenant", "submitted", "submitted_at", "error",
@@ -62,12 +186,28 @@ class JobRecord:
 
 
 class ReplayState:
-    """Fold of journaled history into restorable service state."""
+    """Fold of journaled history into restorable service state.
 
-    def __init__(self, admission: AdmissionController | None = None) -> None:
+    With a ``RetentionPolicy`` the fold is *retention-trimmed*: terminal
+    jobs beyond the cap are evicted (in terminal-transition order) and
+    feeds are windowed as events are applied — so a snapshot written by a
+    trimmed fold stops growing with total history, and restoring it plus
+    the tail equals a trimmed replay of the full chain.
+    """
+
+    def __init__(self, admission: AdmissionController | None = None,
+                 retention: RetentionPolicy | None = None) -> None:
         self.admission = admission or AdmissionController()
+        self.retention = retention or RetentionPolicy()
         self.jobs: dict[str, JobRecord] = {}
         self.feeds: dict[str, list[dict]] = {}
+        #: job_id -> [dropped_total, last_dropped_seq] per windowed feed
+        self.feed_trunc: dict[str, list[int]] = {}
+        #: job ids in terminal-transition order — the eviction queue (a
+        #: deque: at-cap folds evict one id per terminal event, and a list's
+        #: pop(0) would make a long-chain replay quadratic in history)
+        self.terminal: deque[str] = deque()
+        self._terminal_set: set[str] = set()
         self.result_index: dict[str, str] = {}   # unfiltered: h_task -> key
         self.max_seq = -1
         self.events = 0
@@ -120,13 +260,41 @@ class ReplayState:
                 rec.cancelled = True
         if kind == "group_completed":
             # unfiltered here; restore keeps only entries whose artifact
-            # still exists in the CAS (dedup across restarts)
+            # still exists in the CAS (dedup across restarts). Re-insert so
+            # dict order is last-write — the retention trim keeps the newest
+            self.result_index.pop(e.h_task, None)
             self.result_index[e.h_task] = e.output_hash
+            trim_result_index(self.result_index,
+                              self.retention.max_result_index)
         self.admission.on_event(e)
         if kind in FEED_KINDS:
             dag_id = getattr(e, "dag_id", None)
             if dag_id in self.jobs:
                 self.feeds.setdefault(dag_id, []).append(e.to_dict())
+                window_feed(self.feeds, self.feed_trunc, dag_id,
+                            self.retention.feed_window)
+        if kind in TERMINAL_EVENT_KINDS:
+            self._note_terminal(e.dag_id)
+
+    def _note_terminal(self, job_id: str) -> None:
+        """Enter a job into the eviction queue the moment it goes terminal;
+        evict the oldest terminal records beyond the retention cap."""
+        if job_id in self._terminal_set or job_id not in self.jobs:
+            return
+        self._terminal_set.add(job_id)
+        self.terminal.append(job_id)
+        self._enforce_terminal_cap()
+
+    def _enforce_terminal_cap(self) -> None:
+        cap = self.retention.max_terminal_jobs
+        if cap is None:
+            return
+        while len(self.terminal) > cap:
+            old = self.terminal.popleft()
+            self._terminal_set.discard(old)
+            self.jobs.pop(old, None)
+            self.feeds.pop(old, None)
+            self.feed_trunc.pop(old, None)
 
     # -------------------------------------------------------- snapshotting --
     def to_blob(self) -> dict:
@@ -138,13 +306,30 @@ class ReplayState:
             "jobs": {jid: rec.to_dict() for jid, rec in self.jobs.items()},
             "feeds": {jid: [dict(d) for d in evs]
                       for jid, evs in self.feeds.items()},
+            "feed_trunc": {jid: list(v)
+                           for jid, v in self.feed_trunc.items()},
+            "terminal": list(self.terminal),
             "result_index": dict(self.result_index),
             "admission": self.admission.dump_state(),
+            #: informational: the policy the writing fold applied — restore
+            #: takes its policy from operator config, never from here
+            "retention": self.retention.to_dict(),
         }
 
     def load(self, blob: dict) -> None:
-        """Resume the fold from a snapshot node (inverse of ``to_blob``)."""
-        if blob.get("format") != SNAPSHOT_FORMAT:
+        """Resume the fold from a snapshot node (inverse of ``to_blob``).
+
+        This fold's *own* retention policy is re-enforced on the loaded
+        state: a snapshot written under a looser policy is trimmed down to
+        ours ("keep the newest" composes, so the result still equals a
+        trimmed full replay); dropped history can never be resurrected.
+
+        Format 1 snapshots (pre-retention) load with empty watermarks; their
+        terminal order is unrecorded, so it is approximated by record
+        (submission) order — this only affects *which* records a tighter cap
+        evicts from an old chain, never accounting.
+        """
+        if blob.get("format") not in (1, SNAPSHOT_FORMAT):
             raise ValueError(
                 f"unsupported snapshot format {blob.get('format')!r}")
         self.events = blob["events"]
@@ -153,17 +338,35 @@ class ReplayState:
                      for jid, d in blob["jobs"].items()}
         self.feeds = {jid: [dict(d) for d in evs]
                       for jid, evs in blob["feeds"].items()}
+        self.feed_trunc = {jid: list(v)
+                           for jid, v in blob.get("feed_trunc", {}).items()}
+        terminal = blob.get("terminal")
+        if terminal is None:                    # v1 migration
+            terminal = [jid for jid, rec in self.jobs.items()
+                        if (rec.completed_at is not None or rec.cancelled
+                            or not rec.submitted)]
+        self.terminal = deque(jid for jid in terminal if jid in self.jobs)
+        self._terminal_set = set(self.terminal)
         self.result_index = dict(blob["result_index"])
         self.admission.load_state(blob["admission"])
+        for jid in list(self.feeds):
+            window_feed(self.feeds, self.feed_trunc, jid,
+                        self.retention.feed_window)
+        self._enforce_terminal_cap()
+        trim_result_index(self.result_index, self.retention.max_result_index)
 
 
-def snapshot_fold(admission_template: AdmissionController | None = None):
+def snapshot_fold(admission_template: AdmissionController | None = None,
+                  retention: RetentionPolicy | None = None):
     """Build the ``fold_factory`` that ``EventJournal.compact`` expects.
 
     ``admission_template`` supplies quota configuration (fair-share weights
     change how vtime folds); usage state always starts from the snapshot
     base, never from the template — compaction must not absorb the live
-    controller's runtime state.
+    controller's runtime state. ``retention`` makes the fold
+    retention-trimmed; it must match what restore will apply (the persisted
+    operator document keeps offline compaction and live restores in
+    agreement — DESIGN.md §9).
     """
     def factory(base: dict | None) -> ReplayState:
         adm = AdmissionController()
@@ -171,7 +374,7 @@ def snapshot_fold(admission_template: AdmissionController | None = None):
             adm.deadline_boost = admission_template.deadline_boost
             adm.default_quota = admission_template.default_quota
             adm.quotas = dict(admission_template.quotas)
-        state = ReplayState(adm)
+        state = ReplayState(adm, retention=retention)
         if base is not None:
             state.load(base)
         return state

@@ -32,7 +32,10 @@ from repro.core.telemetry import Telemetry
 from repro.core.worker import WorkerState
 
 from .admission import AdmissionController, QuotaExceeded, TenantQuota
-from .replay import FEED_KINDS, JobRecord, ReplayState, snapshot_fold
+from .operator import save_operator_config
+from .replay import (FEED_KINDS, TERMINAL_EVENT_KINDS, JobRecord,
+                     ReplayState, RetentionPolicy, snapshot_fold,
+                     trim_result_index, truncation_marker, window_feed)
 from .spec import SpecError, compile_spec, render_template
 
 DEFAULT_DEVICE_CLASSES = ("h100-nvl-94g", "rtx4090-48g", "rtx4090-24g")
@@ -61,17 +64,34 @@ class FabricService:
                  executor=None, policy=None, config: EngineConfig | None = None,
                  autoscaler=None,
                  device_classes: tuple[str, ...] = DEFAULT_DEVICE_CLASSES,
-                 seed: int = 0, retention: int = 10_000,
+                 seed: int = 0,
+                 retention: "RetentionPolicy | int | None" = None,
                  cas=None, journal: EventJournal | None = None) -> None:
-        #: terminal (completed/cancelled/rejected) job records kept queryable;
-        #: beyond this the oldest are evicted so a fabric that never restarts
-        #: does not grow without bound. Usage accounting is unaffected.
-        self.retention = retention
+        #: retention governs the fabric's footprint (DESIGN.md §9): terminal
+        #: job records beyond ``max_terminal_jobs`` are evicted (usage
+        #: accounting is unaffected), feeds are windowed to ``feed_window``
+        #: events with an explicit truncation marker, and the compact_every_*
+        #: thresholds drive scheduled journal compaction + GC. A plain int is
+        #: accepted as ``max_terminal_jobs`` (the pre-policy signature).
+        #: Precedence: this argument > ``EngineConfig.retention`` > default.
+        cfg = config if config is not None else (
+            engine.cfg if engine is not None else None)
+        if retention is None:
+            retention = getattr(cfg, "retention", None)
+            self.retention_source = ("engine-config" if retention is not None
+                                     else "default")
+        else:
+            self.retention_source = "flag"
+        if retention is None:
+            retention = RetentionPolicy()
+        elif isinstance(retention, int):
+            retention = RetentionPolicy(max_terminal_jobs=retention)
+        self.retention_policy = retention
         self.admission = admission or AdmissionController()
         if engine is None:
             engine = FlowMeshEngine(
                 policy=policy, executor=executor or SimExecutor(seed=seed),
-                cas=cas, config=config or EngineConfig(seed=seed),
+                cas=cas, config=cfg or EngineConfig(seed=seed),
                 autoscaler=autoscaler, admission=self.admission)
             engine.bootstrap_workers(list(device_classes))
         else:
@@ -81,24 +101,51 @@ class FabricService:
         self._restored = False
         #: per-job event feeds: job_id -> [event dicts] (bus-seq ordered)
         self._feeds: dict[str, list[dict]] = {}
+        #: feed truncation watermarks: job_id -> [dropped, last_dropped_seq]
+        self._feed_trunc: dict[str, list[int]] = {}
+        #: terminal-transition order — the same eviction queue the replay
+        #: fold keeps, so a job evicted live cannot resurrect on restart
+        self._terminal_order: list[str] = []
+        self._terminal_seen: set[str] = set()
         self.engine.bus.subscribe(self._on_event)
         self.journal = journal
         if journal is not None:
             self.engine.bus.subscribe(journal.on_event)
+        self.auto_compactions = 0
+        self.last_retention: dict | None = None
         self._ref_dev = DEVICE_CLASSES["h100-nvl-94g"]
 
     # ------------------------------------------------------------ tenants --
     def set_quota(self, tenant: str, quota: TenantQuota) -> None:
         self.admission.set_quota(tenant, quota)
+        self._persist_operator_config()
+
+    def _persist_operator_config(self) -> None:
+        """Write-through of operator config (quotas + retention) to the CAS
+        behind the journal, so offline ``fabric_cli.py compact`` and future
+        restores fold with the same fair-share weights this live service
+        charges by (DESIGN.md §9). No journal => nothing durable to agree
+        with => nothing to persist."""
+        if self.journal is not None:
+            save_operator_config(self.journal.cas, self.admission,
+                                 self.retention_policy)
 
     # ------------------------------------------------------- event plane ----
     def _on_event(self, e: E.FabricEvent) -> None:
-        """Bus subscriber: route job-scoped events into per-job feeds."""
+        """Bus subscriber: route job-scoped events into per-job feeds,
+        windowed under the retention policy (same trim the replay fold
+        applies, so restored feeds match live ones)."""
         if e.kind not in FEED_KINDS:
             return
         dag_id = getattr(e, "dag_id", None)
         if dag_id in self.jobs:
             self._feeds.setdefault(dag_id, []).append(e.to_dict())
+            window_feed(self._feeds, self._feed_trunc, dag_id,
+                        self.retention_policy.feed_window)
+            if e.kind in TERMINAL_EVENT_KINDS \
+                    and dag_id not in self._terminal_seen:
+                self._terminal_seen.add(dag_id)
+                self._terminal_order.append(dag_id)
 
     def events(self, job_id: str, since: int = -1,
                limit: int | None = None) -> dict | None:
@@ -109,6 +156,13 @@ class FabricService:
         duplicates or gaps, across ``pump()`` boundaries and across a
         journal-restored restart) plus the job's current status — pollers
         stop when the status is terminal and the feed is drained.
+
+        When retention has windowed the feed, a cursor that predates the
+        window start receives one synthetic ``feed_truncated`` entry ahead
+        of the retained events (and ``truncated: true`` on the response) —
+        history is never silently skipped (DESIGN.md §9). The marker's seq
+        is the last dropped event's, so after it is consumed the cursor has
+        moved past the gap and no later poll sees it again.
         """
         rec = self.jobs.get(job_id)
         if rec is None:
@@ -118,12 +172,19 @@ class FabricService:
         # not a scan — long-polling re-probes this under the API lock
         start = bisect.bisect_right(feed, since, key=lambda d: d["seq"])
         out = feed[start:] if limit is None else feed[start:start + limit]
-        return {
+        resp = {
             "job_id": job_id,
             "status": self._status(rec).value,
             "events": out,
             "cursor": out[-1]["seq"] if out else since,
         }
+        trunc = self._feed_trunc.get(job_id)
+        if trunc is not None and since < trunc[1]:
+            # marker rides outside `limit`: it reports the gap, it is not
+            # one of the requested events
+            resp["events"] = [truncation_marker(job_id, *trunc), *out]
+            resp["truncated"] = True
+        return resp
 
     # ----------------------------------------------------------- restore ----
     def restore_from_journal(self, journal: EventJournal | None = None,
@@ -149,7 +210,7 @@ class FabricService:
             # charge and re-append feed events under their original seqs
             raise ValueError("restore_from_journal requires a fresh service")
         self._restored = True
-        state = ReplayState(self.admission)
+        state = ReplayState(self.admission, retention=self.retention_policy)
         base = journal.base_state()
         from_snapshot = 0
         if base is not None:
@@ -159,6 +220,16 @@ class FabricService:
             state.apply(e)
         self.jobs = state.jobs
         self._feeds = state.feeds
+        self._feed_trunc = state.feed_trunc
+        self._terminal_order = list(state.terminal)
+        self._terminal_seen = set(state.terminal)
+        # the scheduled-retention trigger counts the un-folded tail; a fresh
+        # journal object starts at zero even over a long chain — sync it so
+        # auto-compaction does not sleep through the first post-restart spell
+        stats = journal.chain_stats()
+        journal.segments_since_compact = (
+            stats["segments"] - (1 if stats["snapshot"] else 0))
+        journal.bytes_since_compact = stats["tail_bytes"]
         for h_task, key in state.result_index.items():
             if key in self.engine.cas:
                 # dedup across restarts: the artifact survived in the CAS
@@ -176,6 +247,9 @@ class FabricService:
                 rec.error = "interrupted by fabric restart"
                 self.admission.replay_interrupted(rec.tenant)
                 interrupted += 1
+                if rec.job_id not in self._terminal_seen:
+                    self._terminal_seen.add(rec.job_id)
+                    self._terminal_order.append(rec.job_id)
         # in-flight scheduling counters died with the old process
         self.admission.reset_transients()
         return {"events": state.events, "jobs": len(self.jobs),
@@ -184,13 +258,60 @@ class FabricService:
     # -------------------------------------------------------- retention ----
     def compact(self, *, keep_segments: int = 0) -> dict:
         """Fold the journal's oldest segments into a snapshot node
-        (DESIGN.md §8) using this service's quota configuration for the
-        fold. Leaves live state untouched — only the durable chain changes;
-        the old segments become garbage for ``gc`` to reclaim."""
+        (DESIGN.md §8) using this service's quota configuration AND
+        retention policy for the fold — the snapshot drops exactly what a
+        retention-trimmed replay would (DESIGN.md §9). Leaves live state
+        untouched — only the durable chain changes; the old segments become
+        garbage for ``gc`` to reclaim."""
         if self.journal is None:
             raise ValueError("no journal attached")
-        return self.journal.compact(snapshot_fold(self.admission),
-                                    keep_segments=keep_segments)
+        return self.journal.compact(
+            snapshot_fold(self.admission, retention=self.retention_policy),
+            keep_segments=keep_segments)
+
+    def maybe_retain(self) -> dict | None:
+        """The scheduled-retention hook: compact (+ gc) once the un-folded
+        journal tail crosses the policy's segment/byte thresholds, keeping
+        the ``keep_segments`` floor for tail consumers. Called from ``pump``
+        (virtual-time driver) and the HTTP shim's pump thread; O(1) when not
+        due. Returns the compact/gc stats when it fired, else None."""
+        p, j = self.retention_policy, self.journal
+        if j is None or not p.auto_compaction:
+            return None
+        due = ((p.compact_every_segments is not None
+                and j.segments_since_compact >= p.compact_every_segments)
+               or (p.compact_every_bytes is not None
+                   and j.bytes_since_compact >= p.compact_every_bytes))
+        # never thrash at the floor: only fire when there is tail to fold
+        if not due or j.segments_since_compact <= p.keep_segments:
+            return None
+        out = {"at": self.engine.now,
+               "compact": self.compact(keep_segments=p.keep_segments)}
+        # the live dedup cache roots its artifacts through gc — trim it to
+        # the policy cap (oldest-written first) or the store never shrinks
+        # under dedup-disabled baselines
+        trim_result_index(self.engine.result_index, p.max_result_index)
+        if p.gc_on_compact:
+            out["gc"] = self.gc()
+        self.auto_compactions += 1
+        self.last_retention = out
+        return out
+
+    def retention_status(self) -> dict:
+        """The ``GET /admin/retention`` surface: effective policy (and where
+        it came from), live footprint, and scheduled-compaction history."""
+        out = {
+            "policy": self.retention_policy.to_dict(),
+            "source": self.retention_source,
+            "auto_compactions": self.auto_compactions,
+            "last": self.last_retention,
+            "jobs": len(self.jobs),
+            "feeds": sum(len(f) for f in self._feeds.values()),
+            "feeds_truncated": len(self._feed_trunc),
+        }
+        if self.journal is not None:
+            out["journal"] = self.journal.chain_stats()
+        return out
 
     def gc(self, extra_roots: tuple[str, ...] = ()) -> dict:
         """Mark-and-sweep the engine's CAS. Roots: every named ref (journal
@@ -263,36 +384,49 @@ class FabricService:
             if self.engine.idle or not self.engine.step(until):
                 break
             steps += 1
+        self.maybe_retain()
         return steps
 
     def run_until_idle(self, until: float | None = None):
         tel = self.engine.run_until_idle(until)
         if self.journal is not None:
             self.journal.flush()       # idle point: make history durable
+        self.maybe_retain()
         return tel
 
     def _evict_terminal(self) -> None:
         """Drop the oldest terminal job records (and their engine-side DAG
-        state and event feed) once more than ``retention`` have accumulated."""
-        # hysteresis: trim back to `retention` only once ~10% over it, so at
-        # steady state the O(jobs) scan amortizes to O(1) per submission
-        if len(self.jobs) <= max(self.retention + 1,
-                                 int(self.retention * 1.1)):
+        state and event feed) once more than the policy's
+        ``max_terminal_jobs`` have accumulated — in terminal-transition
+        order, the same eviction queue the replay fold keeps, so a job
+        evicted live cannot resurrect after a restart. Also holds the live
+        dedup index at its policy cap."""
+        trim_result_index(self.engine.result_index,
+                          self.retention_policy.max_result_index)
+        cap = self.retention_policy.max_terminal_jobs
+        if cap is None:
             return
-        terminal = [
-            jid for jid, rec in self.jobs.items()
-            if self._status(rec) in (JobStatus.COMPLETED,
-                                     JobStatus.CANCELLED, JobStatus.REJECTED)
+        # hysteresis: trim back to the cap only once ~10% over it, so at
+        # steady state the O(jobs) scan amortizes to O(1) per submission
+        if len(self.jobs) <= max(cap + 1, int(cap * 1.1)):
+            return
+        evictable = [
+            jid for jid in self._terminal_order
+            if jid in self.jobs
             # a job cancelled before its arrival event fired must keep its
             # engine.cancelled entry until the event is consumed, or the
             # arrival would resurrect the workflow and corrupt accounting
-            and not (rec.cancelled and jid in self.engine.cancelled
+            and not (self.jobs[jid].cancelled and jid in self.engine.cancelled
                      and jid not in self.engine.dags)]
-        for jid in terminal[:max(0, len(terminal) - self.retention)]:
-            del self.jobs[jid]                   # insertion order == oldest
+        for jid in evictable[:max(0, len(evictable) - cap)]:
+            del self.jobs[jid]
             self._feeds.pop(jid, None)
+            self._feed_trunc.pop(jid, None)
             self.engine.dags.pop(jid, None)
             self.engine.cancelled.discard(jid)
+        self._terminal_order = [j for j in self._terminal_order
+                                if j in self.jobs]
+        self._terminal_seen = set(self._terminal_order)
 
     # ------------------------------------------------------------- query ----
     def _dag(self, rec: JobRecord) -> WorkflowDAG:

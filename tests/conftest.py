@@ -1,0 +1,32 @@
+"""Test-suite wiring for the long-horizon soak tiers (DESIGN.md §6).
+
+Three tiers of the retention soak suite (tests/test_retention.py):
+
+  * tier-1 (`pytest -x -q`)      — the fast unit/property tests only; both
+                                   soak tiers are auto-skipped.
+  * `pytest --soak-quick`        — additionally runs the ~10s soak slice
+                                   (scripts/ci.sh runs this every time).
+  * `pytest -m soak`             — the full ≥2,000-job soak per policy.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--soak-quick", action="store_true", default=False,
+        help="run the ~10s retention soak slice (used by scripts/ci.sh)")
+
+
+def pytest_collection_modifyitems(config, items):
+    markexpr = getattr(config.option, "markexpr", "") or ""
+    full = "soak" in markexpr and "not soak" not in markexpr
+    quick = config.getoption("--soak-quick")
+    skip_full = pytest.mark.skip(
+        reason="full soak suite: select with `pytest -m soak`")
+    skip_quick = pytest.mark.skip(
+        reason="quick soak slice: enable with `pytest --soak-quick`")
+    for item in items:
+        if "soak" in item.keywords and not full:
+            item.add_marker(skip_full)
+        elif "soak_quick" in item.keywords and not (quick or full):
+            item.add_marker(skip_quick)

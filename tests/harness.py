@@ -26,7 +26,7 @@ import random
 
 from repro.core.cas import CAS
 from repro.core.journal import EventJournal
-from repro.fabric import FabricService, TenantQuota
+from repro.fabric import FabricService, TRUNCATED_KIND, TenantQuota
 
 DEVICES = ("h100-nvl-94g", "rtx4090-24g")
 SHADOW_REF = "shadow-head"
@@ -110,21 +110,22 @@ def clone_cas(cas) -> CAS:
 
 # ---------------------------------------------------------------------------
 def build_service(cas, *, seed=7, batch_size=3, ref=None,
-                  quotas=QUOTAS) -> FabricService:
+                  quotas=QUOTAS, retention=None) -> FabricService:
     journal = (EventJournal(cas, batch_size=batch_size) if ref is None
                else EventJournal(cas, batch_size=batch_size, ref=ref))
     svc = FabricService(seed=seed, cas=cas, device_classes=DEVICES,
-                        journal=journal)
+                        journal=journal, retention=retention)
     for tenant, quota in quotas.items():
         svc.set_quota(tenant, quota)
     return svc
 
 
-def dual_service(cas=None, *, seed=7, batch_size=3):
+def dual_service(cas=None, *, seed=7, batch_size=3, retention=None):
     """A live fabric whose bus feeds two journals on one CAS: the primary
     (``journal-head``) and an uncompacted shadow (``shadow-head``)."""
     cas = cas if cas is not None else CAS()
-    svc = build_service(cas, seed=seed, batch_size=batch_size)
+    svc = build_service(cas, seed=seed, batch_size=batch_size,
+                        retention=retention)
     shadow = EventJournal(cas, batch_size=batch_size, ref=SHADOW_REF)
     svc.engine.bus.subscribe(shadow.on_event)
     return svc, shadow
@@ -212,21 +213,57 @@ def observe(svc: FabricService) -> dict:
 
 
 def restore_fresh(cas, *, ref=None, seed=7, batch_size=3,
-                  quotas=QUOTAS) -> FabricService:
+                  quotas=QUOTAS, retention=None) -> FabricService:
     """A restarted process: fresh service over the same store + restore."""
     svc = build_service(cas, seed=seed, batch_size=batch_size, ref=ref,
-                        quotas=quotas)
+                        quotas=quotas, retention=retention)
     svc.restore_from_journal()
     return svc
 
 
-def assert_restores_equal(cas, *, batch_size=3) -> dict:
+def assert_restores_equal(cas, *, batch_size=3, retention=None) -> dict:
     """THE harness property: a service restored from the (possibly
     compacted) primary journal equals one restored from the uncompacted
-    shadow, across every tenant-observable surface. Returns the common
-    observation for further assertions."""
-    primary = observe(restore_fresh(cas, batch_size=batch_size))
+    shadow, across every tenant-observable surface. With ``retention`` both
+    restores are retention-trimmed — a trimmed snapshot+tail must equal a
+    trimmed full replay. Returns the common observation for further
+    assertions."""
+    primary = observe(restore_fresh(cas, batch_size=batch_size,
+                                    retention=retention))
     shadow = observe(restore_fresh(cas, ref=SHADOW_REF,
-                                   batch_size=batch_size))
+                                   batch_size=batch_size,
+                                   retention=retention))
     assert primary == shadow
     return primary
+
+
+def assert_cursor_contract(resp: dict, full_feed: list[dict],
+                           since: int) -> None:
+    """The feed-retention contract (DESIGN.md §9) for one read: against the
+    ground-truth untrimmed feed, a windowed read from ``since`` either
+
+      * resumes gap-free (every event after the cursor, no marker), or
+      * leads with exactly one ``feed_truncated`` marker and then every
+        event newer than the marker's watermark —
+
+    never silent loss: events may only be missing when the marker says so.
+    """
+    evs = resp["events"]
+    markers = [e for e in evs if e["kind"] == TRUNCATED_KIND]
+    real = [e for e in evs if e["kind"] != TRUNCATED_KIND]
+    full_after = [e for e in full_feed if e["seq"] > since]
+    assert len(markers) <= 1, resp
+    if not markers:
+        assert resp.get("truncated") is None
+        assert real == full_after, (real, full_after)
+        return
+    marker = markers[0]
+    assert resp["truncated"] is True
+    assert evs[0] == marker                       # the marker leads
+    watermark = marker["seq"]
+    assert watermark > since                      # else it would not show
+    assert real == [e for e in full_feed if e["seq"] > watermark]
+    # the marker must tell the truth: history really was dropped there
+    dropped_here = [e for e in full_feed if since < e["seq"] <= watermark]
+    assert dropped_here, resp
+    assert marker["dropped"] >= len(dropped_here)

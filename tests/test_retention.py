@@ -1,0 +1,667 @@
+"""Bounded-footprint fabric: policy-driven retention, windowed feeds,
+scheduled compaction, and the long-horizon soak suite (DESIGN.md §9).
+
+Covers:
+  * ``RetentionPolicy`` in the shared fold: terminal-job eviction and feed
+    windowing, applied identically by the live service and replay — a
+    retention-trimmed restore equals a retention-trimmed replay (fixed,
+    seed-randomized, and hypothesis-generated schedules);
+  * the feed truncation contract: a cursor that predates the window start
+    observes exactly one ``feed_truncated`` marker, never silent loss;
+  * scheduled retention: the pump loop triggers compact+gc on segment/byte
+    thresholds with a ``keep_segments`` floor, crash-proven at every
+    put/set_ref boundary (restore falls back to the previous head with no
+    usage divergence);
+  * the CAS-rooted operator document: offline compaction folds with the
+    same quotas + retention the live fabric used (flag > doc > default);
+  * gc reporting (``reclaimed_blobs``/``reclaimed_bytes``) through the CLI
+    and POST /admin/gc;
+  * the soak suite: ≥2,000 jobs per scheduling policy with auto-compaction
+    on — journal bytes, CAS blob count, and restored-state size plateau
+    (strictly sublinear in job count) while tenant usage stays exact.
+    Tiering: `pytest -m soak` runs the full suite, `--soak-quick` the ~10s
+    CI slice (tests/conftest.py).
+"""
+import json
+import os
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.cas import CAS, DiskCAS
+from repro.core.control_plane import EngineConfig, FlowMeshEngine
+from repro.core.journal import EventJournal
+from repro.core.scheduler import POLICIES
+from repro.core.simulator import SimExecutor
+from repro.fabric import (FabricAPI, FabricService, RetentionPolicy,
+                          TRUNCATED_KIND, configured_admission,
+                          configured_retention, load_operator_doc,
+                          snapshot_fold)
+
+from harness import (QUOTAS, SHADOW_REF, TENANTS, Crash, CrashingCAS,
+                     assert_cursor_contract, assert_restores_equal,
+                     build_service, clone_cas, dual_service, observe,
+                     restore_fresh, run_schedule, spec_doc)
+
+UNBOUNDED = RetentionPolicy(max_terminal_jobs=None, feed_window=None)
+
+
+def _usage(svc, tenant):
+    """Usage snapshot minus runtime-only scheduling counters (inflight is
+    reset on restore; holds are metered at the pool boundary, never
+    journaled)."""
+    u = svc.admission.usage_snapshot(tenant)
+    u["ops"].pop("inflight"), u["ops"].pop("held")
+    return u
+
+
+# ---------------------------------------------------------------------------
+# the policy object
+# ---------------------------------------------------------------------------
+def test_retention_policy_validation_and_roundtrip():
+    for bad in (dict(feed_window=0), dict(max_terminal_jobs=-1),
+                dict(keep_segments=-1), dict(compact_every_bytes=0),
+                dict(compact_every_segments=0),
+                dict(compact_every_segments=2, keep_segments=2)):
+        with pytest.raises(ValueError):
+            RetentionPolicy(**bad)
+    pol = RetentionPolicy(max_terminal_jobs=None, feed_window=9,
+                          compact_every_bytes=1 << 20, keep_segments=3)
+    assert RetentionPolicy.from_dict(pol.to_dict()) == pol
+    assert pol.auto_compaction
+    assert not RetentionPolicy().auto_compaction
+
+
+def test_int_retention_backcompat_and_config_precedence():
+    svc = FabricService(seed=1, retention=2)
+    assert svc.retention_policy.max_terminal_jobs == 2
+    assert svc.retention_source == "flag"
+    cfg_pol = RetentionPolicy(max_terminal_jobs=123)
+    via_cfg = FabricService(seed=1, config=EngineConfig(seed=1,
+                                                        retention=cfg_pol))
+    assert via_cfg.retention_policy is cfg_pol
+    assert via_cfg.retention_source == "engine-config"
+    plain = FabricService(seed=1)
+    assert plain.retention_policy == RetentionPolicy()
+    assert plain.retention_source == "default"
+
+
+# ---------------------------------------------------------------------------
+# feed windowing: the truncation-marker contract
+# ---------------------------------------------------------------------------
+def test_feed_truncation_marker_semantics():
+    svc = FabricService(seed=7, retention=RetentionPolicy(feed_window=3),
+                        device_classes=("h100-nvl-94g",))
+    jid = svc.submit(spec_doc("acme", "w0"))["job_id"]
+    svc.run_until_idle()
+    resp = svc.events(jid)
+    assert resp["truncated"] is True
+    assert resp["events"][0]["kind"] == TRUNCATED_KIND
+    assert len(resp["events"]) == 4                 # marker + window
+    marker = resp["events"][0]
+    assert marker["dropped"] == 3                   # 6 feed events, kept 3
+    assert all(e["seq"] > marker["seq"] for e in resp["events"][1:])
+
+    # the marker is consumed exactly once: resuming at the returned cursor
+    # (or at the marker's own seq) never replays it
+    assert svc.events(jid, since=resp["cursor"])["events"] == []
+    at_mark = svc.events(jid, since=marker["seq"])
+    assert "truncated" not in at_mark
+    assert at_mark["events"] == resp["events"][1:]
+
+    # a cursor inside the window resumes gap-free, no marker
+    mid = resp["events"][2]["seq"]
+    resume = svc.events(jid, since=mid)
+    assert "truncated" not in resume
+    assert resume["events"] == resp["events"][3:]
+
+    # pagination: the marker rides outside `limit` and only on page one
+    page = svc.events(jid, limit=1)
+    assert [e["kind"] for e in page["events"]][0] == TRUNCATED_KIND
+    assert len(page["events"]) == 2
+    page2 = svc.events(jid, since=page["cursor"], limit=1)
+    assert TRUNCATED_KIND not in [e["kind"] for e in page2["events"]]
+
+
+def test_terminal_eviction_live_and_restored_with_exact_usage():
+    pol = RetentionPolicy(max_terminal_jobs=2)
+    cas = CAS()
+    svc = build_service(cas, retention=pol)
+    for i in range(8):
+        svc.submit(spec_doc("acme", f"e{i}"))
+        svc.run_until_idle()
+    assert len(svc.jobs) <= 4                   # cap + hysteresis slack
+    svc.journal.flush()
+    restored = restore_fresh(cas, retention=pol)
+    assert len(restored.jobs) == 2              # fold trims to the cap
+    assert all(restored.job(j)["status"] == "completed"
+               for j in restored.jobs)
+    assert restored._feeds.keys() == restored.jobs.keys()
+    # eviction never touches accounting: all 8 submissions still counted
+    live, rest = _usage(svc, "acme"), _usage(restored, "acme")
+    assert live == rest
+    assert live["workflows"]["submitted"] == 8
+    assert live["workflows"]["completed"] == 8
+
+
+def test_v1_snapshot_loads_with_migration():
+    """A chain compacted by the pre-retention release (snapshot format 1)
+    must still restore: v2 keys default to empty, terminal order falls back
+    to record order, and the loader's policy is enforced on the result."""
+    from repro.fabric import ReplayState
+    cas = CAS()
+    svc = build_service(cas, quotas={})
+    for i in range(3):
+        svc.submit(spec_doc("acme", f"v{i}"))
+        svc.run_until_idle()
+    svc.journal.flush()
+    state = ReplayState()
+    for e in svc.journal.replay():
+        state.apply(e)
+    blob = state.to_blob()
+    for key in ("feed_trunc", "terminal", "retention"):
+        blob.pop(key)
+    blob["format"] = 1
+    fresh = ReplayState(retention=RetentionPolicy(max_terminal_jobs=2))
+    fresh.load(blob)
+    assert len(fresh.jobs) == 2 and len(fresh.terminal) == 2
+    with pytest.raises(ValueError, match="snapshot format"):
+        ReplayState().load({"format": 999})
+
+
+def test_live_eviction_follows_terminal_order():
+    """Live eviction walks the terminal-transition queue (not submission
+    order), so the survivors agree with a restored fold — a job evicted
+    live can never resurrect after a restart."""
+    pol = RetentionPolicy(max_terminal_jobs=2)
+    cas = CAS()
+    svc = build_service(cas, retention=pol, quotas={})
+    a = svc.submit(spec_doc("acme", "ta"))["job_id"]
+    b = svc.submit(spec_doc("acme", "tb"))["job_id"]
+    svc.cancel(b)                       # b goes terminal before a
+    svc.run_until_idle()                # a completes second
+    c = svc.submit(spec_doc("acme", "tc"))["job_id"]
+    svc.run_until_idle()
+    d = svc.submit(spec_doc("acme", "td"))["job_id"]   # tips the hysteresis
+    # terminal order is b, a, c: the cap of 2 drops b — a, though submitted
+    # first, went terminal later and survives
+    assert b not in svc.jobs
+    assert a in svc.jobs and c in svc.jobs and d in svc.jobs
+    svc.run_until_idle()
+    svc.journal.flush()
+    restored = restore_fresh(cas, quotas={}, retention=pol)
+    # the fold evicts in the same order (b, then a once d lands); nothing
+    # the live fabric dropped comes back
+    assert set(restored.jobs) == {c, d}
+    assert set(restored.jobs) <= set(svc.jobs)
+
+
+def test_trimmed_restore_equals_trimmed_replay_fixed_schedule():
+    pol = RetentionPolicy(max_terminal_jobs=3, feed_window=2)
+    svc, shadow = dual_service(retention=pol)
+    run_schedule(svc, [("submit", 0, 0), ("submit", 1, 0), ("pump", 9),
+                       ("submit", 2, 1), ("cancel", 2), ("drain",),
+                       ("compact", 1), ("submit", 0, 2), ("drain",),
+                       ("submit", 1, 3), ("drain",), ("compact", 0)])
+    svc.journal.flush()
+    shadow.flush()
+    obs = assert_restores_equal(svc.engine.cas, retention=pol)
+    assert len(obs["jobs"]) <= 4                # trimmed, not full history
+    for feed in obs["feeds"].values():
+        real = [e for e in feed["events"] if e["kind"] != TRUNCATED_KIND]
+        assert len(real) <= 2
+
+
+def test_snapshot_stops_growing_with_history():
+    pol = RetentionPolicy(max_terminal_jobs=3, feed_window=3)
+    cas = CAS()
+    svc = build_service(cas, retention=pol, quotas={})
+
+    def burn(n):
+        for i in range(n):
+            svc.submit(spec_doc("acme", f"pl{i % 4}"))
+            svc.run_until_idle()
+        svc.journal.flush()
+        return svc.compact()
+
+    first = burn(12)
+    second = burn(24)                           # 3x the history folded in
+    size1 = cas.size_of(first["snapshot"])
+    size2 = cas.size_of(second["snapshot"])
+    assert size2 <= size1 * 1.2                 # bounded by caps, not jobs
+
+
+# ---------------------------------------------------------------------------
+# scheduled retention: the pump-driven compact + gc
+# ---------------------------------------------------------------------------
+AUTO = RetentionPolicy(max_terminal_jobs=5, feed_window=4,
+                       compact_every_segments=4, keep_segments=1)
+
+
+def test_scheduled_compaction_by_segments_bounds_the_chain():
+    cas = CAS()
+    svc = build_service(cas, retention=AUTO)    # batch_size=3
+    for i in range(12):
+        svc.submit(spec_doc(TENANTS[i % 3], f"sc{i % 2}"))
+        svc.run_until_idle()
+    assert svc.auto_compactions >= 2
+    stats = svc.journal.chain_stats()
+    assert stats["snapshot"] is True
+    # the chain never outgrows threshold + snapshot node (+1 slack for the
+    # segment that tips the trigger)
+    assert stats["segments"] <= AUTO.compact_every_segments + 2
+    # gc rode along: dead segments were swept, the store stays small
+    assert svc.last_retention is not None and "gc" in svc.last_retention
+    assert len(cas) <= 40
+    status = svc.retention_status()
+    assert status["auto_compactions"] == svc.auto_compactions
+    assert status["policy"] == AUTO.to_dict()
+    assert status["journal"]["segments"] == stats["segments"]
+
+
+def test_scheduled_compaction_by_bytes():
+    pol = RetentionPolicy(max_terminal_jobs=5, feed_window=4,
+                          compact_every_bytes=1500, keep_segments=1)
+    cas = CAS()
+    svc = build_service(cas, retention=pol)
+    for i in range(8):
+        svc.submit(spec_doc(TENANTS[i % 3], f"b{i % 2}"))
+        svc.run_until_idle()
+    assert svc.auto_compactions >= 1
+    assert svc.journal.bytes_since_compact < 1500 + 2500  # tail stays small
+
+
+def test_restore_syncs_trigger_counters():
+    """A restarted service must see the chain it inherited as un-folded
+    tail — not sleep through its first scheduled compaction."""
+    cas = CAS()
+    svc = build_service(cas)                    # no auto-compaction
+    for i in range(6):
+        svc.submit(spec_doc(TENANTS[i % 3], f"rs{i}"))
+        svc.run_until_idle()
+    svc.journal.flush()
+    segments = svc.journal.chain_stats()["segments"]
+    assert segments >= AUTO.compact_every_segments
+    svc2 = restore_fresh(cas, retention=AUTO)
+    assert svc2.journal.segments_since_compact == segments
+    out = svc2.maybe_retain()
+    assert out is not None
+    assert out["compact"]["folded_segments"] >= 1
+    assert svc2.auto_compactions == 1
+
+
+def test_scheduled_compaction_never_thrashes_at_the_floor():
+    pol = RetentionPolicy(compact_every_bytes=1, keep_segments=2)
+    cas = CAS()
+    svc = build_service(cas, retention=pol)
+    svc.submit(spec_doc("acme", "fl"))
+    svc.run_until_idle()
+    svc.journal.flush()
+    before = svc.auto_compactions
+    chain = svc.journal.chain_stats()["segments"]
+    for _ in range(3):
+        svc.pump(max_steps=0)
+    if chain <= pol.keep_segments:
+        assert svc.auto_compactions == before   # nothing foldable: no-op
+    else:
+        # it fired once, then the tail sits at the floor and stays quiet
+        svc.pump(max_steps=0)
+        assert svc.auto_compactions <= before + 1
+
+
+# ---------------------------------------------------------------------------
+# crash sites: pump-triggered compaction dies mid-write
+# ---------------------------------------------------------------------------
+CRASH_ARMS = [("snapshot put", ("put", 0)),
+              ("tail rewrite put", ("put", 1)),
+              ("head set_ref", ("set_ref", 0))]
+
+
+@pytest.mark.parametrize("label,arm", CRASH_ARMS,
+                         ids=[c[0] for c in CRASH_ARMS])
+def test_pump_triggered_compact_crash_falls_back(label, arm):
+    """Kill the scheduled compaction at each put/set_ref boundary: the head
+    never advances, a fresh restore equals the pre-crash restore (usage
+    included), and the retried trigger converges."""
+    base = RetentionPolicy(max_terminal_jobs=6, feed_window=3)
+    auto = RetentionPolicy(max_terminal_jobs=6, feed_window=3,
+                           compact_every_segments=3, keep_segments=1,
+                           gc_on_compact=False)
+    inner = CAS()
+    cas = CrashingCAS(inner)
+    svc = build_service(cas, retention=base)    # schedule disarmed for setup
+    for i in range(4):
+        svc.submit(spec_doc(TENANTS[i % 3], f"cr{i}"))
+        svc.run_until_idle()
+    svc.journal.flush()
+    assert svc.journal.segments_since_compact > auto.compact_every_segments
+    svc.retention_policy = auto                 # arm the schedule
+    pre = clone_cas(inner)
+    head_before = svc.journal.head
+    cas.arm(*arm)
+    with pytest.raises(Crash):
+        svc.pump(max_steps=0)                   # the retention hook fires
+    assert svc.journal.head == head_before      # fell back: ref untouched
+    after = observe(restore_fresh(inner, retention=base))
+    before = observe(restore_fresh(pre, retention=base))
+    assert after == before                      # no divergence, usage incl.
+    # the next pump retries cleanly on the surviving chain
+    out = svc.maybe_retain()
+    assert out is not None and out["compact"]["folded_segments"] >= 1
+    assert svc.auto_compactions == 1
+    inner.gc()                                  # sweep the crash orphans
+    assert observe(restore_fresh(inner, retention=base)) == before
+
+
+# ---------------------------------------------------------------------------
+# the operator document: offline agreement + precedence
+# ---------------------------------------------------------------------------
+def test_operator_doc_write_through_and_gc_root():
+    pol = RetentionPolicy(max_terminal_jobs=7, feed_window=5)
+    cas = CAS()
+    svc = build_service(cas, retention=pol)     # set_quota writes through
+    doc = load_operator_doc(cas)
+    assert doc is not None
+    assert doc["retention"] == pol.to_dict()
+    assert doc["admission"]["quotas"]["acme"]["weight"] == 2.0
+    adm = configured_admission(doc)
+    assert adm.quotas["globex"].weight == 0.5
+    assert configured_retention(doc) == pol
+    # precedence: a live flag beats the document
+    override = RetentionPolicy(max_terminal_jobs=1)
+    assert configured_retention(doc, override=override) is override
+    # the document's named ref roots it through gc
+    key = cas.get_ref("operator-config")
+    cas.gc()
+    assert key in cas and cas.get_ref("operator-config") == key
+
+
+def test_offline_compact_with_operator_doc_agrees_with_live():
+    """The tentpole agreement property: an offline process that knows only
+    what the CAS carries (journal + operator document) compacts to a
+    snapshot that restores identically to the uncompacted shadow."""
+    pol = RetentionPolicy(max_terminal_jobs=4, feed_window=3)
+    svc, shadow = dual_service(retention=pol)
+    run_schedule(svc, [("submit", 0, 0), ("submit", 1, 0), ("pump", 9),
+                       ("submit", 2, 1), ("drain",), ("submit", 0, 2),
+                       ("drain",)])
+    svc.journal.flush()
+    shadow.flush()
+    cas = svc.engine.cas
+    doc = load_operator_doc(cas)
+    offline = EventJournal(cas)                 # a fresh process, same ref
+    stats = offline.compact(
+        snapshot_fold(configured_admission(doc),
+                      retention=configured_retention(doc)),
+        keep_segments=1)
+    assert stats["folded_segments"] > 0
+    assert_restores_equal(cas, retention=pol)
+
+
+def test_cli_retention_flags_compact_and_gc_reporting(tmp_path):
+    """End to end through scripts/fabric_cli.py: flags persist into the
+    operator document, offline compact folds under it, and gc reports
+    nonzero reclamation in its payload."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(root, "src")
+           + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    cli = os.path.join(root, "scripts", "fabric_cli.py")
+    casdir = str(tmp_path / "cas")
+
+    def run(*args):
+        out = subprocess.run([sys.executable, cli, *args], env=env, cwd=root,
+                             capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        return out.stdout
+
+    run("submit", "--template", "distill", "--param", "tenant=acme",
+        "--journal", casdir, "--retention-jobs", "7", "--feed-window", "5")
+    run("submit", "--template", "distill", "--param", "tenant=globex",
+        "--journal", casdir)
+    status = json.loads(run("retention", "--journal", casdir))
+    assert status["policy"]["max_terminal_jobs"] == 7    # doc carried it
+    assert status["policy"]["feed_window"] == 5
+    assert status["source"] == "operator-doc"
+    folded = json.loads(run("compact", "--journal", casdir, "--keep", "0"))
+    assert folded["folded_segments"] > 0
+    swept = json.loads(run("gc", "--journal", casdir))
+    assert swept["reclaimed_blobs"] > 0
+    assert swept["reclaimed_bytes"] > 0
+
+
+def test_cli_restore_applies_and_preserves_operator_quotas(tmp_path):
+    """A CLI restart over a journaled store must fold with the document's
+    quota weights and must NOT clobber the document with defaults."""
+    casdir = str(tmp_path / "cas")
+    cas = DiskCAS(casdir)
+    svc = build_service(cas, retention=RetentionPolicy(max_terminal_jobs=9))
+    svc.submit(spec_doc("acme", "oq"))
+    svc.run_until_idle()
+    svc.journal.flush()
+    assert load_operator_doc(cas)["admission"]["quotas"]["acme"]["weight"] \
+        == 2.0
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(root, "src")
+           + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "fabric_cli.py"),
+         "submit", "--template", "distill", "--param", "tenant=globex",
+         "--journal", casdir],
+        env=env, cwd=root, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert "restored" in out.stdout
+    doc = load_operator_doc(DiskCAS(casdir))
+    assert doc["admission"]["quotas"]["acme"]["weight"] == 2.0
+    assert doc["admission"]["quotas"]["globex"]["weight"] == 0.5
+    assert doc["retention"]["max_terminal_jobs"] == 9
+
+
+def test_admin_retention_and_gc_routes():
+    svc = build_service(CAS(), retention=AUTO)
+    api = FabricAPI(svc)
+    for i in range(6):
+        code, _ = api.handle("POST", "/workflows",
+                             {"spec": spec_doc("acme", f"rt{i}")})
+        assert code == 201
+        api.handle("POST", "/drain", {})
+    code, status = api.handle("GET", "/admin/retention")
+    assert code == 200
+    assert status["policy"] == AUTO.to_dict()
+    assert status["auto_compactions"] >= 1
+    assert status["journal"]["snapshot"] is True
+    code, stats = api.handle("POST", "/admin/gc")
+    assert code == 200
+    assert {"reclaimed_blobs", "reclaimed_bytes"} <= stats.keys()
+    # a journal-less fabric still reports its policy, minus chain stats
+    api2 = FabricAPI(FabricService(seed=1))
+    code, bare = api2.handle("GET", "/admin/retention")
+    assert code == 200 and "journal" not in bare
+
+
+# ---------------------------------------------------------------------------
+# property: retention-trimmed restore == retention-trimmed replay, and the
+# cursor contract holds at every resume point
+# ---------------------------------------------------------------------------
+def _cursor_points(full_feed):
+    seqs = [e["seq"] for e in full_feed]
+    picks = {-1}
+    if seqs:
+        picks.update((seqs[0], seqs[len(seqs) // 2], seqs[-1]))
+    return sorted(picks)
+
+
+def _check_feed_contract(cas, pol, batch_size=3):
+    """Against the untrimmed shadow ground truth: every cursor into every
+    retained job's windowed feed resumes gap-free or sees one marker."""
+    full = restore_fresh(cas, ref=SHADOW_REF, batch_size=batch_size,
+                         retention=UNBOUNDED)
+    trimmed = restore_fresh(cas, batch_size=batch_size, retention=pol)
+    for jid in trimmed.jobs:
+        full_feed = full.events(jid)["events"]
+        for since in _cursor_points(full_feed):
+            assert_cursor_contract(trimmed.events(jid, since=since),
+                                   full_feed, since)
+
+
+def test_property_retention_schedules_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    given, settings = hypothesis.given, hypothesis.settings
+
+    step = st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, 2), st.integers(0, 3)),
+        st.tuples(st.just("pump"), st.integers(1, 14)),
+        st.tuples(st.just("cancel"), st.integers(0, 5)),
+        st.tuples(st.just("compact"), st.integers(0, 2)),
+    )
+
+    @given(st.lists(step, min_size=1, max_size=12), st.integers(1, 5),
+           st.integers(1, 4),
+           st.one_of(st.none(), st.integers(2, 6)))
+    @settings(max_examples=40, deadline=None)
+    def prop(schedule, batch_size, window, cap):
+        pol = RetentionPolicy(max_terminal_jobs=cap, feed_window=window)
+        svc, shadow = dual_service(batch_size=batch_size, retention=pol)
+        run_schedule(svc, [("submit", 0, 0), *schedule, ("drain",)])
+        svc.journal.flush()
+        shadow.flush()
+        assert_restores_equal(svc.engine.cas, batch_size=batch_size,
+                              retention=pol)
+        _check_feed_contract(svc.engine.cas, pol, batch_size=batch_size)
+
+    prop()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_retention_schedules_no_hypothesis_fallback(seed):
+    pol = RetentionPolicy(max_terminal_jobs=3, feed_window=2)
+    svc, shadow = dual_service(seed=seed, retention=pol)
+    run_schedule(svc, [("submit", 0, 0),
+                       *random_schedule_steps(random.Random(seed))])
+    svc.journal.flush()
+    shadow.flush()
+    assert_restores_equal(svc.engine.cas, retention=pol)
+    _check_feed_contract(svc.engine.cas, pol)
+
+
+def random_schedule_steps(rng, steps=10):
+    out = []
+    for _ in range(steps):
+        r = rng.random()
+        if r < 0.4:
+            out.append(("submit", rng.randrange(3), rng.randrange(4)))
+        elif r < 0.7:
+            out.append(("pump", rng.randrange(1, 12)))
+        elif r < 0.8:
+            out.append(("cancel", rng.randrange(5)))
+        else:
+            out.append(("compact", rng.randrange(3)))
+    out.append(("drain",))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the soak suite: bounded footprint under continuous operation
+# ---------------------------------------------------------------------------
+SOAK = RetentionPolicy(max_terminal_jobs=40, feed_window=4,
+                       max_result_index=60,
+                       compact_every_segments=8, keep_segments=2)
+
+
+def _footprint(svc, cas):
+    stats = svc.journal.chain_stats()
+    return {
+        "chain_bytes": stats["bytes"],
+        "chain_segments": stats["segments"],
+        "cas_blobs": len(cas),
+        "jobs": len(svc.jobs),
+        "feed_events": sum(len(f) for f in svc._feeds.values()),
+        "flushed_total": svc.journal.bytes_flushed,
+    }
+
+
+def _soak(policy_name, n_jobs, seed=11):
+    """Drive one scheduling policy through ``n_jobs`` workflows on a live,
+    journaled, auto-compacting fabric; verify the footprint plateaus and a
+    post-soak restore reproduces tenant usage exactly."""
+    cas = CAS()
+    engine = FlowMeshEngine(policy=POLICIES[policy_name](),
+                            executor=SimExecutor(seed=seed), cas=cas,
+                            config=EngineConfig(seed=seed,
+                                                telemetry_window=256))
+    engine.bootstrap_workers(["h100-nvl-94g", "rtx4090-24g"])
+    journal = EventJournal(cas, batch_size=64)
+    svc = FabricService(engine=engine, journal=journal, retention=SOAK)
+    for t, q in QUOTAS.items():
+        svc.set_quota(t, q)
+    half = n_jobs // 2
+    checkpoints = []
+    for i in range(n_jobs):
+        job = svc.submit(spec_doc(TENANTS[i % len(TENANTS)], f"s{i % 23}"))
+        if i % 41 == 40:
+            svc.cancel(job["job_id"])           # occasional churn
+        svc.pump(max_steps=48)
+        if i + 1 in (half, n_jobs):
+            svc.run_until_idle()
+            svc.journal.flush()
+            svc.maybe_retain()
+            checkpoints.append(_footprint(svc, cas))
+    mid, end = checkpoints
+
+    # --- bounded footprint: the second half added ~n_jobs/2 workflows but
+    # the durable chain, the store, and the state all plateau -------------
+    for key in ("chain_bytes", "cas_blobs", "jobs", "feed_events"):
+        assert end[key] <= mid[key] * 1.35 + 64, (policy_name, key,
+                                                  mid, end)
+    # strictly sublinear in total history: the chain holds a small constant
+    # factor of the retention caps, not of everything ever flushed
+    assert end["chain_bytes"] < end["flushed_total"] / 3, (policy_name, end)
+    assert end["jobs"] <= SOAK.max_terminal_jobs + 8    # cap + live slack
+    assert svc.auto_compactions >= 2
+
+    # --- a restarted fabric agrees exactly on usage ----------------------
+    restored = FabricService(
+        engine=_fresh_engine(policy_name, cas, seed),
+        journal=EventJournal(cas, batch_size=64), retention=SOAK)
+    for t, q in QUOTAS.items():
+        restored.set_quota(t, q)
+    stats = restored.restore_from_journal()
+    assert stats["from_snapshot"] > 0
+    total = {"submitted": 0, "completed": 0, "cancelled": 0, "rejected": 0}
+    for t in TENANTS:
+        assert _usage(restored, t) == _usage(svc, t), (policy_name, t)
+        for k in total:
+            total[k] += _usage(svc, t)["workflows"][k]
+    assert total["submitted"] == n_jobs
+    assert total["completed"] + total["cancelled"] == n_jobs
+    # restored state is as bounded as the live fabric's
+    assert len(restored.jobs) <= SOAK.max_terminal_jobs
+    for feed in restored._feeds.values():
+        assert len(feed) <= SOAK.feed_window
+
+
+def _fresh_engine(policy_name, cas, seed):
+    engine = FlowMeshEngine(policy=POLICIES[policy_name](),
+                            executor=SimExecutor(seed=seed), cas=cas,
+                            config=EngineConfig(seed=seed,
+                                                telemetry_window=256))
+    engine.bootstrap_workers(["h100-nvl-94g", "rtx4090-24g"])
+    return engine
+
+
+@pytest.mark.soak
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_soak_full(policy_name):
+    """The acceptance soak: ≥2,000 jobs per policy with auto-compaction."""
+    _soak(policy_name, 2000)
+
+
+@pytest.mark.soak_quick
+@pytest.mark.parametrize("policy_name", sorted(POLICIES))
+def test_soak_quick(policy_name):
+    """The ~10s CI slice of the soak (scripts/ci.sh --soak-quick)."""
+    _soak(policy_name, 260)
