@@ -1,46 +1,85 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 test suite + a fast FabricService smoke workflow.
+# CI entry point: named, timed stages over the whole fabric surface.
 #
-#   bash scripts/ci.sh
+#   bash scripts/ci.sh                # everything below, in order
+#   CI_ARTIFACTS_DIR=/somewhere ...   # keep logs/gc.json for upload (the
+#                                     # GitHub workflow sets this so failed
+#                                     # runs ship their server logs)
+#
+# Stages:
+#   tier-1       pytest -x -q (the fast unit/property suite)
+#   smokes       fabric example + CLI demo + HTTP shim over real sockets
+#   soak-quick   ~10s slice of the retention soak (full: pytest -m soak)
+#   compaction   DiskCAS journal fold + GC reclamation proof
+#   failover     serve -> follow -> kill -9 -> promote; byte-equal /jobs,
+#                zombie append fenced
+#   hygiene      git tree still clean (nothing generated into the repo)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1 test suite =="
-python -m pytest -x -q
+if [ -n "${CI_ARTIFACTS_DIR:-}" ]; then
+    ARTIFACTS="$CI_ARTIFACTS_DIR"
+    ARTIFACTS_EPHEMERAL=0          # caller keeps them (workflow upload)
+else
+    ARTIFACTS="$(mktemp -d)"
+    ARTIFACTS_EPHEMERAL=1
+fi
+mkdir -p "$ARTIFACTS"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONUNBUFFERED=1
 
-echo
-echo "== fabric service smoke =="
-PYTHONPATH=src python examples/fabric_service.py
+PIDS_TO_KILL=()
+cleanup() {
+    for pid in "${PIDS_TO_KILL[@]:-}"; do
+        kill "$pid" 2>/dev/null || true
+    done
+    if [ "$ARTIFACTS_EPHEMERAL" = 1 ]; then
+        rm -rf "$ARTIFACTS"
+    fi
+}
+trap cleanup EXIT
 
-echo
-echo "== fabric CLI smoke =="
-PYTHONPATH=src python scripts/fabric_cli.py demo
+STAGE_REPORT=()
+stage() {
+    local name="$1"; shift
+    echo
+    echo "== stage: $name =="
+    local t0=$SECONDS
+    "$@"
+    STAGE_REPORT+=("$(printf '%-12s %4ds' "$name" $((SECONDS - t0)))")
+}
 
-echo
-echo "== HTTP shim smoke (real sockets) =="
-PYTHONPATH=src python scripts/http_smoke.py
+stage_tier1() {
+    python -m pytest -x -q
+}
 
-echo
-echo "== retention soak (quick ~10s slice; full suite: pytest -m soak) =="
-python -m pytest -q --soak-quick tests/test_retention.py -k soak_quick
+stage_smokes() {
+    python examples/fabric_service.py
+    echo
+    python scripts/fabric_cli.py demo
+    echo
+    python scripts/http_smoke.py
+}
 
-echo
-echo "== journal compaction + GC smoke (DiskCAS) =="
-# exercises the on-disk path every run: journal a couple of runs into a
-# tempdir CAS, fold them into a snapshot, sweep the dead segments (and
-# assert the sweep actually reclaimed something), and prove the compacted
-# chain still replays
-COMPACT_TMP=$(mktemp -d)
-trap 'rm -rf "$COMPACT_TMP"' EXIT
-PYTHONPATH=src python scripts/fabric_cli.py submit --template distill \
-    --param tenant=acme --journal "$COMPACT_TMP/cas" > /dev/null
-PYTHONPATH=src python scripts/fabric_cli.py submit --template distill \
-    --param tenant=globex --journal "$COMPACT_TMP/cas" > /dev/null
-PYTHONPATH=src python scripts/fabric_cli.py compact --keep 0 \
-    --journal "$COMPACT_TMP/cas"
-PYTHONPATH=src python scripts/fabric_cli.py gc --journal "$COMPACT_TMP/cas" \
-    | tee "$COMPACT_TMP/gc.json"
-python - "$COMPACT_TMP/gc.json" <<'PY'
+stage_soak_quick() {
+    python -m pytest -q --soak-quick tests/test_retention.py -k soak_quick
+}
+
+stage_compaction() {
+    # exercises the on-disk path every run: journal a couple of runs into a
+    # tempdir CAS, fold them into a snapshot, sweep the dead segments (and
+    # assert the sweep actually reclaimed something), and prove the
+    # compacted chain still replays
+    local dir="$ARTIFACTS/compaction"
+    rm -rf "$dir" && mkdir -p "$dir"
+    python scripts/fabric_cli.py submit --template distill \
+        --param tenant=acme --journal "$dir/cas" > /dev/null
+    python scripts/fabric_cli.py submit --template distill \
+        --param tenant=globex --journal "$dir/cas" > /dev/null
+    python scripts/fabric_cli.py compact --keep 0 --journal "$dir/cas"
+    python scripts/fabric_cli.py gc --journal "$dir/cas" \
+        | tee "$ARTIFACTS/gc.json"
+    python - "$ARTIFACTS/gc.json" <<'PY'
 import json, sys
 stats = json.load(open(sys.argv[1]))
 assert stats["reclaimed_blobs"] > 0 and stats["reclaimed_bytes"] > 0, (
@@ -48,8 +87,170 @@ assert stats["reclaimed_blobs"] > 0 and stats["reclaimed_bytes"] > 0, (
 print(f"gc reclaimed {stats['reclaimed_blobs']} blobs / "
       f"{stats['reclaimed_bytes']} bytes")
 PY
-PYTHONPATH=src python scripts/fabric_cli.py tail --journal "$COMPACT_TMP/cas" \
-    > /dev/null
+    python scripts/fabric_cli.py tail --journal "$dir/cas" > /dev/null
+}
 
+# wait for a fabric_cli serve/follow subprocess to print its URL
+wait_for_url() {
+    local log="$1" deadline=$((SECONDS + 30))
+    while [ $SECONDS -lt $deadline ]; do
+        local url
+        url=$(grep -o 'http://[0-9.:]*' "$log" 2>/dev/null | head -1 || true)
+        if [ -n "$url" ]; then echo "$url"; return 0; fi
+        sleep 0.2
+    done
+    echo "server never came up; log:" >&2; cat "$log" >&2; return 1
+}
+
+stage_failover() {
+    # the warm-standby path end to end, as two real OS processes over one
+    # DiskCAS directory (DESIGN.md §10): run work on a served primary,
+    # kill -9 it, promote the tailing follower, and require the promoted
+    # fabric to answer GET /jobs byte-for-byte identically (and per-tenant
+    # usage identically, modulo process-local pool/latency meters) — then
+    # prove the dead primary's epoch can no longer append to the journal.
+    local dir="$ARTIFACTS/failover"
+    rm -rf "$dir" && mkdir -p "$dir"
+
+    python scripts/fabric_cli.py serve --port 0 --journal "$dir/cas" \
+        > "$ARTIFACTS/primary.log" 2>&1 &
+    local primary_pid=$!
+    PIDS_TO_KILL+=("$primary_pid")
+    local purl
+    purl=$(wait_for_url "$ARTIFACTS/primary.log")
+    echo "primary up at $purl"
+
+    python scripts/fabric_cli.py follow --port 0 --journal "$dir/cas" \
+        > "$ARTIFACTS/follower.log" 2>&1 &
+    local follower_pid=$!
+    PIDS_TO_KILL+=("$follower_pid")
+    local furl
+    furl=$(wait_for_url "$ARTIFACTS/follower.log")
+    echo "follower up at $furl"
+
+    python - "$purl" "$furl" "$dir" <<'PY'
+import json, sys, time
+from repro.fabric import RemoteAPI
+purl, furl, outdir = sys.argv[1:4]
+papi, fapi = RemoteAPI(purl, timeout_s=60), RemoteAPI(furl, timeout_s=60)
+
+for tenant in ("acme", "globex"):
+    code, job = papi.handle("POST", "/workflows",
+                            {"template": "distill",
+                             "params": {"tenant": tenant}})
+    assert code == 201, (code, job)
+code, _ = papi.handle("POST", "/drain", {})
+assert code == 200
+
+# a follower write must be refused while it is a standby
+code, err = fapi.handle("POST", "/workflows", {"template": "distill"})
+assert code == 409 and err["error"] == "read_only_follower", (code, err)
+
+# the tail thread catches up on its own (no explicit pokes)
+deadline = time.time() + 30
+while time.time() < deadline:
+    code, repl = fapi.handle("GET", "/admin/replication")
+    assert code == 200, repl
+    if repl["caught_up"] and repl["applied"]["jobs"] == 2:
+        break
+    time.sleep(0.2)
+else:
+    raise SystemExit(f"follower never caught up: {repl}")
+print(f"follower caught up: {repl['applied']}")
+
+code, jobs = papi.handle("GET", "/jobs")
+assert code == 200 and all(j["status"] == "completed" for j in jobs["jobs"])
+usage = {}
+for tenant in ("acme", "globex"):
+    code, u = papi.handle("GET", f"/tenants/{tenant}/usage")
+    # pool/latency are engine-process meters, not replicated state
+    usage[tenant] = {k: v for k, v in u.items()
+                     if k not in ("pool", "latency")}
+json.dump({"jobs": jobs, "usage": usage},
+          open(f"{outdir}/pre_kill.json", "w"), sort_keys=True)
+print(f"pre-kill: {len(jobs['jobs'])} jobs recorded")
+PY
+
+    kill -9 "$primary_pid"
+    wait "$primary_pid" 2>/dev/null || true
+    echo "primary killed (-9)"
+
+    python scripts/fabric_cli.py --url "$furl" promote
+
+    python - "$furl" "$dir" <<'PY'
+import json, sys
+from repro.fabric import RemoteAPI
+furl, outdir = sys.argv[1:3]
+api = RemoteAPI(furl, timeout_s=60)
+pre = json.load(open(f"{outdir}/pre_kill.json"))
+
+code, jobs = api.handle("GET", "/jobs")
+assert code == 200
+got, want = (json.dumps(x, sort_keys=True) for x in (jobs, pre["jobs"]))
+assert got == want, f"promoted /jobs diverged:\n got={got}\nwant={want}"
+for tenant, want_u in pre["usage"].items():
+    code, u = api.handle("GET", f"/tenants/{tenant}/usage")
+    got_u = {k: v for k, v in u.items() if k not in ("pool", "latency")}
+    assert got_u == want_u, (tenant, got_u, want_u)
+print(f"promoted fabric serves the identical {len(jobs['jobs'])}-job set")
+
+code, repl = api.handle("GET", "/admin/replication")
+assert code == 200 and repl["role"] == "primary", repl
+# serve claimed epoch 1 at startup; the promotion bumped it to 2
+assert repl["journal"]["epoch"] == 2, repl
+# and it is read-write now
+code, job = api.handle("POST", "/workflows",
+                       {"template": "batch-eval",
+                        "params": {"tenant": "acme"}})
+assert code == 201, (code, job)
+print("post-promote submit accepted:", job["job_id"])
+PY
+
+    # the zombie's journal (old epoch) must be fenced off the head ref
+    python - "$dir" <<'PY'
+import sys
+from repro.core.cas import DiskCAS, RefFencedError
+from repro.core import events as E
+from repro.core.journal import EventJournal
+cas = DiskCAS(f"{sys.argv[1]}/cas")
+head, epoch = cas.ref_entry("journal-head")
+zombie = EventJournal(cas, epoch=epoch - 1)  # the dead primary's epoch
+zombie.on_event(E.WorkflowSubmitted(time=0.0, dag_id="zombie", tenant="z"))
+try:
+    zombie.flush()
+except RefFencedError as e:
+    assert cas.get_ref("journal-head") == head
+    print(f"zombie append fenced: {e}")
+else:
+    raise SystemExit("zombie primary was NOT fenced")
+PY
+
+    kill "$follower_pid" 2>/dev/null || true
+    wait "$follower_pid" 2>/dev/null || true
+}
+
+stage_hygiene() {
+    # nothing above may have dirtied the checkout (generated files belong
+    # in $ARTIFACTS; bytecode is gitignored)
+    local dirty
+    dirty=$(git status --porcelain)
+    if [ -n "$dirty" ]; then
+        echo "repo not clean after CI run:" >&2
+        echo "$dirty" >&2
+        return 1
+    fi
+    echo "working tree clean"
+}
+
+stage tier-1 stage_tier1
+stage smokes stage_smokes
+stage soak-quick stage_soak_quick
+stage compaction stage_compaction
+stage failover stage_failover
+stage hygiene stage_hygiene
+
+echo
+echo "== stage timings =="
+for line in "${STAGE_REPORT[@]}"; do echo "  $line"; done
 echo
 echo "CI OK"

@@ -39,6 +39,15 @@ against a fabric started by ``serve``.
     # and the effective config is written back for offline agreement
     PYTHONPATH=src python scripts/fabric_cli.py serve --journal /tmp/fabric-cas \
         --compact-every-segments 64 --keep-segments 4 --retention-jobs 5000
+
+    # warm standby: a second process tails the same CAS read-only
+    # (GET /jobs, /jobs/{id}, /jobs/{id}/events, /admin/replication); if
+    # the primary dies, promote fences it off the journal head and flips
+    # the follower read-write in place (DESIGN.md §10)
+    PYTHONPATH=src python scripts/fabric_cli.py follow --port 8124 \
+        --journal /tmp/fabric-cas
+    PYTHONPATH=src python scripts/fabric_cli.py --url http://127.0.0.1:8124 \
+        promote
 """
 from __future__ import annotations
 
@@ -47,11 +56,13 @@ import dataclasses
 import json
 import signal
 import sys
+import threading
 
 from repro.core.cas import DiskCAS
 from repro.core.journal import EventJournal
 from repro.fabric import (TERMINAL_STATUSES as _TERMINAL, FabricAPI,
-                          FabricHTTPServer, FabricService, RemoteAPI,
+                          FabricHTTPServer, FabricService, FollowerAPI,
+                          FollowerFabric, RemoteAPI,
                           RetentionPolicy, configured_admission,
                           configured_retention, load_operator_doc,
                           render_template, snapshot_fold, validate_spec)
@@ -197,6 +208,49 @@ def cmd_serve(api, args) -> int:
     return 0
 
 
+def cmd_follow(api, args) -> int:
+    """Serve a warm-standby follower: read-only HTTP over a tailed journal.
+
+    The follower bootstraps from the chain's snapshot, then a tail thread
+    parks on ``CAS.watch_ref`` and folds new segments as the primary
+    flushes them. ``promote`` (or ``POST /admin/promote``) fences the old
+    primary off the head ref and flips this same process read-write."""
+    cas = DiskCAS(args.journal)
+    retention = None
+    if _retention_overrides(args):      # pin: flags > doc > default
+        retention, _ = _resolve_retention(args, load_operator_doc(cas))
+    follower = FollowerFabric(cas, seed=args.seed, retention=retention)
+    stats = follower.catch_up()
+    fapi = FollowerAPI(follower)
+    server = FabricHTTPServer(fapi, host=args.host, port=args.port,
+                              auto_pump=False)
+    # a promoted follower is a live fabric: start driving the engine
+    fapi.on_promoted = lambda svc: server.enable_pump()
+
+    def _sigterm(signum, frame):
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGTERM, _sigterm)
+    print(f"follower listening on {server.url}", flush=True)
+    print(f"tailing {args.journal}: {len(follower.state.jobs)} jobs, "
+          f"head={stats['head']}", flush=True)
+    tail = threading.Thread(target=follower.tail_loop,
+                            args=(server._stop, server.lock), daemon=True)
+    tail.start()
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        server.stop()
+    return 0
+
+
+def cmd_promote(api, args) -> int:
+    """Promote a served follower to primary (fences the old primary)."""
+    code, payload = api.handle("POST", "/admin/promote", {})
+    _print(payload)
+    return 0 if code == 200 else 1
+
+
 def cmd_tail(api, args) -> int:
     """Follow a job's event feed: live over HTTP, or offline from a journal."""
     if args.journal and not args.url:
@@ -322,6 +376,20 @@ def main(argv: list[str] | None = None) -> int:
                         "prior history when one exists")
     serve_parser = p
 
+    p = sub.add_parser("follow",
+                       help="serve a warm-standby follower of a journaled "
+                            "fabric (read-only until promoted)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="0 picks a free port (printed at startup)")
+    p.add_argument("--journal", metavar="DIR", required=True,
+                   help="CAS directory holding the primary's journal")
+    follow_parser = p
+
+    sub.add_parser("promote",
+                   help="promote a served follower (--url) to primary; "
+                        "fences the old primary's journal appends")
+
     p = sub.add_parser("tail", help="follow a job's event feed")
     p.add_argument("job_id", nargs="?")
     p.add_argument("--since", type=int, default=-1,
@@ -351,7 +419,8 @@ def main(argv: list[str] | None = None) -> int:
 
     # retention flags: override the persisted operator document field-wise
     # (live flag > CAS document > default); negative count = unbounded
-    for p in (serve_parser, submit_parser, compact_parser, retention_parser):
+    for p in (serve_parser, submit_parser, compact_parser, retention_parser,
+              follow_parser):
         g = p.add_argument_group("retention")
         g.add_argument("--retention-jobs", type=int, metavar="N",
                        help="keep at most N terminal job records (<0: all)")
@@ -374,8 +443,11 @@ def main(argv: list[str] | None = None) -> int:
     if args.cmd in ("validate", "submit") and not (
             args.spec or args.template):
         ap.error(f"{args.cmd} requires a spec file or --template")
-    if args.cmd == "serve" and args.url:
-        ap.error("serve runs an in-process fabric; it cannot proxy --url")
+    if args.cmd in ("serve", "follow") and args.url:
+        ap.error(f"{args.cmd} runs an in-process fabric; it cannot proxy "
+                 "--url")
+    if args.cmd == "promote" and not args.url:
+        ap.error("promote drives a served follower: pass --url")
     if args.cmd in ("compact", "gc", "retention") and not (
             args.journal or args.url):
         ap.error(f"{args.cmd} needs --journal (offline) or --url (live)")
@@ -402,9 +474,14 @@ def main(argv: list[str] | None = None) -> int:
                   f"{stats['from_snapshot']} from snapshot)", flush=True)
         # write the effective config back so offline compact/restore agree
         svc._persist_operator_config()
+        if args.cmd == "serve":
+            # a long-lived writer claims the head ref (epoch bump): a prior
+            # owner — say this same service pre-crash, restarted elsewhere
+            # by a supervisor — is fenced from its next append on
+            journal.claim()
         api = FabricAPI(svc)
-    elif args.cmd in ("compact", "gc", "retention"):
-        api = None                      # offline: handled against the CAS
+    elif args.cmd in ("compact", "gc", "retention", "follow"):
+        api = None                      # handled against the CAS directly
     else:
         # no journal: nothing durable to compact, but in-memory retention
         # (job cap, feed window, index cap) still honors the flags
@@ -414,6 +491,7 @@ def main(argv: list[str] | None = None) -> int:
         api = FabricAPI(svc)
     return {"templates": cmd_templates, "validate": cmd_validate,
             "submit": cmd_submit, "demo": cmd_demo, "serve": cmd_serve,
+            "follow": cmd_follow, "promote": cmd_promote,
             "tail": cmd_tail, "compact": cmd_compact,
             "gc": cmd_gc, "retention": cmd_retention}[args.cmd](api, args)
 

@@ -14,18 +14,41 @@ Backends: in-memory dict (simulation / tests) and a directory on disk
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import pickle
 import re
 import threading
+import time
 from typing import Any, Iterable, Iterator
 
 from .identity import HASH_LEN, content_hash
 
+try:                        # inter-process ref fencing on DiskCAS (POSIX)
+    import fcntl
+except ImportError:         # pragma: no cover - non-POSIX fallback
+    fcntl = None
+
 
 class IntegrityError(RuntimeError):
     pass
+
+
+class RefFencedError(RuntimeError):
+    """A ``set_ref`` lost the fencing check: the stored epoch has moved past
+    the writer's. The canonical producer of this error is a *zombie primary*
+    — a fabric process that kept running after a follower promoted itself
+    (bumping the head ref's epoch) and then tried to append to the journal
+    it no longer owns. The write never lands; the chain stays consistent."""
+
+    def __init__(self, name: str, stored_epoch: int, epoch: int) -> None:
+        self.name = name
+        self.stored_epoch = stored_epoch
+        self.epoch = epoch
+        super().__init__(
+            f"ref {name!r}: fenced (stored epoch {stored_epoch}, "
+            f"writer epoch {epoch})")
 
 
 #: what a CAS key looks like in a decoded blob (see ``CAS.gc``)
@@ -59,7 +82,11 @@ class CAS:
     def __init__(self) -> None:
         self._blobs: dict[str, bytes] = {}
         self._refs: dict[str, str] = {}
+        self._ref_epochs: dict[str, int] = {}
         self._lock = threading.Lock()
+        #: ref watchers park here; ``set_ref`` notifies (callback-driven —
+        #: no polling for the in-memory backend)
+        self._ref_cond = threading.Condition(self._lock)
         self.puts = 0            # write attempts
         self.dedup_hits = 0      # writes skipped because content already present
         self.gets = 0
@@ -69,13 +96,74 @@ class CAS:
     # The one deliberately *mutable* cell per name in an otherwise immutable
     # store: a ref names the head of a hash-chained structure (e.g. the
     # event journal), and advancing it is the only non-idempotent write.
-    def set_ref(self, name: str, key: str) -> None:
+    # Each ref additionally carries a fencing **epoch** (default 0): a
+    # writer that presents an epoch older than the stored one is rejected
+    # with ``RefFencedError`` — the primitive warm-standby promotion uses to
+    # cut a zombie primary off the journal head (DESIGN.md §10).
+    @staticmethod
+    def _fence(name: str, stored_key: str | None, stored_epoch: int,
+               epoch: int | None, expect_epoch: int | None,
+               expect_key: str | None) -> int:
+        """Resolve the epoch a ``set_ref`` may write, or raise.
+
+        ``epoch=None`` is an unconditional write that preserves the stored
+        epoch (legacy refs: operator config, shadow journals). With
+        ``expect_epoch`` the write is a compare-and-set — stored epoch (and
+        ``expect_key`` when given) must match exactly; this is the promotion
+        takeover. Otherwise the append rule applies: the write lands only if
+        the stored epoch has not moved past the writer's."""
+        if epoch is None:
+            return stored_epoch
+        if expect_epoch is not None:
+            if stored_epoch != expect_epoch or (
+                    expect_key is not None and stored_key != expect_key):
+                raise RefFencedError(name, stored_epoch, epoch)
+        elif stored_epoch > epoch:
+            raise RefFencedError(name, stored_epoch, epoch)
+        return epoch
+
+    def set_ref(self, name: str, key: str, *, epoch: int | None = None,
+                expect_epoch: int | None = None,
+                expect_key: str | None = None) -> None:
         with self._lock:
+            self._ref_epochs[name] = self._fence(
+                name, self._refs.get(name), self._ref_epochs.get(name, 0),
+                epoch, expect_epoch, expect_key)
             self._refs[name] = key
+            self._ref_cond.notify_all()
 
     def get_ref(self, name: str) -> str | None:
         with self._lock:
             return self._refs.get(name)
+
+    def ref_entry(self, name: str) -> tuple[str | None, int]:
+        """One ref's ``(key, epoch)`` — epoch 0 when the ref is unset or was
+        only ever written by epoch-unaware callers."""
+        with self._lock:
+            return self._refs.get(name), self._ref_epochs.get(name, 0)
+
+    def watch_ref(self, name: str, since: str | None = None, *,
+                  timeout_s: float | None = None,
+                  poll_interval_s: float = 0.05) -> str | None:
+        """Block until ref ``name`` points somewhere other than ``since``;
+        returns the new key (or None on timeout). ``since=None`` waits for
+        the ref to exist at all. The in-memory backend wakes on the
+        ``set_ref`` notification (no polling); ``DiskCAS`` overrides with a
+        cross-process poll that stat-short-circuits unchanged files."""
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+        with self._ref_cond:
+            while True:
+                cur = self._refs.get(name)
+                if cur != since:
+                    return cur
+                if deadline is None:
+                    self._ref_cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._ref_cond.wait(remaining)
 
     def refs(self) -> dict[str, str]:
         """All named refs — the GC root set."""
@@ -213,25 +301,98 @@ class DiskCAS(CAS):
         return os.path.join(self.root, key[:2], key)
 
     # -- named refs (cross-process: survive restarts) ------------------------
+    # File format: the head key on line 1, the fencing epoch on line 2
+    # (legacy single-line files read as epoch 0). Fenced writes take a
+    # per-ref flock so read-check-write is atomic *across processes* — the
+    # promotion CAS and a zombie primary's append cannot interleave.
     def _ref_path(self, name: str) -> str:
         safe = name.replace("/", "_")
         return os.path.join(self.root, "refs", safe)
 
-    def set_ref(self, name: str, key: str) -> None:
+    @staticmethod
+    def _parse_ref(content: str) -> tuple[str | None, int]:
+        lines = content.split()
+        key = lines[0] if lines else None
+        try:
+            epoch = int(lines[1]) if len(lines) > 1 else 0
+        except ValueError:
+            epoch = 0
+        return key or None, epoch
+
+    @contextlib.contextmanager
+    def _ref_flock(self, name: str):
+        """Inter-process mutex for one ref's read-check-write cycle."""
+        lock_dir = os.path.join(self.root, "locks")
+        os.makedirs(lock_dir, exist_ok=True)
+        path = os.path.join(lock_dir, name.replace("/", "_"))
+        fd = os.open(path, os.O_CREAT | os.O_RDWR)
+        try:
+            if fcntl is not None:
+                fcntl.flock(fd, fcntl.LOCK_EX)
+            yield
+        finally:
+            if fcntl is not None:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+            os.close(fd)
+
+    def set_ref(self, name: str, key: str, *, epoch: int | None = None,
+                expect_epoch: int | None = None,
+                expect_key: str | None = None) -> None:
         path = self._ref_path(name)
-        with self._lock:
+        with self._lock, self._ref_flock(name):
             os.makedirs(os.path.dirname(path), exist_ok=True)
+            stored_key, stored_epoch = self._read_ref(path)
+            write_epoch = self._fence(name, stored_key, stored_epoch,
+                                      epoch, expect_epoch, expect_key)
             tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
             with open(tmp, "w") as f:
-                f.write(key)
+                f.write(f"{key}\n{write_epoch}\n")
             os.replace(tmp, path)       # atomic head advance
 
-    def get_ref(self, name: str) -> str | None:
+    @classmethod
+    def _read_ref(cls, path: str) -> tuple[str | None, int]:
         try:
-            with open(self._ref_path(name)) as f:
-                return f.read().strip() or None
+            with open(path) as f:
+                return cls._parse_ref(f.read())
         except FileNotFoundError:
-            return None
+            return None, 0
+
+    def get_ref(self, name: str) -> str | None:
+        return self._read_ref(self._ref_path(name))[0]
+
+    def ref_entry(self, name: str) -> tuple[str | None, int]:
+        return self._read_ref(self._ref_path(name))
+
+    def watch_ref(self, name: str, since: str | None = None, *,
+                  timeout_s: float | None = None,
+                  poll_interval_s: float = 0.05) -> str | None:
+        """Cross-process ref watch: poll the ref file, but only open and
+        parse it when its stat signature (mtime_ns, inode, size) moved — an
+        idle follower's watch loop costs one ``stat`` per interval, never a
+        read. ``os.replace`` guarantees every advance lands as a new inode,
+        so the signature cannot miss a change."""
+        path = self._ref_path(name)
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+        last_sig: tuple | None = ()       # sentinel: always read first pass
+        while True:
+            try:
+                st = os.stat(path)
+                sig = (st.st_mtime_ns, st.st_ino, st.st_size)
+            except FileNotFoundError:
+                sig = None
+            if sig != last_sig:
+                last_sig = sig
+                cur = self.get_ref(name)
+                if cur != since:
+                    return cur
+            wait = poll_interval_s
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                wait = min(wait, remaining)
+            time.sleep(wait)
 
     def refs(self) -> dict[str, str]:
         refs_dir = os.path.join(self.root, "refs")

@@ -58,10 +58,18 @@ class EventJournal:
     """Append-only, chained event log on top of a CAS."""
 
     def __init__(self, cas: CAS, *, batch_size: int = 256,
-                 ref: str = HEAD_REF) -> None:
+                 ref: str = HEAD_REF, epoch: int | None = None) -> None:
         self.cas = cas
         self.batch_size = max(1, batch_size)
         self.ref = ref
+        #: fencing epoch presented on every head advance (DESIGN.md §10):
+        #: adopted from the stored ref by default, so a process that owned
+        #: the journal keeps owning it across restarts — until a promotion
+        #: bumps the stored epoch, after which this journal's appends raise
+        #: ``RefFencedError`` (the zombie-primary cutoff)
+        if epoch is None:
+            key, epoch = cas.ref_entry(ref)
+        self.epoch = epoch
         self._buf: list[dict] = []
         self.segments_written = 0
         self.events_written = 0
@@ -73,6 +81,31 @@ class EventJournal:
         #: ``compact()`` resets them to the kept tail
         self.segments_since_compact = 0
         self.bytes_since_compact = 0
+
+    def claim(self) -> int:
+        """Take explicit ownership of the head ref: bump the stored epoch
+        (compare-and-set), fencing every other writer that held the journal
+        — including a dead primary a supervisor later restarts, which would
+        otherwise silently *re-adopt* the current epoch from the ref and
+        defeat the fence. Long-lived writers (``fabric_cli.py serve``,
+        promotion) claim at startup; read-only consumers and offline tools
+        never do.
+
+        The claim is always **durable**: on a chain with no head yet, an
+        empty root segment is published first so the epoch has an entry to
+        live in — two concurrent claimants of a fresh store therefore race
+        on the same compare-and-set and exactly one wins (an in-memory-only
+        claim would let both sides believe they own epoch 1)."""
+        key, stored = self.cas.ref_entry(self.ref)
+        if key is None:
+            root = self.cas.put({"prev": None, "events": []})
+            self.cas.set_ref(self.ref, root, epoch=stored + 1,
+                             expect_epoch=stored)
+        else:
+            self.cas.set_ref(self.ref, key, epoch=stored + 1,
+                             expect_epoch=stored, expect_key=key)
+        self.epoch = stored + 1
+        return self.epoch
 
     # ------------------------------------------------------------- write --
     def on_event(self, e: FabricEvent) -> None:
@@ -87,7 +120,9 @@ class EventJournal:
         if not self._buf:
             return None
         key = self.cas.put({"prev": self.head, "events": self._buf})
-        self.cas.set_ref(self.ref, key)     # blob first, then the head
+        # blob first, then the head; a fenced (post-promotion) writer dies
+        # here with the buffer intact and the chain untouched
+        self.cas.set_ref(self.ref, key, epoch=self.epoch)
         self.segments_written += 1
         self.events_written += len(self._buf)
         size = self.cas.size_of(key)
@@ -207,7 +242,8 @@ class EventJournal:
             head = self.cas.put({"prev": head,
                                  "events": self.cas.get(key)["events"]})
             tail_bytes += self.cas.size_of(head)
-        self.cas.set_ref(self.ref, head)    # single atomic head advance
+        # single atomic head advance (fenced like flush)
+        self.cas.set_ref(self.ref, head, epoch=self.epoch)
         self.compactions += 1
         # the un-folded tail is now exactly the kept segments
         self.segments_since_compact = len(keys) - cut

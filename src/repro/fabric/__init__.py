@@ -12,10 +12,13 @@
                  compaction + GC
 ``api``        — in-process request/response handler table (HTTP-shaped)
 ``http``       — socket server + urllib client over the same handler table
+``follower``   — warm-standby follower: snapshot bootstrap + journal
+                 tailing over the shared fold, epoch-fenced promotion
 """
 from .admission import (AdmissionController, QuotaExceeded, TenantQuota,
                         TenantUsage)
 from .api import FabricAPI
+from .follower import FollowerAPI, FollowerFabric
 from .http import FabricHTTPServer, RemoteAPI
 from .operator import (OPERATOR_REF, configured_admission,
                        configured_retention, load_operator_doc,
@@ -29,6 +32,7 @@ from .spec import (SpecError, compile_spec, default_resource_class,
 __all__ = [
     "AdmissionController", "QuotaExceeded", "TenantQuota", "TenantUsage",
     "FabricAPI", "FabricHTTPServer", "RemoteAPI", "FabricService",
+    "FollowerAPI", "FollowerFabric",
     "FEED_KINDS", "TRUNCATED_KIND", "JobRecord", "ReplayState",
     "RetentionPolicy", "snapshot_fold", "truncation_marker",
     "OPERATOR_REF", "configured_admission", "configured_retention",

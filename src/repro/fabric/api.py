@@ -22,6 +22,15 @@ Routes:
     POST /admin/compact              {"keep_segments": n?}  (409 w/o journal)
     POST /admin/gc                   reports reclaimed blobs/bytes
     GET  /admin/retention            effective policy + footprint + auto stats
+    PUT  /admin/retention            patch retention fields live (persisted
+                                     to the CAS operator document)
+    PUT  /tenants/{id}/quota         replace one tenant's quota (persisted)
+    GET  /admin/replication          role + journal head/epoch (a follower's
+                                     FollowerAPI overrides with lag stats)
+    POST /admin/promote              409 here; the follower surface promotes
+
+Writes against a warm-standby follower (``FollowerAPI``) answer 409 — the
+read-only surface flips to this full table only after promotion.
 
 The events feed is cursor-based: pass the ``cursor`` from the previous
 response as ``since`` to receive only newer events — no duplicates, no
@@ -29,9 +38,13 @@ gaps, suitable for long-polling (the HTTP shim adds ``wait_s``).
 """
 from __future__ import annotations
 
+import dataclasses
+
 from typing import Any, Callable
 from urllib.parse import parse_qsl, urlsplit
 
+from .admission import TenantQuota
+from .replay import RetentionPolicy
 from .service import FabricService
 from .spec import SpecError, list_templates
 
@@ -55,6 +68,10 @@ class FabricAPI:
             ("POST", ("admin", "compact"), self._compact),
             ("POST", ("admin", "gc"), self._gc),
             ("GET", ("admin", "retention"), self._retention),
+            ("PUT", ("admin", "retention"), self._put_retention),
+            ("PUT", ("tenants", "{id}", "quota"), self._put_quota),
+            ("GET", ("admin", "replication"), self._replication),
+            ("POST", ("admin", "promote"), self._promote),
         ]
 
     # ------------------------------------------------------------ routing --
@@ -81,6 +98,13 @@ class FabricAPI:
         parts = tuple(p for p in url.path.split("/") if p)
         query = dict(parse_qsl(url.query))
         method = method.upper()
+        if method != "GET" and getattr(self.service, "fenced", False):
+            # another process owns the journal now (DESIGN.md §10): reads
+            # may continue (stale but honest), writes must not be
+            # acknowledged — they could never be persisted or replicated
+            return 409, {"error": "fenced",
+                         "detail": ["another fabric took over this journal;"
+                                    " write to the current primary"]}
         matched_path = False
         for m, pattern, handler in self.routes:
             params = self._match(pattern, parts)
@@ -209,3 +233,78 @@ class FabricAPI:
 
     def _retention(self, params, query, body) -> tuple[int, Any]:
         return 200, self.service.retention_status()
+
+    # ----------------------------------------------- operator write surface --
+    def _put_retention(self, params, query, body) -> tuple[int, Any]:
+        """Patch retention fields over the effective policy — no restart:
+        the new policy applies to live state immediately and is persisted to
+        the CAS operator document, so offline tools, restores, and a tailing
+        follower all adopt it (DESIGN.md §9–§10)."""
+        names = {f.name for f in dataclasses.fields(RetentionPolicy)}
+        unknown = sorted(set(body) - names)
+        if unknown:
+            return 400, {"error": "invalid_body",
+                         "detail": [f"unknown retention field(s): {unknown}"]}
+        try:
+            policy = dataclasses.replace(self.service.retention_policy,
+                                         **body)
+        except (TypeError, ValueError) as e:
+            return 400, {"error": "invalid_retention", "detail": [str(e)]}
+        self.service.set_retention(policy)
+        return 200, self.service.retention_status()
+
+    @staticmethod
+    def _quota_errors(body: dict) -> list[str]:
+        """Value validation for PUT quota bodies. ``TenantQuota`` itself
+        does none, and a mistyped value (``"weight": "2"``) would pass
+        construction, persist to the operator document, and then crash
+        admission charging on every later submission *and* every restore —
+        a poisoned config must die here, at the request."""
+        errors = []
+        for k in ("max_inflight_ops", "max_active_workflows"):
+            v = body.get(k)
+            if v is not None and (isinstance(v, bool)
+                                  or not isinstance(v, int) or v < 0):
+                errors.append(f"{k!r} must be a non-negative integer or null")
+        v = body.get("budget_usd")
+        if v is not None and (isinstance(v, bool)
+                              or not isinstance(v, (int, float)) or v < 0):
+            errors.append("'budget_usd' must be a non-negative number "
+                          "or null")
+        if "weight" in body:
+            v = body["weight"]
+            if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                    or v <= 0:
+                errors.append("'weight' must be a positive number")
+        return errors
+
+    def _put_quota(self, params, query, body) -> tuple[int, Any]:
+        """Replace one tenant's quota; written through to the CAS operator
+        document like ``set_quota`` always was."""
+        names = {f.name for f in dataclasses.fields(TenantQuota)}
+        unknown = sorted(set(body) - names)
+        if unknown:
+            return 400, {"error": "invalid_body",
+                         "detail": [f"unknown quota field(s): {unknown}"]}
+        errors = self._quota_errors(body)
+        if errors:
+            return 400, {"error": "invalid_quota", "detail": errors}
+        quota = TenantQuota(**body)
+        self.service.set_quota(params["id"], quota)
+        return 200, {"tenant": params["id"],
+                     "quota": dataclasses.asdict(quota)}
+
+    # ----------------------------------------------------------- replication --
+    def _replication(self, params, query, body) -> tuple[int, Any]:
+        """This surface is a primary; a follower's ``FollowerAPI`` override
+        reports tail lag instead."""
+        out: dict[str, Any] = {"role": "primary"}
+        j = self.service.journal
+        if j is not None:
+            key, epoch = j.cas.ref_entry(j.ref)
+            out["journal"] = {"ref": j.ref, "head": key, "epoch": epoch,
+                              "pending": j.pending}
+        return 200, out
+
+    def _promote(self, params, query, body) -> tuple[int, Any]:
+        return 409, {"error": "already_primary"}

@@ -21,12 +21,15 @@ fabric from another process.
 from __future__ import annotations
 
 import json
+import sys
 import threading
 import time
 import urllib.error
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qsl, urlsplit
+
+from repro.core.cas import RefFencedError
 
 from .api import FabricAPI
 from .service import TERMINAL_STATUSES as _TERMINAL
@@ -63,11 +66,23 @@ class FabricHTTPServer:
         svc = self.api.service
         while not self._stop.is_set():
             with self.lock:
-                stepped = svc.pump(max_steps=self.pump_steps)
-                if stepped == 0 and getattr(svc, "journal", None) is not None \
-                        and svc.journal.pending:
-                    svc.journal.flush()    # idle point: make history durable
-                    svc.maybe_retain()     # the flush may tip the thresholds
+                try:
+                    stepped = svc.pump(max_steps=self.pump_steps)
+                    if stepped == 0 \
+                            and getattr(svc, "journal", None) is not None \
+                            and svc.journal.pending:
+                        svc.journal.flush()   # idle: make history durable
+                        svc.maybe_retain()    # flush may tip the thresholds
+                except RefFencedError as e:
+                    # another process took over the journal head (promotion
+                    # or a newer claim): this fabric no longer owns its
+                    # history — stop persisting, and flip the API surface
+                    # so writes are refused instead of acknowledged into
+                    # a void (a 201 from a zombie is lost work)
+                    svc.fenced = True
+                    print(f"journal fenced off; pump stopped: {e}",
+                          file=sys.stderr, flush=True)
+                    return
             if stepped == 0:        # idle or stalled: back off, don't spin
                 self._stop.wait(self.pump_interval_s)
 
@@ -76,6 +91,14 @@ class FabricHTTPServer:
             self._pump_thread = threading.Thread(target=self._pump_loop,
                                                  daemon=True)
             self._pump_thread.start()
+
+    def enable_pump(self) -> None:
+        """Begin auto-pumping mid-flight — a served warm-standby follower
+        that just promoted itself read-write needs the engine driven from
+        now on (before promotion there is nothing to pump)."""
+        if self._pump_thread is None or not self._pump_thread.is_alive():
+            self.auto_pump = True
+            self._start_pump()
 
     def start(self) -> "FabricHTTPServer":
         """Run the server (and pump) in daemon threads; returns self."""
@@ -106,7 +129,14 @@ class FabricHTTPServer:
         svc = self.api.service
         if getattr(svc, "journal", None) is not None:
             with self.lock:
-                svc.journal.flush()    # clean shutdown loses nothing
+                try:
+                    svc.journal.flush()    # clean shutdown loses nothing
+                except RefFencedError as e:
+                    # fenced mid-shutdown: the buffered tail belongs to a
+                    # history this process no longer owns
+                    svc.fenced = True
+                    print(f"journal fenced off; shutdown flush dropped: {e}",
+                          file=sys.stderr, flush=True)
 
     def __enter__(self) -> "FabricHTTPServer":
         return self.start()
@@ -180,6 +210,9 @@ class FabricHTTPServer:
 
             def do_POST(self) -> None:
                 self._dispatch("POST")
+
+            def do_PUT(self) -> None:
+                self._dispatch("PUT")
 
             def do_DELETE(self) -> None:
                 self._dispatch("DELETE")

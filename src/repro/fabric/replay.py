@@ -296,6 +296,19 @@ class ReplayState:
             self.feeds.pop(old, None)
             self.feed_trunc.pop(old, None)
 
+    def set_retention(self, retention: RetentionPolicy) -> None:
+        """Swap the fold's policy mid-stream and re-enforce it on the state
+        already folded (a live-reconfigured primary writes the new policy to
+        the operator document; a tailing follower adopts it here). Every
+        trim is "keep the newest N", so tightening now equals having folded
+        under the tighter policy all along."""
+        self.retention = retention
+        for jid in list(self.feeds):
+            window_feed(self.feeds, self.feed_trunc, jid,
+                        retention.feed_window)
+        self._enforce_terminal_cap()
+        trim_result_index(self.result_index, retention.max_result_index)
+
     # -------------------------------------------------------- snapshotting --
     def to_blob(self) -> dict:
         """Serialize the fold as the journal's snapshot node payload."""

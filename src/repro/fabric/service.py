@@ -113,11 +113,32 @@ class FabricService:
             self.engine.bus.subscribe(journal.on_event)
         self.auto_compactions = 0
         self.last_retention: dict | None = None
+        #: set when another process takes over this service's journal head
+        #: (RefFencedError observed): the API layer refuses writes from
+        #: then on — a zombie primary must not acknowledge work it can
+        #: neither persist nor (with its pump stopped) run
+        self.fenced = False
         self._ref_dev = DEVICE_CLASSES["h100-nvl-94g"]
 
     # ------------------------------------------------------------ tenants --
     def set_quota(self, tenant: str, quota: TenantQuota) -> None:
         self.admission.set_quota(tenant, quota)
+        self._persist_operator_config()
+
+    def set_retention(self, policy: RetentionPolicy, *,
+                      source: str = "api") -> None:
+        """Adopt a new retention policy live (``PUT /admin/retention``):
+        re-enforce it on existing state immediately — window feeds, evict
+        terminal records and index entries beyond the new caps ("keep the
+        newest N" composes, so this equals having run under the policy all
+        along) — and persist it to the CAS operator document so offline
+        tools, restores, and a tailing follower agree without a restart."""
+        self.retention_policy = policy
+        self.retention_source = source
+        for jid in list(self._feeds):
+            window_feed(self._feeds, self._feed_trunc, jid,
+                        policy.feed_window)
+        self._evict_terminal()
         self._persist_operator_config()
 
     def _persist_operator_config(self) -> None:

@@ -82,9 +82,9 @@ class CrashingCAS:
         self._boundary("put")
         return self.inner.publish(data)
 
-    def set_ref(self, name, key):
+    def set_ref(self, name, key, **kw):
         self._boundary("set_ref")
-        return self.inner.set_ref(name, key)
+        return self.inner.set_ref(name, key, **kw)
 
     # -- transparent reads (dunders bypass __getattr__) ----------------------
     def __contains__(self, key):
@@ -104,7 +104,7 @@ def clone_cas(cas) -> CAS:
     for key in cas.keys():
         out._blobs[key] = cas.get_bytes(key)
     for name, key in cas.refs().items():
-        out.set_ref(name, key)
+        out.set_ref(name, key, epoch=cas.ref_entry(name)[1])
     return out
 
 

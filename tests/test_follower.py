@@ -1,0 +1,513 @@
+"""Warm-standby follower fabric: ref-watch, tailing, fencing, promotion.
+
+The contract under test (DESIGN.md §10):
+
+  * a follower tailing the primary's journal equals a fresh
+    ``restore_from_journal`` of the same chain at **every segment
+    boundary** — including across primary-side compaction (rewritten tail
+    segments fold idempotently by bus seq) and scheduled retention firing
+    mid-tail (snapshot v2 re-bootstrap + ``feed_truncated`` markers
+    surfaced through the follower's cursors);
+  * promotion is an atomic epoch-bumping compare-and-set on the head ref:
+    after it, a zombie primary's appends raise ``RefFencedError`` and the
+    chain stays exactly where the promotion left it;
+  * a crash at any write boundary of the promotion swap leaves the old
+    entry intact, and a retry converges.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core import events as E
+from repro.core.cas import CAS, DiskCAS, RefFencedError
+from repro.core.journal import HEAD_REF, EventJournal
+from repro.fabric import (FabricAPI, FollowerAPI, FollowerFabric,
+                          RetentionPolicy, TenantQuota)
+
+from harness import (Crash, CrashingCAS, build_service, dual_service,
+                     observe, restore_fresh, run_schedule, spec_doc,
+                     assert_cursor_contract)
+
+
+# ---------------------------------------------------------------------------
+# ref entries, fencing, watch_ref
+# ---------------------------------------------------------------------------
+class TestRefPrimitives:
+    @pytest.fixture(params=["memory", "disk"])
+    def cas(self, request, tmp_path):
+        if request.param == "memory":
+            return CAS()
+        return DiskCAS(str(tmp_path / "cas"))
+
+    def test_ref_entry_round_trip(self, cas):
+        assert cas.ref_entry("r") == (None, 0)
+        cas.set_ref("r", "a" * 20)
+        assert cas.ref_entry("r") == ("a" * 20, 0)
+        cas.set_ref("r", "b" * 20, epoch=3)
+        assert cas.ref_entry("r") == ("b" * 20, 3)
+        # epoch-less write preserves the stored epoch (legacy callers)
+        cas.set_ref("r", "c" * 20)
+        assert cas.ref_entry("r") == ("c" * 20, 3)
+
+    def test_append_fencing(self, cas):
+        cas.set_ref("r", "a" * 20, epoch=2)
+        cas.set_ref("r", "b" * 20, epoch=2)      # same epoch appends freely
+        with pytest.raises(RefFencedError):
+            cas.set_ref("r", "c" * 20, epoch=1)  # stale writer refused
+        assert cas.get_ref("r") == "b" * 20
+
+    def test_compare_and_set(self, cas):
+        cas.set_ref("r", "a" * 20, epoch=1)
+        with pytest.raises(RefFencedError):      # wrong expected epoch
+            cas.set_ref("r", "a" * 20, epoch=2, expect_epoch=0)
+        with pytest.raises(RefFencedError):      # wrong expected key
+            cas.set_ref("r", "b" * 20, epoch=2, expect_epoch=1,
+                        expect_key="x" * 20)
+        cas.set_ref("r", "a" * 20, epoch=2, expect_epoch=1,
+                    expect_key="a" * 20)
+        assert cas.ref_entry("r") == ("a" * 20, 2)
+
+    def test_watch_ref_immediate_and_timeout(self, cas):
+        assert cas.watch_ref("r", since=None, timeout_s=0.05,
+                             poll_interval_s=0.01) is None
+        cas.set_ref("r", "a" * 20)
+        # already-different returns without blocking
+        assert cas.watch_ref("r", since=None, timeout_s=5) == "a" * 20
+        assert cas.watch_ref("r", since="zzz", timeout_s=5) == "a" * 20
+        # unchanged: times out
+        assert cas.watch_ref("r", since="a" * 20, timeout_s=0.05,
+                             poll_interval_s=0.01) is None
+
+    def test_watch_ref_wakes_on_advance(self, cas):
+        cas.set_ref("r", "a" * 20)
+        got = []
+        t = threading.Thread(target=lambda: got.append(
+            cas.watch_ref("r", since="a" * 20, timeout_s=5,
+                          poll_interval_s=0.01)))
+        t.start()
+        time.sleep(0.05)
+        cas.set_ref("r", "b" * 20)
+        t.join(timeout=5)
+        assert got == ["b" * 20]
+
+    def test_legacy_single_line_ref_reads_epoch_zero(self, tmp_path):
+        cas = DiskCAS(str(tmp_path / "cas"))
+        cas.set_ref("legacy", "a" * 20)
+        with open(cas._ref_path("legacy"), "w") as f:
+            f.write("d" * 20)                    # pre-epoch file format
+        assert cas.ref_entry("legacy") == ("d" * 20, 0)
+
+    def test_cross_instance_watch(self, tmp_path):
+        """Two DiskCAS objects on one dir = the dual-process topology."""
+        a = DiskCAS(str(tmp_path / "cas"))
+        b = DiskCAS(str(tmp_path / "cas"))
+        a.set_ref("r", "a" * 20, epoch=1)
+        assert b.ref_entry("r") == ("a" * 20, 1)
+        got = []
+        t = threading.Thread(target=lambda: got.append(
+            b.watch_ref("r", since="a" * 20, timeout_s=5,
+                        poll_interval_s=0.01)))
+        t.start()
+        time.sleep(0.05)
+        a.set_ref("r", "b" * 20, epoch=1)
+        t.join(timeout=5)
+        assert got == ["b" * 20]
+        # and b's stale write is fenced by a's epoch bump
+        a.set_ref("r", "b" * 20, epoch=2, expect_epoch=1)
+        with pytest.raises(RefFencedError):
+            b.set_ref("r", "c" * 20, epoch=1)
+
+
+# ---------------------------------------------------------------------------
+# journal epoch plumbing
+# ---------------------------------------------------------------------------
+class TestJournalEpoch:
+    def test_journal_adopts_stored_epoch(self):
+        cas = CAS()
+        j = EventJournal(cas, batch_size=1)
+        assert j.epoch == 0
+        j.on_event(E.WorkflowSubmitted(time=0.0, dag_id="d", tenant="t"))
+        cas.set_ref(HEAD_REF, cas.get_ref(HEAD_REF), epoch=4,
+                    expect_epoch=0)
+        assert EventJournal(cas).epoch == 4
+
+    def test_stale_epoch_flush_fenced(self):
+        cas = CAS()
+        j = EventJournal(cas, batch_size=1)
+        j.on_event(E.WorkflowSubmitted(time=0.0, dag_id="d", tenant="t"))
+        head = cas.get_ref(HEAD_REF)
+        cas.set_ref(HEAD_REF, head, epoch=1, expect_epoch=0)
+        zombie = EventJournal(cas, batch_size=1, epoch=0)
+        with pytest.raises(RefFencedError):
+            zombie.on_event(E.WorkflowSubmitted(time=1.0, dag_id="z",
+                                                tenant="t"))
+        assert cas.get_ref(HEAD_REF) == head     # chain untouched
+        # the current-epoch owner keeps appending
+        current = EventJournal(cas, batch_size=1)
+        current.on_event(E.WorkflowSubmitted(time=2.0, dag_id="k",
+                                             tenant="t"))
+        assert cas.get_ref(HEAD_REF) != head
+
+    def test_claim_fences_prior_owner(self):
+        """Ownership is an explicit epoch bump, not ref adoption — so a
+        supervisor-restarted copy of a fenced primary cannot silently
+        regain write access by re-reading the current epoch."""
+        cas = CAS()
+        j1 = EventJournal(cas, batch_size=1)
+        assert j1.claim() == 1
+        j1.on_event(E.WorkflowSubmitted(time=0.0, dag_id="a", tenant="t"))
+        j2 = EventJournal(cas, batch_size=1)
+        assert j2.epoch == 1                 # adoption alone is read-grade
+        assert j2.claim() == 2               # ...ownership is the bump
+        j2.on_event(E.WorkflowSubmitted(time=1.0, dag_id="b", tenant="t"))
+        with pytest.raises(RefFencedError):
+            j1.on_event(E.WorkflowSubmitted(time=2.0, dag_id="c",
+                                            tenant="t"))
+
+
+# ---------------------------------------------------------------------------
+# follower tailing ≡ restore, at every segment boundary
+# ---------------------------------------------------------------------------
+SCHEDULE = [("submit", 0, 0), ("pump", 8), ("submit", 1, 0), ("drain",),
+            ("submit", 2, 1), ("submit", 0, 2), ("pump", 20), ("cancel", 2),
+            ("drain",), ("compact", 1), ("submit", 1, 3), ("drain",)]
+
+
+def _event_sourced_projection(svc) -> dict:
+    """What a follower can (and must) reproduce of a live primary: per-job
+    feeds and per-tenant usage accounting — engine-local meters (pool
+    stats, latency percentiles) are process state, not replicated state."""
+    tenants = sorted({r.tenant for r in svc.jobs.values()})
+
+    def usage(t):
+        return {k: v for k, v in svc.usage(t).items()
+                if k not in ("pool", "latency")}
+
+    return {
+        "feeds": {jid: {k: v for k, v in svc.events(jid).items()
+                        if k != "status"}
+                  for jid in sorted(svc.jobs)},
+        "usage": {t: usage(t) for t in tenants},
+    }
+
+
+class TestFollowerTailing:
+    def test_equivalence_at_every_segment_boundary(self, tmp_path):
+        """Dual-process topology on disk: the primary's FabricService writes
+        through one DiskCAS instance, the follower tails a *separate*
+        DiskCAS instance over the same directory. After every schedule step
+        (journal flushed => segment boundary) the follower reproduces the
+        primary's event-sourced state — feeds, usage accounting, terminal
+        job views — and at every quiescent boundary (drain) it additionally
+        equals a fresh ``restore_from_journal`` byte for byte. (Mid-flight
+        the two legally differ: restore interrupts live jobs, a follower
+        keeps them open — they are still running on the primary.)"""
+        primary_cas = DiskCAS(str(tmp_path / "cas"))
+        svc = build_service(primary_cas, batch_size=3)
+        follower = FollowerFabric(DiskCAS(str(tmp_path / "cas")),
+                                  batch_size=3)
+        quiescent = 0
+        for step in SCHEDULE:
+            run_schedule(svc, [step])
+            svc.journal.flush()              # a durable segment boundary
+            follower.catch_up()
+            assert _event_sourced_projection(follower.view) == \
+                _event_sourced_projection(svc), f"diverged after {step}"
+            for jid, rec in svc.jobs.items():
+                primary_view = svc.job(jid)
+                if primary_view["status"] in ("completed", "cancelled",
+                                              "rejected"):
+                    assert follower.view.job(jid) == primary_view, step
+                else:                        # live on the primary
+                    assert follower.view.job(jid)["status"] == "queued"
+            if step == ("drain",):
+                quiescent += 1
+                assert observe(follower.view) == observe(
+                    restore_fresh(primary_cas)), f"diverged after {step}"
+        assert quiescent == 3
+        status = follower.replication_status()
+        assert status["caught_up"] is True
+        assert status["lag"] == {"segments": 0, "bytes": 0, "events": 0}
+
+    def test_lag_reporting(self):
+        cas = CAS()
+        svc = build_service(cas, batch_size=3)
+        follower = FollowerFabric(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        follower.catch_up()
+        caught = follower.replication_status()
+        assert caught["caught_up"] and caught["lag"]["events"] == 0
+        run_schedule(svc, [("submit", 1, 1), ("drain",)])
+        behind = follower.replication_status()
+        assert not behind["caught_up"]
+        assert behind["lag"]["segments"] > 0
+        assert behind["lag"]["bytes"] > 0
+        assert behind["lag"]["events"] > 0
+        follower.catch_up()
+        assert follower.replication_status()["lag"]["events"] == 0
+
+    def test_rebootstrap_after_primary_compacts_past_follower(self):
+        """A compaction cut beyond the follower's position forces a snapshot
+        re-bootstrap; state still equals a fresh restore."""
+        cas = CAS()
+        svc = build_service(cas, batch_size=3)
+        follower = FollowerFabric(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        follower.catch_up()
+        run_schedule(svc, [("submit", 1, 1), ("submit", 2, 2), ("drain",)])
+        svc.compact(keep_segments=0)         # folds events follower lacks
+        out = follower.catch_up()
+        assert out["bootstrapped"] is True
+        assert follower.bootstraps == 1
+        assert observe(follower.view) == observe(restore_fresh(cas))
+
+    def test_retention_firing_on_primary_mid_tail(self):
+        """Scheduled retention (auto compact + gc) fires on the primary
+        while the follower is behind: the follower comes back through the
+        v2 snapshot, applies its own windows, and its cursors surface the
+        ``feed_truncated`` markers — never silent loss (checked against the
+        uncompacted shadow's ground-truth feeds)."""
+        retention = RetentionPolicy(feed_window=4, compact_every_segments=4,
+                                    keep_segments=1)
+        svc, shadow = dual_service(batch_size=3, retention=retention)
+        cas = svc.journal.cas
+        follower = FollowerFabric(cas, retention=retention, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        follower.catch_up()
+        # primary keeps going: enough history that maybe_retain fires
+        run_schedule(svc, [("submit", 1, 1), ("submit", 2, 2), ("drain",),
+                           ("submit", 0, 3), ("submit", 1, 0), ("drain",)])
+        assert svc.auto_compactions > 0      # retention really fired
+        shadow.flush()
+        follower.catch_up()
+        assert observe(follower.view) == observe(
+            restore_fresh(cas, retention=retention))
+        # ground truth: the untrimmed shadow feeds
+        full = restore_fresh(cas, ref="shadow-head")
+        truncated = 0
+        for jid in follower.view.jobs:
+            resp = follower.view.events(jid, since=-1)
+            assert_cursor_contract(resp, full._feeds.get(jid, []), -1)
+            truncated += bool(resp.get("truncated"))
+        assert truncated > 0                 # windows actually truncated
+
+    def test_follower_adopts_operator_doc_changes(self):
+        """Quota + retention written through by the primary (the operator
+        API path) are live-adopted by an unpinned follower on catch-up."""
+        cas = CAS()
+        svc = build_service(cas, batch_size=3)
+        follower = FollowerFabric(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        follower.catch_up()
+        svc.set_quota("newco", TenantQuota(weight=7.0))
+        svc.set_retention(RetentionPolicy(feed_window=2))
+        follower.catch_up()
+        assert follower.admission.quotas["newco"].weight == 7.0
+        assert follower.retention.feed_window == 2
+        for feed in follower.state.feeds.values():
+            assert len(feed) <= 2
+
+    def test_config_propagates_without_journal_traffic(self):
+        """Operator-config writes move their own ref, not the journal head;
+        the reload path the tail loop runs on idle wake-ups must adopt them
+        even when no segment ever flushes."""
+        cas = CAS()
+        svc = build_service(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        follower = FollowerFabric(cas, batch_size=3)
+        follower.catch_up()
+        head = cas.get_ref(HEAD_REF)
+        svc.set_retention(RetentionPolicy(feed_window=1))  # no append
+        assert cas.get_ref(HEAD_REF) == head
+        assert follower._maybe_reload_config() is True
+        follower._sync_view()
+        assert follower.retention.feed_window == 1
+        assert follower.view.retention_policy.feed_window == 1
+        for feed in follower.state.feeds.values():
+            assert len(feed) <= 1
+        assert follower._maybe_reload_config() is False    # idempotent
+
+
+# ---------------------------------------------------------------------------
+# promotion
+# ---------------------------------------------------------------------------
+class TestPromotion:
+    def _primary_with_history(self, cas):
+        svc = build_service(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("submit", 1, 1), ("drain",),
+                           ("submit", 2, 2), ("drain",)])
+        return svc
+
+    def test_promote_after_kill_serves_same_state(self, tmp_path):
+        primary_cas = DiskCAS(str(tmp_path / "cas"))
+        svc = self._primary_with_history(primary_cas)
+        pre_kill = observe(svc)
+        pre_usage = {t: svc.admission.usage_snapshot(t)
+                     for t in ("acme", "globex", "initech")}
+        del svc                              # the kill (journal is drained)
+        follower = FollowerFabric(DiskCAS(str(tmp_path / "cas")),
+                                  batch_size=3)
+        follower.catch_up()
+        promoted = follower.promote()
+        assert promoted.journal.epoch == 1
+        assert primary_cas.ref_entry(HEAD_REF)[1] == 1
+        post = observe(promoted)
+        # engine-local meters (pool stats, latency percentiles) die with the
+        # old process; everything event-sourced must match exactly
+        for jid, view in pre_kill["jobs"].items():
+            assert post["jobs"][jid] == view
+        assert post["lineage"] == pre_kill["lineage"]
+        assert post["feeds"] == pre_kill["feeds"]
+        for t, u in pre_usage.items():
+            assert promoted.admission.usage_snapshot(t) == u
+        # read-write: new work runs and journals under the new epoch
+        job = promoted.submit(spec_doc("acme", "after-promote"))
+        promoted.run_until_idle()
+        assert promoted.job(job["job_id"])["status"] == "completed"
+
+    def test_promote_interrupts_in_flight_work(self):
+        """Jobs live at the moment of the kill close out through the
+        existing interrupt-on-restart path on the promoted fabric."""
+        cas = CAS()
+        svc = build_service(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("pump", 4)])
+        svc.journal.flush()                  # mid-flight durable history
+        follower = FollowerFabric(cas, batch_size=3)
+        promoted = follower.promote()
+        [rec] = promoted.jobs.values()
+        assert rec.cancelled and rec.error == "interrupted by fabric restart"
+
+    def test_zombie_primary_is_fenced(self):
+        cas = CAS()
+        svc = self._primary_with_history(cas)
+        follower = FollowerFabric(cas, batch_size=3)
+        promoted = follower.promote()
+        head = cas.get_ref(HEAD_REF)
+        with pytest.raises(RefFencedError):  # zombie flush refused
+            run_schedule(svc, [("submit", 0, 3), ("drain",)])
+        assert cas.get_ref(HEAD_REF) == head
+        with pytest.raises(RefFencedError):  # zombie compaction refused too
+            svc.compact(keep_segments=0)
+        assert cas.get_ref(HEAD_REF) == head
+        # the promoted primary still owns the chain
+        promoted.submit(spec_doc("globex", "post-fence"))
+        promoted.run_until_idle()
+        assert cas.get_ref(HEAD_REF) != head
+        assert cas.ref_entry(HEAD_REF)[1] == 1
+
+    def test_promote_on_empty_journal_still_takes_an_epoch(self):
+        """No head to swap yet, but the promoted journal must carry epoch 1
+        so an epoch-0 writer loses as soon as the chain materializes."""
+        cas = CAS()
+        follower = FollowerFabric(cas, batch_size=3)
+        promoted = follower.promote()
+        assert promoted.journal.epoch == 1
+        promoted.submit(spec_doc("acme", "first"))
+        promoted.run_until_idle()
+        assert cas.ref_entry(HEAD_REF)[1] == 1
+        stale = EventJournal(cas, batch_size=1, epoch=0)
+        with pytest.raises(RefFencedError):
+            stale.on_event(E.WorkflowSubmitted(time=0.0, dag_id="z",
+                                               tenant="t"))
+
+    def test_promote_is_idempotent(self):
+        cas = CAS()
+        self._primary_with_history(cas)
+        follower = FollowerFabric(cas, batch_size=3)
+        promoted = follower.promote()
+        assert follower.promote() is promoted
+
+    def test_promotion_crash_matrix(self):
+        """Kill the promotion at every put/set_ref boundary of the swap:
+        before the fence lands the old entry must be fully intact (the
+        zombie primary is still the owner); wherever it dies, a retry
+        converges to a promoted state equal to a fresh restore."""
+        for op, after in (("set_ref", 0), ("set_ref", 1), ("put", 0)):
+            inner = CAS()
+            svc = self._primary_with_history(inner)
+            pre_entry = inner.ref_entry(HEAD_REF)
+            proxy = CrashingCAS(inner)
+            follower = FollowerFabric(proxy, batch_size=3)
+            follower.catch_up()
+            proxy.arm(op, after)
+            with pytest.raises(Crash):
+                follower.promote()
+            assert follower.promoted is None
+            if (op, after) == ("set_ref", 0):
+                # died before the fence: ownership never moved
+                assert inner.ref_entry(HEAD_REF) == pre_entry
+                run_schedule(svc, [("submit", 0, 3), ("drain",)])  # still ok
+            else:
+                # died after the fence: the zombie is already cut off
+                assert inner.ref_entry(HEAD_REF)[1] == pre_entry[1] + 1
+                with pytest.raises(RefFencedError):
+                    run_schedule(svc, [("submit", 0, 3), ("drain",)])
+            proxy.disarm()
+            promoted = follower.promote()    # the retry
+            assert promoted.journal.epoch >= 1
+            assert observe(promoted) == observe(restore_fresh(inner)), \
+                (op, after)
+
+
+# ---------------------------------------------------------------------------
+# the follower HTTP surface (in-process handler table)
+# ---------------------------------------------------------------------------
+class TestFollowerAPI:
+    def _pair(self, cas=None):
+        cas = cas if cas is not None else CAS()
+        svc = build_service(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        follower = FollowerFabric(cas, batch_size=3)
+        follower.catch_up()
+        return svc, follower, FollowerAPI(follower)
+
+    def test_reads_served_writes_409(self):
+        svc, follower, api = self._pair()
+        code, jobs = api.handle("GET", "/jobs")
+        assert code == 200 and len(jobs["jobs"]) == 1
+        jid = jobs["jobs"][0]["job_id"]
+        code, job = api.handle("GET", f"/jobs/{jid}")
+        assert code == 200 and job == svc.job(jid)
+        code, feed = api.handle("GET", f"/jobs/{jid}/events?since=-1")
+        assert code == 200 and feed["events"]
+        code, repl = api.handle("GET", "/admin/replication")
+        assert code == 200 and repl["role"] == "follower"
+        for method, path in (("POST", "/workflows"),
+                             ("POST", f"/jobs/{jid}/cancel"),
+                             ("POST", "/admin/compact"),
+                             ("PUT", "/admin/retention"),
+                             ("PUT", "/tenants/acme/quota"),
+                             ("POST", "/pump")):
+            code, err = api.handle(method, path, {})
+            assert code == 409 and err["error"] == "read_only_follower", path
+
+    def test_promote_flips_read_write(self):
+        svc, follower, api = self._pair()
+        promoted_cb = []
+        api.on_promoted = promoted_cb.append
+        code, out = api.handle("POST", "/admin/promote", {})
+        assert code == 200 and out["promoted"] and out["epoch"] == 1
+        assert promoted_cb == [follower.promoted]
+        code, repl = api.handle("GET", "/admin/replication")
+        assert code == 200 and repl["role"] == "primary"
+        assert repl["journal"]["epoch"] == 1
+        code, job = api.handle("POST", "/workflows", {
+            "spec": spec_doc("acme", "rw")})
+        assert code == 201, job
+        code, out2 = api.handle("POST", "/admin/promote", {})
+        assert code == 409 and out2["error"] == "already_primary"
+        # operator API now writes through (was 409 pre-promote)
+        code, ret = api.handle("PUT", "/admin/retention", {"feed_window": 8})
+        assert code == 200 and ret["policy"]["feed_window"] == 8
+
+    def test_primary_api_replication_and_promote(self):
+        cas = CAS()
+        svc = build_service(cas, batch_size=3)
+        api = FabricAPI(svc)
+        code, repl = api.handle("GET", "/admin/replication")
+        assert code == 200 and repl["role"] == "primary"
+        code, err = api.handle("POST", "/admin/promote", {})
+        assert code == 409 and err["error"] == "already_primary"
