@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Fabric control-plane throughput: the BENCH trajectory (ROADMAP).
+
+Drives one journaled ``FabricService`` end-to-end — submit → admit →
+ready → dispatch → batch → complete — under wall-clock timing, then
+replays the journal into a fresh service, and emits ``BENCH_fabric.json``
+with the control path's scoreboard:
+
+  * ``jobs_per_s``          — workflows driven to terminal per wall second;
+  * ``events_per_s``        — bus events published per wall second (the
+    whole subscriber fan-out: feeds, trace fold, metrics, journal);
+  * ``journal_append_per_s``— events journaled per second of time spent in
+    ``EventJournal.on_event`` (from the metrics histogram, so the number
+    is exactly what ``GET /metrics`` reports);
+  * ``replay_events_per_s`` — journal replay throughput (restore path);
+  * ``pump_p50_s`` / ``pump_p95_s`` — pump-iteration latency quantiles,
+    straight from the ``fabric_pump_seconds`` histogram.
+
+Deterministic workload per seed (virtual-time simulator); wall-clock
+numbers vary with the host, which is the point — this file is the perf
+baseline PR 7's hot-path work is measured against. Run by ci.sh as a
+timed, non-gating stage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core.cas import CAS
+from repro.core.journal import EventJournal
+from repro.fabric import FabricService, RetentionPolicy
+
+DEVICES = ("h100-nvl-94g", "rtx4090-48g", "rtx4090-24g")
+TENANTS = ("acme", "globex", "initech")
+
+
+def spec(tenant: str, tag: str) -> dict:
+    return {
+        "tenant": tenant,
+        "ops": [
+            {"name": "gen", "op_type": "generate",
+             "model_id": "llama-3.2-1b", "inputs": [f"prompt:{tag}"],
+             "tokens_in": 256, "tokens_out": 64},
+            {"name": "score", "op_type": "score", "model_id": "reward-1b",
+             "inputs": [{"ref": "gen"}], "tokens_in": 256, "tokens_out": 8},
+        ],
+    }
+
+
+def run(n_jobs: int, *, seed: int = 0, pump_steps: int = 64) -> dict:
+    cas = CAS()
+    journal = EventJournal(cas, batch_size=64)
+    svc = FabricService(seed=seed, cas=cas, journal=journal,
+                        device_classes=DEVICES,
+                        retention=RetentionPolicy())
+    bus = svc.engine.bus
+
+    t0 = time.perf_counter()
+    for i in range(n_jobs):
+        # tags repeat across tenants => the dedup/batch paths stay hot,
+        # like the fabric the paper measures
+        svc.submit(spec(TENANTS[i % len(TENANTS)], f"t{i % 16}"))
+        svc.pump(max_steps=pump_steps)
+    svc.run_until_idle()
+    drive_s = time.perf_counter() - t0
+    events = bus._next
+
+    t0 = time.perf_counter()
+    restored = FabricService(seed=seed, cas=cas,
+                             journal=EventJournal(cas, batch_size=64),
+                             device_classes=DEVICES)
+    stats = restored.restore_from_journal()
+    replay_s = time.perf_counter() - t0
+
+    m = svc.metrics
+    append = m.get("fabric_journal_append_seconds")
+    pump = m.get("fabric_pump_seconds")
+
+    def per_s(count: int, seconds: float) -> float:
+        return round(count / seconds, 1) if seconds > 0 else 0.0
+
+    append_count = append.count() if append is not None else 0
+    append_sum = append.sum() if append is not None else 0.0
+    out = {
+        "bench": "fabric_throughput",
+        "n_jobs": n_jobs,
+        "seed": seed,
+        "wall_s": round(drive_s, 3),
+        "jobs_per_s": per_s(n_jobs, drive_s),
+        "events": events,
+        "events_per_s": per_s(events, drive_s),
+        "journal": {
+            "events_appended": append_count,
+            "append_wall_s": round(append_sum, 4),
+            "journal_append_per_s": per_s(append_count, append_sum),
+            "segments": journal.segments_written,
+            "bytes": journal.bytes_flushed,
+        },
+        "replay": {
+            "events": stats["events"],
+            "jobs": stats["jobs"],
+            "wall_s": round(replay_s, 3),
+            "replay_events_per_s": per_s(stats["events"], replay_s),
+        },
+        "pump": {
+            "iterations": pump.count() if pump is not None else 0,
+            "pump_p50_s": pump.quantile(0.50) if pump is not None else 0.0,
+            "pump_p95_s": pump.quantile(0.95) if pump is not None else 0.0,
+        },
+    }
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=300,
+                    help="workflows to drive end-to-end")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_fabric.json",
+                    help="where to write the JSON scoreboard")
+    args = ap.parse_args(argv)
+    result = run(args.jobs, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"BENCH_fabric: {result['jobs_per_s']} jobs/s, "
+          f"{result['events_per_s']} events/s, "
+          f"replay {result['replay']['replay_events_per_s']} events/s, "
+          f"pump p95 {result['pump']['pump_p95_s']}s -> {args.out}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

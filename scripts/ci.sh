@@ -13,8 +13,15 @@
 #   compaction   DiskCAS journal fold + GC reclamation proof
 #   failover     serve -> follow -> kill -9 -> promote; byte-equal /jobs,
 #                zombie append fenced
+#   bench        fabric_throughput.py scoreboard -> BENCH_fabric.json
+#                (timed but non-gating: a slow host must not fail CI)
 #   hygiene      git tree still clean (nothing generated into the repo)
+#
+# On any gating-stage failure the trap snapshots GET /metrics and the
+# trace JSON of failed jobs from every server the run started, into
+# $ARTIFACTS, and keeps the directory even when it was a mktemp one.
 set -euo pipefail
+set -o errtrace
 cd "$(dirname "$0")/.."
 
 if [ -n "${CI_ARTIFACTS_DIR:-}" ]; then
@@ -29,6 +36,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export PYTHONUNBUFFERED=1
 
 PIDS_TO_KILL=()
+SERVER_URLS=()
+CURRENT_STAGE=""
 cleanup() {
     for pid in "${PIDS_TO_KILL[@]:-}"; do
         kill "$pid" 2>/dev/null || true
@@ -39,9 +48,49 @@ cleanup() {
 }
 trap cleanup EXIT
 
+# snapshot the observability plane of every live server before dying:
+# the /metrics exposition plus the span trees of any failed jobs are
+# exactly what a post-mortem needs and they vanish with the processes
+on_failure() {
+    local status=$?
+    trap - ERR
+    echo "stage ${CURRENT_STAGE:-?} FAILED (exit $status)" >&2
+    ARTIFACTS_EPHEMERAL=0       # keep the evidence even from a mktemp dir
+    for url in "${SERVER_URLS[@]:-}"; do
+        [ -n "$url" ] || continue
+        python - "$url" "$ARTIFACTS" >&2 <<'PY' || true
+import json, sys
+from repro.fabric import RemoteAPI
+url, outdir = sys.argv[1:3]
+port = url.rstrip("/").rsplit(":", 1)[-1]
+api = RemoteAPI(url, timeout_s=10)
+code, text = api.handle("GET", "/metrics")
+if code == 200:
+    with open(f"{outdir}/metrics-{port}.txt", "w") as f:
+        f.write(text)
+code, jobs = api.handle("GET", "/jobs")
+if code != 200:
+    raise SystemExit(0)
+bad = [j for j in jobs.get("jobs", [])
+       if j.get("status") not in ("completed", "running", "admitted")]
+for j in bad[:8]:
+    code, tr = api.handle("GET", f"/jobs/{j['job_id']}/trace")
+    if code == 200:
+        with open(f"{outdir}/trace-{port}-{j['job_id']}.json", "w") as f:
+            json.dump(tr, f, indent=2, sort_keys=True)
+print(f"captured /metrics{' + %d traces' % len(bad[:8]) if bad else ''} "
+      f"from {url}")
+PY
+    done
+    echo "failure artifacts kept in $ARTIFACTS" >&2
+    exit "$status"
+}
+trap on_failure ERR
+
 STAGE_REPORT=()
 stage() {
     local name="$1"; shift
+    CURRENT_STAGE="$name"
     echo
     echo "== stage: $name =="
     local t0=$SECONDS
@@ -118,6 +167,7 @@ stage_failover() {
     PIDS_TO_KILL+=("$primary_pid")
     local purl
     purl=$(wait_for_url "$ARTIFACTS/primary.log")
+    SERVER_URLS+=("$purl")
     echo "primary up at $purl"
 
     python scripts/fabric_cli.py follow --port 0 --journal "$dir/cas" \
@@ -126,6 +176,7 @@ stage_failover() {
     PIDS_TO_KILL+=("$follower_pid")
     local furl
     furl=$(wait_for_url "$ARTIFACTS/follower.log")
+    SERVER_URLS+=("$furl")
     echo "follower up at $furl"
 
     python - "$purl" "$furl" "$dir" <<'PY'
@@ -229,6 +280,17 @@ PY
     wait "$follower_pid" 2>/dev/null || true
 }
 
+stage_bench() {
+    # the BENCH trajectory (ROADMAP): end-to-end control-plane throughput,
+    # written to $ARTIFACTS so the tree stays clean. Timed but NON-GATING —
+    # perf numbers from a loaded CI host must not fail the build.
+    if ! python benchmarks/fabric_throughput.py \
+            --jobs "${BENCH_JOBS:-300}" \
+            --out "$ARTIFACTS/BENCH_fabric.json"; then
+        echo "bench failed (non-gating; see output above)" >&2
+    fi
+}
+
 stage_hygiene() {
     # nothing above may have dirtied the checkout (generated files belong
     # in $ARTIFACTS; bytecode is gitignored)
@@ -247,6 +309,7 @@ stage smokes stage_smokes
 stage soak-quick stage_soak_quick
 stage compaction stage_compaction
 stage failover stage_failover
+stage bench stage_bench
 stage hygiene stage_hygiene
 
 echo

@@ -48,12 +48,31 @@ against a fabric started by ``serve``.
         --journal /tmp/fabric-cas
     PYTHONPATH=src python scripts/fabric_cli.py --url http://127.0.0.1:8124 \
         promote
+
+    # observability (DESIGN.md §11): one workflow's replay-derived span
+    # tree (add --chrome for an about://tracing trace_event file), and the
+    # wall-clock Prometheus exposition
+    PYTHONPATH=src python scripts/fabric_cli.py --url http://127.0.0.1:8123 \
+        trace <job_id>
+    PYTHONPATH=src python scripts/fabric_cli.py trace <job_id> \
+        --journal /tmp/fabric-cas --chrome > job.trace.json
+    PYTHONPATH=src python scripts/fabric_cli.py --url http://127.0.0.1:8123 \
+        metrics
+
+    # admin auth: started with a token, mutating /admin/* and the quota
+    # write require it (reads and /metrics stay open); clients send the
+    # same flag (or FABRIC_ADMIN_TOKEN in the environment for both sides)
+    PYTHONPATH=src python scripts/fabric_cli.py serve --port 8123 \
+        --journal /tmp/fabric-cas --admin-token s3cret
+    PYTHONPATH=src python scripts/fabric_cli.py --url http://127.0.0.1:8123 \
+        --admin-token s3cret compact
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import signal
 import sys
 import threading
@@ -221,7 +240,7 @@ def cmd_follow(api, args) -> int:
         retention, _ = _resolve_retention(args, load_operator_doc(cas))
     follower = FollowerFabric(cas, seed=args.seed, retention=retention)
     stats = follower.catch_up()
-    fapi = FollowerAPI(follower)
+    fapi = FollowerAPI(follower, admin_token=args.admin_token)
     server = FabricHTTPServer(fapi, host=args.host, port=args.port,
                               auto_pump=False)
     # a promoted follower is a live fabric: start driving the engine
@@ -287,6 +306,42 @@ def cmd_tail(api, args) -> int:
             return 0
 
 
+def cmd_trace(api, args) -> int:
+    """One workflow's span tree (or Chrome trace_event export): live over
+    HTTP, or offline by restoring the journal — both derive the spans from
+    the same event stream, so the documents are identical (DESIGN.md §11)."""
+    path = f"/jobs/{args.job_id}/trace"
+    if args.chrome:
+        path += "?format=chrome"
+    if not args.url:
+        cas = DiskCAS(args.journal)
+        journal = EventJournal(cas)
+        if journal.head is None:
+            print("empty journal (no head ref)", file=sys.stderr)
+            return 1
+        doc = load_operator_doc(cas)
+        retention, _ = _resolve_retention(args, doc)
+        svc = FabricService(seed=args.seed, cas=cas, journal=journal,
+                            retention=retention)
+        configured_admission(doc, svc.admission)
+        svc.restore_from_journal()
+        api = FabricAPI(svc)
+    code, payload = api.handle("GET", path)
+    _print(payload)
+    return 0 if code == 200 else 1
+
+
+def cmd_metrics(api, args) -> int:
+    """Dump the fabric's Prometheus exposition (``GET /metrics``)."""
+    code, payload = api.handle("GET", "/metrics")
+    if code != 200:
+        print(f"HTTP {code}", file=sys.stderr)
+        _print(payload)
+        return 1
+    print(payload, end="" if str(payload).endswith("\n") else "\n")
+    return 0
+
+
 def cmd_compact(api, args) -> int:
     """Fold old journal segments into a snapshot node (retention)."""
     if args.url:
@@ -346,6 +401,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--url", help="drive a remote fabric (from `serve`) "
                                   "instead of an in-process one")
+    ap.add_argument("--admin-token", metavar="TOKEN",
+                    default=os.environ.get("FABRIC_ADMIN_TOKEN"),
+                    help="bearer token for mutating /admin/* and quota "
+                         "routes: `serve`/`follow` require it from "
+                         "clients, client commands send it (default: "
+                         "$FABRIC_ADMIN_TOKEN; unset = open)")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     sub.add_parser("templates", help="list workflow templates")
@@ -374,6 +435,11 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--journal", metavar="DIR",
                    help="CAS directory for the event journal; restores "
                         "prior history when one exists")
+    p.add_argument("--admin-token", metavar="TOKEN", dest="admin_token",
+                   default=argparse.SUPPRESS,
+                   help="require this bearer token on mutating /admin/* "
+                        "and quota routes (also honored before the "
+                        "subcommand; unset = open)")
     serve_parser = p
 
     p = sub.add_parser("follow",
@@ -384,6 +450,11 @@ def main(argv: list[str] | None = None) -> int:
                    help="0 picks a free port (printed at startup)")
     p.add_argument("--journal", metavar="DIR", required=True,
                    help="CAS directory holding the primary's journal")
+    p.add_argument("--admin-token", metavar="TOKEN", dest="admin_token",
+                   default=argparse.SUPPRESS,
+                   help="require this bearer token on mutating /admin/* "
+                        "and quota routes once promoted (and on promote "
+                        "itself; unset = open)")
     follow_parser = p
 
     sub.add_parser("promote",
@@ -396,6 +467,21 @@ def main(argv: list[str] | None = None) -> int:
                    help="resume cursor (default: from the beginning)")
     p.add_argument("--journal", metavar="DIR",
                    help="offline: replay events from this CAS directory")
+
+    p = sub.add_parser("trace",
+                       help="one workflow's replay-derived span tree "
+                            "(--chrome: trace_event JSON for "
+                            "about://tracing)")
+    p.add_argument("job_id")
+    p.add_argument("--chrome", action="store_true",
+                   help="emit Chrome trace_event JSON instead of the tree")
+    p.add_argument("--journal", metavar="DIR",
+                   help="offline: restore this CAS directory's journal "
+                        "and derive the trace from it")
+
+    sub.add_parser("metrics",
+                   help="dump the Prometheus text exposition "
+                        "(GET /metrics; needs --url)")
 
     p = sub.add_parser("compact",
                        help="fold old journal segments into a snapshot")
@@ -448,12 +534,14 @@ def main(argv: list[str] | None = None) -> int:
                  "--url")
     if args.cmd == "promote" and not args.url:
         ap.error("promote drives a served follower: pass --url")
-    if args.cmd in ("compact", "gc", "retention") and not (
+    if args.cmd in ("compact", "gc", "retention", "trace") and not (
             args.journal or args.url):
         ap.error(f"{args.cmd} needs --journal (offline) or --url (live)")
+    if args.cmd == "metrics" and not args.url:
+        ap.error("metrics reads a served fabric: pass --url")
 
     if args.url:
-        api = RemoteAPI(args.url)
+        api = RemoteAPI(args.url, token=args.admin_token)
     elif args.cmd in ("serve", "submit") and getattr(args, "journal", None):
         cas = DiskCAS(args.journal)     # artifacts + journal share one store
         journal = EventJournal(cas)
@@ -479,8 +567,8 @@ def main(argv: list[str] | None = None) -> int:
             # owner — say this same service pre-crash, restarted elsewhere
             # by a supervisor — is fenced from its next append on
             journal.claim()
-        api = FabricAPI(svc)
-    elif args.cmd in ("compact", "gc", "retention", "follow"):
+        api = FabricAPI(svc, admin_token=args.admin_token)
+    elif args.cmd in ("compact", "gc", "retention", "follow", "trace"):
         api = None                      # handled against the CAS directly
     else:
         # no journal: nothing durable to compact, but in-memory retention
@@ -488,11 +576,12 @@ def main(argv: list[str] | None = None) -> int:
         retention, source = _resolve_retention(args, None)
         svc = FabricService(seed=args.seed, retention=retention)
         svc.retention_source = source
-        api = FabricAPI(svc)
+        api = FabricAPI(svc, admin_token=args.admin_token)
     return {"templates": cmd_templates, "validate": cmd_validate,
             "submit": cmd_submit, "demo": cmd_demo, "serve": cmd_serve,
             "follow": cmd_follow, "promote": cmd_promote,
-            "tail": cmd_tail, "compact": cmd_compact,
+            "tail": cmd_tail, "trace": cmd_trace, "metrics": cmd_metrics,
+            "compact": cmd_compact,
             "gc": cmd_gc, "retention": cmd_retention}[args.cmd](api, args)
 
 

@@ -41,6 +41,19 @@ from .events import FabricEvent, event_from_dict
 HEAD_REF = "journal-head"
 
 
+class _NullTimer:
+    """Stand-in for ``Histogram.time()`` when no registry is attached."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+_NULL_TIMER = _NullTimer()
+
+
 class SnapshotFold(Protocol):
     """What ``compact()`` needs from a fold: apply events, serialize state.
 
@@ -81,6 +94,16 @@ class EventJournal:
         #: ``compact()`` resets them to the kept tail
         self.segments_since_compact = 0
         self.bytes_since_compact = 0
+        #: optional ``MetricsRegistry`` (attached by the owning service):
+        #: when set, append/flush/compact and the underlying CAS put are
+        #: timed — the journal itself stays dependency-free
+        self.metrics = None
+
+    def _timer(self, name: str, help_text: str):
+        """A wall-clock probe, or a no-op when no registry is attached."""
+        if self.metrics is None:
+            return _NULL_TIMER
+        return self.metrics.histogram(name, help_text).time()
 
     def claim(self) -> int:
         """Take explicit ownership of the head ref: bump the stored epoch
@@ -110,19 +133,26 @@ class EventJournal:
     # ------------------------------------------------------------- write --
     def on_event(self, e: FabricEvent) -> None:
         """Bus subscriber: buffer the event; flush a full batch."""
-        self._buf.append(e.to_dict())
-        if len(self._buf) >= self.batch_size:
-            self.flush()
+        with self._timer("fabric_journal_append_seconds",
+                         "Wall-clock cost of journaling one event "
+                         "(buffer append, amortized flush)"):
+            self._buf.append(e.to_dict())
+            if len(self._buf) >= self.batch_size:
+                self.flush()
 
     def flush(self) -> str | None:
         """Persist buffered events as one chained segment; returns its key
         (None when the buffer was empty)."""
         if not self._buf:
             return None
-        key = self.cas.put({"prev": self.head, "events": self._buf})
-        # blob first, then the head; a fenced (post-promotion) writer dies
-        # here with the buffer intact and the chain untouched
-        self.cas.set_ref(self.ref, key, epoch=self.epoch)
+        with self._timer("fabric_journal_flush_seconds",
+                         "Wall-clock duration of one segment flush"):
+            with self._timer("fabric_cas_put_seconds",
+                             "Wall-clock duration of one CAS put"):
+                key = self.cas.put({"prev": self.head, "events": self._buf})
+            # blob first, then the head; a fenced (post-promotion) writer
+            # dies here with the buffer intact and the chain untouched
+            self.cas.set_ref(self.ref, key, epoch=self.epoch)
         self.segments_written += 1
         self.events_written += len(self._buf)
         size = self.cas.size_of(key)
@@ -218,6 +248,11 @@ class EventJournal:
         chain intact (orphans at worst, reclaimed by ``CAS.gc``).
         """
         self.flush()
+        with self._timer("fabric_journal_compact_seconds",
+                         "Wall-clock duration of one compaction"):
+            return self._compact_locked(fold_factory, keep_segments)
+
+    def _compact_locked(self, fold_factory, keep_segments: int) -> dict:
         keys = self._segment_keys()
         base: dict | None = None
         if keys and "snapshot" in (root := self.cas.get(keys[0])):

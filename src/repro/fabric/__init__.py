@@ -14,7 +14,15 @@
 ``http``       — socket server + urllib client over the same handler table
 ``follower``   — warm-standby follower: snapshot bootstrap + journal
                  tailing over the shared fold, epoch-fenced promotion
+
+Observability (DESIGN.md §11) lives in core and is re-exported here:
+``repro.core.tracing.TraceState`` (replay-derived span trees + dedup
+edges) and ``repro.core.metrics.MetricsRegistry`` (wall-clock counters /
+gauges / histograms behind ``GET /metrics``).
 """
+from repro.core.metrics import MetricsRegistry
+from repro.core.tracing import TRACE_TRUNCATED_KIND, TraceState
+
 from .admission import (AdmissionController, QuotaExceeded, TenantQuota,
                         TenantUsage)
 from .api import FabricAPI
@@ -35,6 +43,7 @@ __all__ = [
     "FollowerAPI", "FollowerFabric",
     "FEED_KINDS", "TRUNCATED_KIND", "JobRecord", "ReplayState",
     "RetentionPolicy", "snapshot_fold", "truncation_marker",
+    "MetricsRegistry", "TraceState", "TRACE_TRUNCATED_KIND",
     "OPERATOR_REF", "configured_admission", "configured_retention",
     "load_operator_doc", "save_operator_config",
     "JobStatus", "TERMINAL_STATUSES", "SpecError", "compile_spec",

@@ -11,12 +11,15 @@ Routes:
                                       "params": {...}}
     GET  /workflows/templates
     GET  /jobs                       ?tenant=<id>
-    GET  /jobs/{id}
+    GET  /jobs/{id}                  (410 {"status": "archived"} once
+                                      retention has evicted the record)
     GET  /jobs/{id}/events           ?since=<cursor>&limit=<n>
     GET  /jobs/{id}/lineage
+    GET  /jobs/{id}/trace            ?format=chrome for trace_event JSON
     POST /jobs/{id}/cancel
     GET  /tenants/{id}/usage
     GET  /health
+    GET  /metrics                    Prometheus text (always open)
     POST /pump                       {"max_steps": n?, "until": t?}
     POST /drain                      {"until": t?}   (run_until_idle)
     POST /admin/compact              {"keep_segments": n?}  (409 w/o journal)
@@ -32,6 +35,12 @@ Routes:
 Writes against a warm-standby follower (``FollowerAPI``) answer 409 — the
 read-only surface flips to this full table only after promotion.
 
+With an ``admin_token`` configured, mutating ``/admin/*`` routes and
+``PUT /tenants/{id}/quota`` require ``Authorization: Bearer <token>`` and
+answer 401 without it; every read-only route (and ``/metrics``) stays
+open. No token configured = the surface stays open, so single-operator
+setups and the CI failover pipeline keep working unchanged.
+
 The events feed is cursor-based: pass the ``cursor`` from the previous
 response as ``since`` to receive only newer events — no duplicates, no
 gaps, suitable for long-polling (the HTTP shim adds ``wait_s``).
@@ -39,6 +48,7 @@ gaps, suitable for long-polling (the HTTP shim adds ``wait_s``).
 from __future__ import annotations
 
 import dataclasses
+import hmac
 
 from typing import Any, Callable
 from urllib.parse import parse_qsl, urlsplit
@@ -50,8 +60,12 @@ from .spec import SpecError, list_templates
 
 
 class FabricAPI:
-    def __init__(self, service: FabricService) -> None:
+    def __init__(self, service: FabricService, *,
+                 admin_token: str | None = None) -> None:
         self.service = service
+        #: static bearer token guarding the operator write surface; None
+        #: (the default) leaves it open — auth is opt-in (DESIGN.md §11)
+        self.admin_token = admin_token
         #: (METHOD, pattern) -> handler(params, query, body)
         self.routes: list[tuple[str, tuple[str, ...], Callable]] = [
             ("POST", ("workflows",), self._post_workflow),
@@ -60,9 +74,11 @@ class FabricAPI:
             ("GET", ("jobs", "{id}"), self._get_job),
             ("GET", ("jobs", "{id}", "events"), self._get_events),
             ("GET", ("jobs", "{id}", "lineage"), self._get_lineage),
+            ("GET", ("jobs", "{id}", "trace"), self._get_trace),
             ("POST", ("jobs", "{id}", "cancel"), self._cancel_job),
             ("GET", ("tenants", "{id}", "usage"), self._get_usage),
             ("GET", ("health",), self._get_health),
+            ("GET", ("metrics",), self._get_metrics),
             ("POST", ("pump",), self._pump),
             ("POST", ("drain",), self._drain),
             ("POST", ("admin", "compact"), self._compact),
@@ -88,9 +104,30 @@ class FabricAPI:
                 return None
         return params
 
-    def handle(self, method: str, path: str,
-               body: dict | None = None) -> tuple[int, Any]:
-        """Dispatch one request; returns ``(status_code, payload)``."""
+    @staticmethod
+    def _admin_route(method: str, pattern: tuple[str, ...]) -> bool:
+        """Mutating operator routes: everything under ``/admin/*`` plus the
+        quota write. Read-only admin GETs stay open — observability must
+        not need credentials (DESIGN.md §11)."""
+        if method == "GET":
+            return False
+        return (pattern[:1] == ("admin",)
+                or pattern == ("tenants", "{id}", "quota"))
+
+    def _authorized(self, headers: dict | None) -> bool:
+        if self.admin_token is None:
+            return True
+        auth = next((v for k, v in (headers or {}).items()
+                     if k.lower() == "authorization"), "")
+        scheme, _, token = auth.partition(" ")
+        return (scheme.lower() == "bearer"
+                and hmac.compare_digest(token.strip(), self.admin_token))
+
+    def handle(self, method: str, path: str, body: dict | None = None,
+               headers: dict | None = None) -> tuple[int, Any]:
+        """Dispatch one request; returns ``(status_code, payload)``.
+        Payloads are JSON-shaped dicts except ``/metrics``, which returns
+        the Prometheus exposition as a plain string."""
         if body is not None and not isinstance(body, dict):
             return 400, {"error": "invalid_body",
                          "detail": ["request body must be an object"]}
@@ -113,6 +150,11 @@ class FabricAPI:
             matched_path = True
             if m != method:
                 continue
+            if self._admin_route(m, pattern) \
+                    and not self._authorized(headers):
+                return 401, {"error": "unauthorized",
+                             "detail": ["admin routes require "
+                                        "'Authorization: Bearer <token>'"]}
             try:
                 return handler(params, query, body or {})
             except SpecError as e:
@@ -152,11 +194,40 @@ class FabricAPI:
     def _list_jobs(self, params, query, body) -> tuple[int, Any]:
         return 200, {"jobs": self.service.list_jobs(query.get("tenant"))}
 
+    def _archived(self, job_id: str) -> tuple[int, Any] | None:
+        """410 Gone stub for retention-evicted jobs: the record is gone,
+        but its tombstone proves the id existed — provenance degrades
+        instead of disappearing into a 404."""
+        entry = getattr(self.service, "archived", {}).get(job_id)
+        if entry is None:
+            return None
+        return 410, {"status": "archived", "job_id": job_id,
+                     "tenant": entry["tenant"],
+                     "detail": ["record evicted by the retention policy; "
+                                "full history may survive in the journal"]}
+
     def _get_job(self, params, query, body) -> tuple[int, Any]:
         job = self.service.job(params["id"])
         if job is None:
-            return 404, {"error": "no_such_job", "job_id": params["id"]}
+            return (self._archived(params["id"])
+                    or (404, {"error": "no_such_job",
+                              "job_id": params["id"]}))
         return 200, job
+
+    def _get_trace(self, params, query, body) -> tuple[int, Any]:
+        chrome = query.get("format") == "chrome"
+        trace = self.service.trace(params["id"], chrome=chrome)
+        if trace is None:
+            return (self._archived(params["id"])
+                    or (404, {"error": "no_such_job",
+                              "job_id": params["id"]}))
+        return 200, (trace if not chrome
+                     else {"traceEvents": trace, "displayTimeUnit": "ms"})
+
+    def _get_metrics(self, params, query, body) -> tuple[int, Any]:
+        """The Prometheus exposition — a plain string payload; the HTTP
+        shim serves it as ``text/plain; version=0.0.4``."""
+        return 200, self.service.metrics.render()
 
     def _get_events(self, params, query, body) -> tuple[int, Any]:
         try:
@@ -170,13 +241,17 @@ class FabricAPI:
                          "detail": ["'limit' must be positive"]}
         feed = self.service.events(params["id"], since=since, limit=limit)
         if feed is None:
-            return 404, {"error": "no_such_job", "job_id": params["id"]}
+            return (self._archived(params["id"])
+                    or (404, {"error": "no_such_job",
+                              "job_id": params["id"]}))
         return 200, feed
 
     def _get_lineage(self, params, query, body) -> tuple[int, Any]:
         lin = self.service.lineage(params["id"])
         if lin is None:
-            return 404, {"error": "no_such_job", "job_id": params["id"]}
+            return (self._archived(params["id"])
+                    or (404, {"error": "no_such_job",
+                              "job_id": params["id"]}))
         return 200, {"job_id": params["id"], "lineage": lin}
 
     def _cancel_job(self, params, query, body) -> tuple[int, Any]:

@@ -79,6 +79,27 @@ class FollowerFabric:
             "device_classes": device_classes}
         self.view = FabricService(seed=seed, admission=self.admission,
                                   cas=cas, retention=retention, **kwargs)
+        #: the view's registry doubles as the follower's — GET /metrics on
+        #: a FollowerAPI serves replication lag next to the service gauges
+        self.metrics = self.view.metrics
+        self._m_lag_segments = self.metrics.gauge(
+            "fabric_replication_lag_segments",
+            "Chain segments behind the head at the last look")
+        self._m_lag_bytes = self.metrics.gauge(
+            "fabric_replication_lag_bytes",
+            "Chain bytes behind the head at the last look")
+        self._m_lag_events = self.metrics.gauge(
+            "fabric_replication_lag_events",
+            "Events behind the head at the last look")
+        self._m_catch_ups = self.metrics.counter(
+            "fabric_replication_catch_ups_total",
+            "Tail catch-up passes run")
+        self._m_events_applied = self.metrics.counter(
+            "fabric_replication_events_applied_total",
+            "Events folded from the tail")
+        self._m_bootstraps = self.metrics.counter(
+            "fabric_replication_bootstraps_total",
+            "Snapshot re-bootstraps (the primary compacted past us)")
         self._sync_view()
 
     # ------------------------------------------------------------- tailing --
@@ -94,6 +115,8 @@ class FollowerFabric:
         svc._feed_trunc = self.state.feed_trunc
         svc._terminal_order = self.state.terminal
         svc._terminal_seen = self.state._terminal_set
+        svc._trace = self.state.trace
+        svc.archived = self.state.archived
         # same filter restore applies: only artifacts still in the CAS —
         # but incrementally: entries that survived the previous sync are
         # trusted, so one catch-up stats only the *new* entries instead of
@@ -134,7 +157,9 @@ class FollowerFabric:
         wholesale (trimmed load ≡ trimmed replay, DESIGN.md §9)."""
         self._maybe_reload_config()
         self.catch_ups += 1
+        self._m_catch_ups.inc()
         head, _, segs, snapshot = self._unseen_chain()
+        self._observe_lag(segs, snapshot)
         out = {"head": head, "segments": 0, "events": 0,
                "bootstrapped": False}
         if snapshot is not None and snapshot["max_seq"] > self.state.max_seq:
@@ -144,6 +169,7 @@ class FollowerFabric:
                                      retention=self.retention)
             self.state.load(snapshot)
             self.bootstraps += 1
+            self._m_bootstraps.inc()
             out["bootstrapped"] = True
         for _key, blob, _size in segs:
             for d in blob["events"]:
@@ -157,8 +183,27 @@ class FollowerFabric:
         self._applied_head = head
         self.events_applied += out["events"]
         self.segments_applied += out["segments"]
+        self._m_events_applied.inc(out["events"])
         self._sync_view()
+        # the pass consumed everything it measured: the steady-state lag
+        # served by GET /metrics is zero until the head moves again
+        self._observe_lag((), None)
         return out
+
+    def _lag(self, segs, snapshot) -> tuple[int, int, int]:
+        """(segments, bytes, events) behind the head, from one
+        ``_unseen_chain`` measurement."""
+        lag_events = sum(1 for _k, blob, _s in segs for d in blob["events"]
+                         if d["seq"] > self.state.max_seq)
+        if snapshot is not None:
+            lag_events += max(0, snapshot["events"] - self.state.events)
+        return (len(segs), sum(size for _k, _b, size in segs), lag_events)
+
+    def _observe_lag(self, segs, snapshot) -> None:
+        lag_segments, lag_bytes, lag_events = self._lag(segs, snapshot)
+        self._m_lag_segments.set(lag_segments)
+        self._m_lag_bytes.set(lag_bytes)
+        self._m_lag_events.set(lag_events)
 
     def _unseen_chain(self) -> tuple:
         """``(head, epoch, segments, snapshot)`` for the chain suffix we
@@ -220,12 +265,8 @@ class FollowerFabric:
         exact for tail segments (counted by seq) and best-effort across a
         snapshot cut (difference of cumulative fold counters)."""
         head, epoch, segs, snapshot = self._unseen_chain()
-        lag_segments = len(segs)
-        lag_bytes = sum(size for _k, _b, size in segs)
-        lag_events = sum(1 for _k, blob, _s in segs for d in blob["events"]
-                         if d["seq"] > self.state.max_seq)
-        if snapshot is not None:
-            lag_events += max(0, snapshot["events"] - self.state.events)
+        self._observe_lag(segs, snapshot)
+        lag_segments, lag_bytes, lag_events = self._lag(segs, snapshot)
         return {
             "role": "follower",
             "ref": self.ref,
@@ -308,23 +349,23 @@ class FollowerAPI(FabricAPI):
     table)."""
 
     def __init__(self, follower: FollowerFabric, *,
-                 on_promoted=None) -> None:
-        super().__init__(follower.view)
+                 on_promoted=None, admin_token: str | None = None) -> None:
+        super().__init__(follower.view, admin_token=admin_token)
         self.follower = follower
         self.read_only = True
         #: callback run with the promoted service (the CLI uses it to start
         #: the HTTP server's auto-pump thread)
         self.on_promoted = on_promoted
 
-    def handle(self, method: str, path: str,
-               body: dict | None = None) -> tuple[int, object]:
+    def handle(self, method: str, path: str, body: dict | None = None,
+               headers: dict | None = None) -> tuple[int, object]:
         if self.read_only and method.upper() != "GET" \
                 and not path.split("?", 1)[0].rstrip("/").endswith(
                     "/admin/promote"):
             return 409, {"error": "read_only_follower",
                          "detail": ["this fabric is a warm standby; promote "
                                     "it or write to the primary"]}
-        return super().handle(method, path, body)
+        return super().handle(method, path, body, headers)
 
     def _replication(self, params, query, body) -> tuple[int, object]:
         if not self.read_only:

@@ -145,11 +145,19 @@ class FabricHTTPServer:
         self.stop()
 
     # ------------------------------------------------------------ handler --
-    def _handle_locked(self, method: str, path: str, body):
+    def _handle_locked(self, method: str, path: str, body, headers=None):
         with self.lock:
-            return self.api.handle(method, path, body)
+            metrics = getattr(self.api.service, "metrics", None)
+            if metrics is None:
+                return self.api.handle(method, path, body, headers)
+            with metrics.histogram(
+                    "fabric_http_request_seconds",
+                    "Wall-clock duration of one API dispatch "
+                    "(under the service lock)",
+                    labels=("method",)).time(method=method):
+                return self.api.handle(method, path, body, headers)
 
-    def _handle(self, method: str, path: str, body):
+    def _handle(self, method: str, path: str, body, headers=None):
         """One request; events GETs honor ``wait_s`` by re-probing with the
         lock released so the pump thread keeps making progress."""
         url = urlsplit(path)
@@ -163,8 +171,10 @@ class FabricHTTPServer:
                              "detail": ["'wait_s' must be a number"]}
         deadline = time.monotonic() + wait_s
         while True:
-            code, payload = self._handle_locked(method, path, body)
-            if (code != 200 or payload.get("events")
+            code, payload = self._handle_locked(method, path, body, headers)
+            # non-dict payloads (the /metrics text) can't be a feed poll
+            if (code != 200 or not isinstance(payload, dict)
+                    or payload.get("events")
                     or payload.get("status") in _TERMINAL
                     or time.monotonic() >= deadline):
                 return code, payload
@@ -180,9 +190,15 @@ class FabricHTTPServer:
                 pass
 
             def _respond(self, code: int, payload) -> None:
-                data = json.dumps(payload, default=str).encode()
+                if isinstance(payload, str):
+                    # the /metrics exposition: plain text, not JSON
+                    data = payload.encode()
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                else:
+                    data = json.dumps(payload, default=str).encode()
+                    ctype = "application/json"
                 self.send_response(code)
-                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Type", ctype)
                 self.send_header("Content-Length", str(len(data)))
                 self.end_headers()
                 self.wfile.write(data)
@@ -199,7 +215,8 @@ class FabricHTTPServer:
                             "detail": ["request body must be JSON"]})
                         return
                 try:
-                    code, payload = shim._handle(method, self.path, body)
+                    code, payload = shim._handle(method, self.path, body,
+                                                 dict(self.headers))
                 except Exception as e:      # never leak a stack over the wire
                     code, payload = 500, {"error": "internal_error",
                                           "detail": [str(e)]}
@@ -223,19 +240,30 @@ class FabricHTTPServer:
 class RemoteAPI:
     """Drop-in for ``FabricAPI`` that speaks to a ``FabricHTTPServer``."""
 
-    def __init__(self, base_url: str, *, timeout_s: float = 60.0) -> None:
+    def __init__(self, base_url: str, *, timeout_s: float = 60.0,
+                 token: str | None = None) -> None:
         self.base_url = base_url.rstrip("/")
         self.timeout_s = timeout_s
+        #: bearer token forwarded on every request (admin writes need it
+        #: when the server was started with --admin-token)
+        self.token = token
 
-    def handle(self, method: str, path: str,
-               body: dict | None = None) -> tuple[int, object]:
+    def handle(self, method: str, path: str, body: dict | None = None,
+               headers: dict | None = None) -> tuple[int, object]:
         data = None if body is None else json.dumps(body).encode()
+        send_headers = {"Content-Type": "application/json",
+                        **(headers or {})}
+        if self.token and "Authorization" not in send_headers:
+            send_headers["Authorization"] = f"Bearer {self.token}"
         req = urllib.request.Request(
             self.base_url + path, data=data, method=method.upper(),
-            headers={"Content-Type": "application/json"})
+            headers=send_headers)
         try:
             with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
-                return resp.status, json.loads(resp.read() or b"null")
+                raw = resp.read()
+                if "text/plain" in (resp.headers.get("Content-Type") or ""):
+                    return resp.status, raw.decode()    # /metrics exposition
+                return resp.status, json.loads(raw or b"null")
         except urllib.error.HTTPError as e:
             try:
                 payload = json.loads(e.read() or b"null")

@@ -23,6 +23,7 @@ from itertools import islice
 
 from repro.core import events as E
 from repro.core.dag import OpState, WorkflowDAG
+from repro.core.tracing import TraceState
 
 from .admission import AdmissionController
 
@@ -33,7 +34,8 @@ FEED_KINDS = {"workflow_submitted", "op_ready", "dedup_hit", "op_completed",
 #: snapshot blob schema version (bump on incompatible fold-state changes)
 #: v2: retention-trimmed folds (terminal-job eviction order + feed
 #: truncation watermarks travel with the snapshot)
-SNAPSHOT_FORMAT = 2
+#: v3: trace fold state + archived-job tombstones travel with the snapshot
+SNAPSHOT_FORMAT = 3
 
 #: kind of the synthetic feed entry that marks windowed-away history; never
 #: published on the bus or journaled — ``FabricService.events`` synthesizes
@@ -209,6 +211,15 @@ class ReplayState:
         self.terminal: deque[str] = deque()
         self._terminal_set: set[str] = set()
         self.result_index: dict[str, str] = {}   # unfiltered: h_task -> key
+        #: replay-derived span trees (DESIGN.md §11) — windowed in lockstep
+        #: with the feed window and the result-index cap
+        self.trace = TraceState(
+            span_window=self.retention.feed_window,
+            max_producers=self.retention.max_result_index)
+        #: job_id -> {"tenant": ...} tombstones for retention-evicted jobs,
+        #: in eviction order; bounded by the same terminal cap so the
+        #: archived map cannot regrow what eviction reclaimed
+        self.archived: dict[str, dict] = {}
         self.max_seq = -1
         self.events = 0
 
@@ -267,6 +278,7 @@ class ReplayState:
             trim_result_index(self.result_index,
                               self.retention.max_result_index)
         self.admission.on_event(e)
+        self.trace.apply(e)
         if kind in FEED_KINDS:
             dag_id = getattr(e, "dag_id", None)
             if dag_id in self.jobs:
@@ -292,9 +304,17 @@ class ReplayState:
         while len(self.terminal) > cap:
             old = self.terminal.popleft()
             self._terminal_set.discard(old)
-            self.jobs.pop(old, None)
+            rec = self.jobs.pop(old, None)
             self.feeds.pop(old, None)
             self.feed_trunc.pop(old, None)
+            self.trace.drop_job(old)
+            if rec is not None:
+                # tombstone so the job's existence degrades to "archived"
+                # (HTTP 410) instead of disappearing into a 404; re-insert
+                # so order is last-eviction and the trim keeps the newest
+                self.archived.pop(old, None)
+                self.archived[old] = {"tenant": rec.tenant}
+        trim_result_index(self.archived, cap)
 
     def set_retention(self, retention: RetentionPolicy) -> None:
         """Swap the fold's policy mid-stream and re-enforce it on the state
@@ -306,7 +326,10 @@ class ReplayState:
         for jid in list(self.feeds):
             window_feed(self.feeds, self.feed_trunc, jid,
                         retention.feed_window)
+        self.trace.set_caps(retention.feed_window,
+                            retention.max_result_index)
         self._enforce_terminal_cap()
+        trim_result_index(self.archived, retention.max_terminal_jobs)
         trim_result_index(self.result_index, retention.max_result_index)
 
     # -------------------------------------------------------- snapshotting --
@@ -323,6 +346,8 @@ class ReplayState:
                            for jid, v in self.feed_trunc.items()},
             "terminal": list(self.terminal),
             "result_index": dict(self.result_index),
+            "trace": self.trace.to_blob(),
+            "archived": {jid: dict(v) for jid, v in self.archived.items()},
             "admission": self.admission.dump_state(),
             #: informational: the policy the writing fold applied — restore
             #: takes its policy from operator config, never from here
@@ -340,9 +365,11 @@ class ReplayState:
         Format 1 snapshots (pre-retention) load with empty watermarks; their
         terminal order is unrecorded, so it is approximated by record
         (submission) order — this only affects *which* records a tighter cap
-        evicts from an old chain, never accounting.
+        evicts from an old chain, never accounting. Format 1/2 snapshots
+        predate the trace fold and archived tombstones: both load empty, so
+        traces simply start at the snapshot cut.
         """
-        if blob.get("format") not in (1, SNAPSHOT_FORMAT):
+        if blob.get("format") not in (1, 2, SNAPSHOT_FORMAT):
             raise ValueError(
                 f"unsupported snapshot format {blob.get('format')!r}")
         self.events = blob["events"]
@@ -361,11 +388,15 @@ class ReplayState:
         self.terminal = deque(jid for jid in terminal if jid in self.jobs)
         self._terminal_set = set(self.terminal)
         self.result_index = dict(blob["result_index"])
+        self.trace.load(blob.get("trace"))
+        self.archived = {jid: dict(v)
+                         for jid, v in blob.get("archived", {}).items()}
         self.admission.load_state(blob["admission"])
         for jid in list(self.feeds):
             window_feed(self.feeds, self.feed_trunc, jid,
                         self.retention.feed_window)
         self._enforce_terminal_cap()
+        trim_result_index(self.archived, self.retention.max_terminal_jobs)
         trim_result_index(self.result_index, self.retention.max_result_index)
 
 

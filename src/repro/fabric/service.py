@@ -26,9 +26,11 @@ from repro.core.control_plane import EngineConfig, FlowMeshEngine
 from repro.core.cost_model import DEVICE_CLASSES
 from repro.core.dag import OpState, WorkflowDAG
 from repro.core.journal import EventJournal
+from repro.core.metrics import MetricsRegistry
 from repro.core.scheduler import estimate_exec
 from repro.core.simulator import SimExecutor
 from repro.core.telemetry import Telemetry
+from repro.core.tracing import TraceState
 from repro.core.worker import WorkerState
 
 from .admission import AdmissionController, QuotaExceeded, TenantQuota
@@ -107,9 +109,31 @@ class FabricService:
         #: fold keeps, so a job evicted live cannot resurrect on restart
         self._terminal_order: list[str] = []
         self._terminal_seen: set[str] = set()
+        #: replay-derived span trees (DESIGN.md §11): the live service runs
+        #: the same TraceState fold over the bus that ReplayState runs over
+        #: the journal, so GET /jobs/{id}/trace replays byte-identically
+        self._trace = TraceState(
+            span_window=retention.feed_window,
+            max_producers=retention.max_result_index)
+        #: tombstones for retention-evicted jobs: job_id -> {"tenant": ...}
+        self.archived: dict[str, dict] = {}
+        #: wall-clock metrics (DESIGN.md §11) — process-local by design,
+        #: never journaled; one registry per service instance
+        self.metrics = MetricsRegistry()
+        self._m_events = self.metrics.counter(
+            "fabric_events_total", "Events published on the engine bus",
+            labels=("kind", "tenant"))
+        self._m_pump = self.metrics.histogram(
+            "fabric_pump_seconds", "Wall-clock duration of one pump() call")
+        self._m_gc = self.metrics.histogram(
+            "fabric_cas_gc_seconds",
+            "Wall-clock duration of CAS mark-and-sweep")
         self.engine.bus.subscribe(self._on_event)
+        self.engine.bus.subscribe(self._on_trace_event)
+        self.engine.bus.subscribe(self._on_metrics_event)
         self.journal = journal
         if journal is not None:
+            journal.metrics = self.metrics
             self.engine.bus.subscribe(journal.on_event)
         self.auto_compactions = 0
         self.last_retention: dict | None = None
@@ -138,6 +162,7 @@ class FabricService:
         for jid in list(self._feeds):
             window_feed(self._feeds, self._feed_trunc, jid,
                         policy.feed_window)
+        self._trace.set_caps(policy.feed_window, policy.max_result_index)
         self._evict_terminal()
         self._persist_operator_config()
 
@@ -167,6 +192,16 @@ class FabricService:
                     and dag_id not in self._terminal_seen:
                 self._terminal_seen.add(dag_id)
                 self._terminal_order.append(dag_id)
+
+    def _on_trace_event(self, e: E.FabricEvent) -> None:
+        # indirection so restore/follower sync can swap the fold object
+        self._trace.apply(e)
+
+    def _on_metrics_event(self, e: E.FabricEvent) -> None:
+        # cardinality stays ≤ tenants × event kinds: both label values come
+        # from closed sets ("-" covers system events with no tenant)
+        self._m_events.inc(kind=e.kind,
+                           tenant=getattr(e, "tenant", None) or "-")
 
     def events(self, job_id: str, since: int = -1,
                limit: int | None = None) -> dict | None:
@@ -244,6 +279,8 @@ class FabricService:
         self._feed_trunc = state.feed_trunc
         self._terminal_order = list(state.terminal)
         self._terminal_seen = set(state.terminal)
+        self._trace = state.trace
+        self.archived = state.archived
         # the scheduled-retention trigger counts the un-folded tail; a fresh
         # journal object starts at zero even over a long chain — sync it so
         # auto-compaction does not sleep through the first post-restart spell
@@ -341,14 +378,15 @@ class FabricService:
         until ``op_completed`` — an in-flight op must still find them), and
         ``extra_roots``. The journal buffer is flushed first so nothing
         reachable only through pending events is swept."""
-        if self.journal is not None:
-            self.journal.flush()
-        roots = set(extra_roots) | set(self.engine.result_index.values())
-        for dag in self.engine.dags.values():
-            for hashes in dag.input_hashes.values():
-                roots.update(hashes)
-            roots.update(dag.output_hash.values())
-        return self.engine.cas.gc(roots=roots)
+        with self._m_gc.time():
+            if self.journal is not None:
+                self.journal.flush()
+            roots = set(extra_roots) | set(self.engine.result_index.values())
+            for dag in self.engine.dags.values():
+                for hashes in dag.input_hashes.values():
+                    roots.update(hashes)
+                roots.update(dag.output_hash.values())
+            return self.engine.cas.gc(roots=roots)
 
     # ----------------------------------------------------------- submit ----
     def submit(self, doc: dict) -> dict:
@@ -399,13 +437,14 @@ class FabricService:
              until: float | None = None) -> int:
         """Advance the live engine by up to ``max_steps`` events (or until
         virtual time ``until``). Returns the number of events processed."""
-        self.engine._arm_recurring()
-        steps = 0
-        while max_steps is None or steps < max_steps:
-            if self.engine.idle or not self.engine.step(until):
-                break
-            steps += 1
-        self.maybe_retain()
+        with self._m_pump.time():
+            self.engine._arm_recurring()
+            steps = 0
+            while max_steps is None or steps < max_steps:
+                if self.engine.idle or not self.engine.step(until):
+                    break
+                steps += 1
+            self.maybe_retain()
         return steps
 
     def run_until_idle(self, until: float | None = None):
@@ -440,11 +479,17 @@ class FabricService:
             and not (self.jobs[jid].cancelled and jid in self.engine.cancelled
                      and jid not in self.engine.dags)]
         for jid in evictable[:max(0, len(evictable) - cap)]:
+            # tombstone first: GET /jobs/{id} degrades to 410 "archived"
+            # instead of a bare 404 (re-insert keeps last-eviction order)
+            self.archived.pop(jid, None)
+            self.archived[jid] = {"tenant": self.jobs[jid].tenant}
             del self.jobs[jid]
             self._feeds.pop(jid, None)
             self._feed_trunc.pop(jid, None)
+            self._trace.drop_job(jid)
             self.engine.dags.pop(jid, None)
             self.engine.cancelled.discard(jid)
+        trim_result_index(self.archived, cap)
         self._terminal_order = [j for j in self._terminal_order
                                 if j in self.jobs]
         self._terminal_seen = set(self._terminal_order)
@@ -548,6 +593,24 @@ class FabricService:
         return [self.job(jid, deadline_view=False)
                 for jid, rec in self.jobs.items()
                 if tenant is None or rec.tenant == tenant]
+
+    def trace(self, job_id: str, *, chrome: bool = False) -> object | None:
+        """One workflow's span tree (``GET /jobs/{id}/trace``), or its
+        Chrome ``trace_event`` export with ``chrome=True``. Replay-derived:
+        the primary, a tailing follower, and a journal-restored service all
+        return byte-identical documents for the same job. ``None`` for
+        unknown jobs; a job restored from a pre-trace snapshot answers with
+        an empty tree (its history predates the fold's cut)."""
+        if job_id not in self.jobs:
+            return None
+        if chrome:
+            out = self._trace.chrome_trace(job_id)
+            return out if out is not None else []
+        tree = self._trace.span_tree(job_id)
+        if tree is None:
+            return {"job_id": job_id, "spans": [], "edges": [],
+                    "truncated": False}
+        return tree
 
     def lineage(self, job_id: str) -> list[dict] | None:
         """Per-edge provenance: ``executed=False`` rows are op-instances that

@@ -200,7 +200,9 @@ def random_schedule(rng: random.Random, *, steps=12) -> list:
 # ---------------------------------------------------------------------------
 def observe(svc: FabricService) -> dict:
     """Everything the acceptance criteria name, as one comparable value:
-    job views, lineage, per-job feeds, usage snapshots, result index."""
+    job views, lineage, per-job feeds, usage snapshots, result index —
+    and since PR 6 the replay-derived span trees plus the archived-job
+    tombstones, so trace determinism rides every existing equality."""
     jids = sorted(svc.jobs)
     tenants = sorted({rec.tenant for rec in svc.jobs.values()})
     return {
@@ -209,6 +211,8 @@ def observe(svc: FabricService) -> dict:
         "feeds": {jid: svc.events(jid) for jid in jids},
         "usage": {t: svc.usage(t) for t in tenants},
         "result_index": dict(svc.engine.result_index),
+        "trace": {jid: svc.trace(jid) for jid in jids},
+        "archived": dict(svc.archived),
     }
 
 

@@ -618,10 +618,34 @@ def _soak(policy_name, n_jobs, seed=11):
         assert end[key] <= mid[key] * 1.35 + 64, (policy_name, key,
                                                   mid, end)
     # strictly sublinear in total history: the chain holds a small constant
-    # factor of the retention caps, not of everything ever flushed
-    assert end["chain_bytes"] < end["flushed_total"] / 3, (policy_name, end)
+    # factor of the retention caps, not of everything ever flushed (the
+    # factor loosened from 3 to 2.5 when the snapshot started carrying the
+    # trace fold — more retained state per job, still O(caps) not O(jobs),
+    # and flushed_total keeps growing linearly while chain_bytes plateaus)
+    assert end["chain_bytes"] < end["flushed_total"] / 2.5, (policy_name, end)
     assert end["jobs"] <= SOAK.max_terminal_jobs + 8    # cap + live slack
     assert svc.auto_compactions >= 2
+
+    # --- the observability plane is as bounded as the state (PR 6) -------
+    # label cardinality: fabric_events_total carries (kind, tenant) and the
+    # kind alphabet is fixed, so its series count is ≤ tenants × kinds; no
+    # metric may exceed the registry's hard overflow cap either way
+    card = svc.metrics.cardinality()
+    from repro.core import events as E_mod
+    n_kinds = len({cls.kind for cls in vars(E_mod).values()
+                   if isinstance(cls, type)
+                   and issubclass(cls, E_mod.FabricEvent)})
+    # fixed alphabet: tenants plus the "-" series for tenant-less events
+    assert 0 < card["fabric_events_total"] <= (len(TENANTS) + 1) * n_kinds
+    for name, n in card.items():
+        assert n <= svc.metrics.max_label_sets, (policy_name, name, n)
+    # span trees: windowed to feed_window ops (≤2 spans each) + workflow +
+    # admit + at most one truncation marker, per job — never O(history)
+    for jid in svc.jobs:
+        n_spans = svc._trace.span_count(jid)
+        assert n_spans <= 3 + 2 * SOAK.feed_window, (jid, n_spans)
+    # archived tombstones recycle at the same cap the job map does
+    assert len(svc.archived) <= SOAK.max_terminal_jobs
 
     # --- a restarted fabric agrees exactly on usage ----------------------
     restored = FabricService(
