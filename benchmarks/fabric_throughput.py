@@ -3,28 +3,37 @@
 
 Drives one journaled ``FabricService`` end-to-end — submit → admit →
 ready → dispatch → batch → complete — under wall-clock timing, then
-replays the journal into a fresh service, and emits ``BENCH_fabric.json``
-with the control path's scoreboard:
+replays the journal into a fresh service, and emits the control path's
+scoreboard:
 
   * ``jobs_per_s``          — workflows driven to terminal per wall second;
   * ``events_per_s``        — bus events published per wall second (the
     whole subscriber fan-out: feeds, trace fold, metrics, journal);
   * ``journal_append_per_s``— events journaled per second of time spent in
     ``EventJournal.on_event`` (from the metrics histogram, so the number
-    is exactly what ``GET /metrics`` reports);
+    is exactly what ``GET /metrics`` reports; since PR 7 this probe times
+    the buffer append only — flushes report separately);
   * ``replay_events_per_s`` — journal replay throughput (restore path);
   * ``pump_p50_s`` / ``pump_p95_s`` — pump-iteration latency quantiles,
     straight from the ``fabric_pump_seconds`` histogram.
 
 Deterministic workload per seed (virtual-time simulator); wall-clock
 numbers vary with the host, which is the point — this file is the perf
-baseline PR 7's hot-path work is measured against. Run by ci.sh as a
-timed, non-gating stage.
+scoreboard the hot-path work is measured against.
+
+Tiers: ``--tier 10k|100k|1m`` selects the job count the paper-scale
+claims are checked at (ci.sh runs 10k; the larger tiers are for manual
+runs). ``--trajectory`` appends the result to a checked-in JSON list
+(machine-tagged) instead of overwriting a single-result file, and warns —
+non-gating — when jobs/s regresses >25% against the previous entry from
+the same machine (DESIGN.md §12 explains how to read the file).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import platform
 import sys
 import time
 
@@ -34,6 +43,18 @@ from repro.fabric import FabricService, RetentionPolicy
 
 DEVICES = ("h100-nvl-94g", "rtx4090-48g", "rtx4090-24g")
 TENANTS = ("acme", "globex", "initech")
+
+TIERS = {"10k": 10_000, "100k": 100_000, "1m": 1_000_000}
+
+#: group-commit bound for the benchmark journal: coalesce bursts for up to
+#: 10 ms (or 8192 buffered events) per segment — the adaptive mode PR 7
+#: added; restores still replay the identical event stream
+COMMIT_LATENCY_S = 0.01
+MAX_BUFFER = 8192
+
+#: non-gating regression threshold on jobs/s between consecutive
+#: same-machine trajectory entries
+REGRESSION_PCT = 25.0
 
 
 def spec(tenant: str, tag: str) -> dict:
@@ -49,9 +70,17 @@ def spec(tenant: str, tag: str) -> dict:
     }
 
 
+def machine_tag() -> str:
+    """Coarse host identity for the trajectory: regressions only compare
+    like with like (a laptop entry must not gate a CI box)."""
+    return f"{platform.machine()}-{os.cpu_count() or 0}cpu"
+
+
 def run(n_jobs: int, *, seed: int = 0, pump_steps: int = 64) -> dict:
     cas = CAS()
-    journal = EventJournal(cas, batch_size=64)
+    journal = EventJournal(cas, batch_size=64,
+                           commit_latency_s=COMMIT_LATENCY_S,
+                           max_buffer=MAX_BUFFER)
     svc = FabricService(seed=seed, cas=cas, journal=journal,
                         device_classes=DEVICES,
                         retention=RetentionPolicy())
@@ -87,6 +116,7 @@ def run(n_jobs: int, *, seed: int = 0, pump_steps: int = 64) -> dict:
         "bench": "fabric_throughput",
         "n_jobs": n_jobs,
         "seed": seed,
+        "machine": machine_tag(),
         "wall_s": round(drive_s, 3),
         "jobs_per_s": per_s(n_jobs, drive_s),
         "events": events,
@@ -97,6 +127,7 @@ def run(n_jobs: int, *, seed: int = 0, pump_steps: int = 64) -> dict:
             "journal_append_per_s": per_s(append_count, append_sum),
             "segments": journal.segments_written,
             "bytes": journal.bytes_flushed,
+            "commit_latency_s": COMMIT_LATENCY_S,
         },
         "replay": {
             "events": stats["events"],
@@ -113,23 +144,65 @@ def run(n_jobs: int, *, seed: int = 0, pump_steps: int = 64) -> dict:
     return out
 
 
+def append_trajectory(path: str, result: dict) -> str | None:
+    """Append ``result`` to the checked-in trajectory file (a JSON list,
+    newest last) and return a non-gating warning string when jobs/s
+    dropped more than ``REGRESSION_PCT``% against the previous entry from
+    the same machine tag (None otherwise)."""
+    trajectory: list[dict] = []
+    if os.path.exists(path):
+        with open(path) as f:
+            loaded = json.load(f)
+        # tolerate the pre-trajectory single-result layout
+        trajectory = loaded if isinstance(loaded, list) else [loaded]
+    prev = next((e for e in reversed(trajectory)
+                 if e.get("machine") == result["machine"]
+                 and e.get("n_jobs") == result["n_jobs"]), None)
+    trajectory.append(result)
+    with open(path, "w") as f:
+        json.dump(trajectory, f, indent=2)
+        f.write("\n")
+    if prev and prev.get("jobs_per_s"):
+        drop = 100.0 * (1.0 - result["jobs_per_s"] / prev["jobs_per_s"])
+        if drop > REGRESSION_PCT:
+            return (f"WARNING: jobs/s dropped {drop:.1f}% vs previous "
+                    f"{result['machine']} entry "
+                    f"({prev['jobs_per_s']} -> {result['jobs_per_s']}) "
+                    f"— non-gating, investigate before merging")
+    return None
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--jobs", type=int, default=300,
-                    help="workflows to drive end-to-end")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="workflows to drive end-to-end (overrides --tier)")
+    ap.add_argument("--tier", choices=sorted(TIERS), default=None,
+                    help="paper-scale job-count tier (10k/100k/1m)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_fabric.json",
                     help="where to write the JSON scoreboard")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="append to a checked-in trajectory list instead "
+                         "of overwriting a single-result file; warns "
+                         "(non-gating) on >25%% jobs/s regression")
     args = ap.parse_args(argv)
-    result = run(args.jobs, seed=args.seed)
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
-        f.write("\n")
+    n_jobs = args.jobs if args.jobs is not None else (
+        TIERS[args.tier] if args.tier else 300)
+    result = run(n_jobs, seed=args.seed)
+    warning = None
+    if args.trajectory:
+        warning = append_trajectory(args.out, result)
+    else:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
     print(f"BENCH_fabric: {result['jobs_per_s']} jobs/s, "
           f"{result['events_per_s']} events/s, "
           f"replay {result['replay']['replay_events_per_s']} events/s, "
           f"pump p95 {result['pump']['pump_p95_s']}s -> {args.out}",
           flush=True)
+    if warning:
+        print(warning, flush=True)
     return 0
 
 

@@ -435,6 +435,13 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--journal", metavar="DIR",
                    help="CAS directory for the event journal; restores "
                         "prior history when one exists")
+    p.add_argument("--commit-latency", type=float, metavar="SECONDS",
+                   dest="commit_latency",
+                   help="adaptive group commit: cut a journal segment when "
+                        "the oldest buffered event is this many wall-clock "
+                        "seconds old, instead of every fixed batch of "
+                        "events (bounds post-crash loss to this window; "
+                        "see DESIGN.md §12)")
     p.add_argument("--admin-token", metavar="TOKEN", dest="admin_token",
                    default=argparse.SUPPRESS,
                    help="require this bearer token on mutating /admin/* "
@@ -544,7 +551,8 @@ def main(argv: list[str] | None = None) -> int:
         api = RemoteAPI(args.url, token=args.admin_token)
     elif args.cmd in ("serve", "submit") and getattr(args, "journal", None):
         cas = DiskCAS(args.journal)     # artifacts + journal share one store
-        journal = EventJournal(cas)
+        journal = EventJournal(
+            cas, commit_latency_s=getattr(args, "commit_latency", None))
         doc = load_operator_doc(cas)
         retention, source = _resolve_retention(args, doc)
         svc = FabricService(seed=args.seed, cas=cas, journal=journal,

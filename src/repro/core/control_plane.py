@@ -100,6 +100,10 @@ class FlowMeshEngine:
         self.pool = ReadyPool()
         self.workers: dict[str, Worker] = {}
         self.result_index: dict[str, str] = {}     # H_task -> output hash
+        #: H_task -> dedup hit count, fed by DedupHit(source="index") events;
+        #: retention uses it to keep frequently-re-derived results over
+        #: merely-recent ones (LFU/recency hybrid — see replay.trim_result_index)
+        self.result_index_hits: dict[str, int] = {}
         #: the control plane's single observable output stream; telemetry,
         #: journal, and job feeds are all subscribers
         self.bus = EventBus()
@@ -459,10 +463,17 @@ class FlowMeshEngine:
             dedup=self.policy.dedup)
         if disp == "cached":
             # instant completion from the result index (dedup across time)
-            out = self.result_index[dag.h_task[op_name]]
+            h_task = dag.h_task[op_name]
+            out = self.result_index[h_task]
+            # hit bump + recency touch (pop/reinsert keeps dict order =
+            # recency order); replay folds the same update off DedupHit
+            self.result_index_hits[h_task] = \
+                self.result_index_hits.get(h_task, 0) + 1
+            self.result_index.pop(h_task, None)
+            self.result_index[h_task] = out
             self._emit(E.DedupHit(
                 dag_id=dag.dag_id, tenant=dag.tenant, op=op_name,
-                h_task=dag.h_task[op_name], source="index", savings=1))
+                h_task=h_task, source="index", savings=1))
             dag.state[op_name] = OpState.COMPLETED
             dag.complete(op_name, out, executed=False, worker=None,
                          now=self.now)

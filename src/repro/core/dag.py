@@ -44,6 +44,25 @@ BATCHABLE_TYPES = {OpType.GENERATE, OpType.SCORE, OpType.EVAL}
 # Op types that are training steps (stateful executor, microbatchable).
 TRAINING_TYPES = {OpType.SFT, OpType.DPO, OpType.PPO}
 
+# Process-wide digest memos. Identity hashes are pure functions of their
+# key, and a fabric sees the same few (model, params, inputs) combinations
+# across thousands of submitted workflows — without these, every DAG
+# instance re-pays the sha256 per operator. Bounded: cleared wholesale at
+# the cap (correctness never depends on an entry being present).
+_HASH_CACHE_MAX = 65536
+_MODEL_HASH_CACHE: dict[tuple, str] = {}
+_EXEC_SIG_CACHE: dict[tuple, str] = {}
+_TASK_HASH_CACHE: dict[tuple, str] = {}
+
+
+def _memo_digest(cache: dict, key: tuple, fn, *args) -> str:
+    v = cache.get(key)
+    if v is None:
+        if len(cache) >= _HASH_CACHE_MAX:
+            cache.clear()
+        v = cache[key] = fn(*args)
+    return v
+
 
 @dataclass(frozen=True)
 class Ref:
@@ -68,14 +87,59 @@ class OperatorSpec:
     tokens_out: int = 128
     train_tokens: int = 0              # for SFT/DPO/PPO stages
 
+    # Both hashes are memoized: the scheduler hot path evaluates them per
+    # candidate. The memo key carries every non-params identity input, so
+    # pre-submit field mutation (benchmarks rewrite model_id /
+    # resource_class) invalidates it; params are deliberately absent from
+    # the key because the only post-submit params mutation in the system
+    # is the ``min_vram_gb`` resource hint, which H_exec strips anyway.
     @property
     def h_model(self) -> str:
-        return identity.model_hash(self.model_id, self.revision, self.adapters)
+        key = (self.model_id, self.revision, self.adapters)
+        c = self.__dict__.get("_hm")
+        if c is not None and c[0] == key:
+            return c[1]
+        v = _memo_digest(_MODEL_HASH_CACHE, key, identity.model_hash, *key)
+        self.__dict__["_hm"] = (key, v)
+        return v
+
+    def _type_prefix(self) -> str:
+        """Memoized ``"<op_type>:<H_model>"`` digest prefix. Enum ``.value``
+        routes through ``DynamicClassAttribute`` on every access, so the
+        scheduler-visible hot paths (H_exec, ready promotion) cache the
+        rendered prefix keyed on the current H_model."""
+        hm = self.h_model
+        c = self.__dict__.get("_pf")
+        if c is not None and c[0] == hm:
+            return c[1]
+        v = f"{self.op_type.value}:{hm}"
+        self.__dict__["_pf"] = (hm, v)
+        return v
+
+    def _canon_params(self) -> str:
+        """Memoized ``canonical(strip_resource_hints(params))`` — shared by
+        H_exec and H_task. Unkeyed on purpose: like the ``_hx`` key, it
+        relies on the invariant that the only post-construction params
+        mutation in the system is the ``min_vram_gb`` resource hint, which
+        stripping removes before canonicalization anyway."""
+        c = self.__dict__.get("_cp")
+        if c is None:
+            c = self.__dict__["_cp"] = identity.canonical(
+                identity.strip_resource_hints(self.params))
+        return c
 
     def h_exec(self) -> str:
-        return identity.exec_signature(
-            f"{self.op_type.value}:{self.h_model}", self.params,
-            self.resource_class)
+        key = (self.op_type, self.model_id, self.revision, self.adapters,
+               self.resource_class)
+        c = self.__dict__.get("_hx")
+        if c is not None and c[0] == key:
+            return c[1]
+        canon = self._canon_params()
+        v = _memo_digest(
+            _EXEC_SIG_CACHE, key + (canon,), identity.exec_signature_pre,
+            self._type_prefix(), canon, self.resource_class)
+        self.__dict__["_hx"] = (key, v)
+        return v
 
 
 _dag_ids = itertools.count()
@@ -98,7 +162,8 @@ class WorkflowDAG:
 
     def __init__(self, ops: Sequence[OperatorSpec], *, tenant: str = "default",
                  dag_id: str | None = None, submitted_at: float = 0.0,
-                 metadata: Mapping[str, Any] | None = None) -> None:
+                 metadata: Mapping[str, Any] | None = None,
+                 validate: bool = True) -> None:
         self.dag_id = dag_id or f"dag-{next(_dag_ids)}"
         self.tenant = tenant
         self.submitted_at = submitted_at
@@ -114,7 +179,11 @@ class WorkflowDAG:
         self.input_hashes: dict[str, tuple[str, ...]] = {}
         self.h_task: dict[str, str] = {}
         self.lineage: list[Lineage] = []
-        self._validate()
+        # validate=False is reserved for callers re-instantiating a graph
+        # shape that already passed validation (the spec compiler's plan
+        # cache) — edges and acyclicity are properties of the shape alone
+        if validate:
+            self._validate()
 
     # ------------------------------------------------------------------
     def _validate(self) -> None:
@@ -180,9 +249,11 @@ class WorkflowDAG:
                 continue
             op = self.ops[name]
             self.input_hashes[name] = hashes
-            self.h_task[name] = identity.task_hash(
-                f"{op.op_type.value}:{op.h_model}",
-                identity.strip_resource_hints(op.params), hashes)
+            canon = op._canon_params()
+            prefix = op._type_prefix()
+            self.h_task[name] = _memo_digest(
+                _TASK_HASH_CACHE, (prefix, canon, hashes),
+                identity.task_hash_pre, prefix, canon, hashes)
             self.state[name] = OpState.READY
             newly.append(name)
         return newly

@@ -20,11 +20,16 @@ feeds and journal replay both key on.
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, fields
+from dataclasses import dataclass, fields
 from typing import Callable, ClassVar
 
 #: kind -> event class, populated by @register (journal replay / feed decode)
 EVENT_TYPES: dict[str, type["FabricEvent"]] = {}
+
+#: per-class field-name tuples/sets, resolved once — ``dataclasses.fields``
+#: walks the MRO on every call, far too slow for the publish hot path
+_FIELD_NAMES: dict[type, tuple[str, ...]] = {}
+_FIELD_SETS: dict[type, frozenset[str]] = {}
 
 
 def register(cls: type["FabricEvent"]) -> type["FabricEvent"]:
@@ -42,15 +47,38 @@ class FabricEvent:
     seq: int = -1          # assigned by the bus at publish
 
     def to_dict(self) -> dict:
-        return {"kind": self.kind, **asdict(self)}
+        """The event as one flat dict, serialized **once per publish** and
+        shared by every subscriber (journal buffer, per-job feeds, replay
+        folds). The cache is keyed on ``seq``: a dict built before the bus
+        assigned the seq is rebuilt on the next call. Consumers treat the
+        dict as frozen — anyone who must mutate copies first (the snapshot
+        writer already does)."""
+        sd = self.__dict__
+        d = sd.get("_dcache")
+        if d is not None and d["seq"] == sd["seq"]:
+            return d
+        cls = type(self)
+        names = _FIELD_NAMES.get(cls)
+        if names is None:
+            names = _FIELD_NAMES[cls] = tuple(f.name for f in fields(cls))
+        d = {"kind": self.kind}
+        # field values read straight from the instance dict: dataclass
+        # __init__ assigns every field there, and a plain dict probe beats
+        # getattr's descriptor walk at one call per field per serialization
+        for name in names:
+            d[name] = sd[name]
+        # not a dataclass field: invisible to fields()/__eq__/repr
+        sd["_dcache"] = d
+        return d
 
 
 def event_from_dict(d: dict) -> FabricEvent:
     """Inverse of ``to_dict`` — unknown fields are dropped (forward compat:
     a journal written by a newer fabric still replays)."""
-    d = dict(d)
-    cls = EVENT_TYPES.get(d.pop("kind", "event"), FabricEvent)
-    names = {f.name for f in fields(cls)}
+    cls = EVENT_TYPES.get(d.get("kind", "event"), FabricEvent)
+    names = _FIELD_SETS.get(cls)
+    if names is None:
+        names = _FIELD_SETS[cls] = frozenset(f.name for f in fields(cls))
     return cls(**{k: v for k, v in d.items() if k in names})
 
 
@@ -340,21 +368,30 @@ class EventBus:
 
     def __init__(self) -> None:
         self._subs: list[Callable[[FabricEvent], None]] = []
+        self._snapshot: tuple[Callable[[FabricEvent], None], ...] = ()
         self._next = 0
 
     def subscribe(self, fn: Callable[[FabricEvent], None]) -> Callable:
         self._subs.append(fn)
+        self._snapshot = tuple(self._subs)
         return fn
 
     def unsubscribe(self, fn: Callable[[FabricEvent], None]) -> None:
         if fn in self._subs:
             self._subs.remove(fn)
+            self._snapshot = tuple(self._subs)
 
     def publish(self, ev: FabricEvent) -> FabricEvent:
-        if ev.seq < 0:
-            ev.seq = self._next
-        self._next = max(self._next, ev.seq + 1)
-        for fn in list(self._subs):
+        seq = ev.seq
+        if seq < 0:
+            seq = ev.seq = self._next
+        if seq >= self._next:
+            self._next = seq + 1
+        # iterate an immutable snapshot (rebuilt on (un)subscribe, never per
+        # publish): a handler that mutates the subscription list mid-fan-out
+        # sees the change on the NEXT publish, same as the list-copy it
+        # replaces — without one list allocation per event
+        for fn in self._snapshot:
             fn(ev)
         return ev
 

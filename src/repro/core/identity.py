@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import hashlib
 import json
-from typing import Any, Mapping, Sequence
+from collections.abc import Mapping, Sequence   # abc fast-path isinstance
+from typing import Any
 
 HASH_LEN = 20  # hex chars kept; 80 bits — collision-safe at fabric scale
 
@@ -39,7 +40,9 @@ def canonical(params: Mapping[str, Any] | None) -> str:
     """The paper's ``canonical(P)``: deterministic serialization of
     hyperparameters + resource hints. Key order, float formatting and container
     types are all normalized so semantically identical specs collide."""
-    return json.dumps(_stable(params or {}), sort_keys=True, separators=(",", ":"))
+    if not params:
+        return "{}"         # the common no-hyperparameter case, pre-rendered
+    return json.dumps(_stable(params), sort_keys=True, separators=(",", ":"))
 
 
 def digest(*parts: str | bytes) -> str:
@@ -64,6 +67,14 @@ def task_hash(h_model: str, params: Mapping[str, Any] | None,
     return digest("task", h_model, canonical(params), *input_hashes)
 
 
+def task_hash_pre(h_model: str, canon_params: str,
+                  input_hashes: Sequence[str]) -> str:
+    """``task_hash`` for callers that already hold ``canonical(P)`` — the
+    DAG memoizes the stripped-params canonical once per operator so the
+    ready-promotion hot path does not re-serialize it per instance."""
+    return digest("task", h_model, canon_params, *input_hashes)
+
+
 # Resource hints that do not change the *semantics* of the computation are
 # excluded from H_exec's parameter digest (the paper: H_exec "deliberately
 # omits the input hashes"; resource hints only matter via resource_class).
@@ -84,6 +95,13 @@ def exec_signature(h_model: str, params: Mapping[str, Any] | None,
     inputs deliberately omitted."""
     return digest("exec", h_model, canonical(strip_resource_hints(params)),
                   resource_class)
+
+
+def exec_signature_pre(h_model: str, canon_params: str,
+                       resource_class: str) -> str:
+    """``exec_signature`` over a pre-canonicalized stripped-params string
+    (see ``task_hash_pre``)."""
+    return digest("exec", h_model, canon_params, resource_class)
 
 
 def content_hash(data: bytes) -> str:

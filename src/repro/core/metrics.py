@@ -94,6 +94,15 @@ class Counter(_Metric):
             key = self._key(labels)
             self._series[key] = self._series.get(key, 0.0) + value
 
+    def child(self, **labels) -> "_CounterChild":
+        """A bound handle for one label set: resolves the series key once
+        (under the cardinality cap) so hot-path increments skip label
+        validation entirely. Callers cache children per label combination."""
+        with self._lock:
+            key = self._key(labels)
+            self._series.setdefault(key, 0.0)
+        return _CounterChild(self, key)
+
     def value(self, **labels) -> float:
         with self._lock:
             return self._series.get(self._key(labels), 0.0)
@@ -163,6 +172,17 @@ class Histogram(_Metric):
         wall-clock seconds — the standard probe on the fabric's hot paths."""
         return _Timer(self, labels)
 
+    def child(self, **labels) -> "_HistChild":
+        """A bound handle for one label set (see ``Counter.child``): the
+        series is resolved eagerly so per-sample observes are just
+        lock + bucket insert."""
+        with self._lock:
+            key = self._key(labels)
+            series = self._series.get(key)
+            if series is None:
+                series = self._series[key] = _HistSeries(len(self.bounds))
+        return _HistChild(self, series)
+
     def count(self, **labels) -> int:
         with self._lock:
             series = self._series.get(self._key(labels))
@@ -205,6 +225,43 @@ class Histogram(_Metric):
                    f"{_format(series.total)}")
             yield (f"{self.name}_count{self._labels_text(key)} "
                    f"{series.count}")
+
+
+class _CounterChild:
+    """Pre-resolved (metric, series-key) pair — the per-event fast path."""
+
+    __slots__ = ("_counter", "_key")
+
+    def __init__(self, counter: Counter, key: tuple[str, ...]) -> None:
+        self._counter = counter
+        self._key = key
+
+    def inc(self, value: float = 1.0) -> None:
+        counter = self._counter
+        with counter._lock:
+            series = counter._series
+            series[self._key] = series.get(self._key, 0.0) + value
+
+
+class _HistChild:
+    """Pre-resolved histogram series — observe without label resolution."""
+
+    __slots__ = ("_hist", "_series")
+
+    def __init__(self, hist: Histogram, series: _HistSeries) -> None:
+        self._hist = hist
+        self._series = series
+
+    def observe(self, value: float) -> None:
+        hist = self._hist
+        series = self._series
+        with hist._lock:
+            for i, bound in enumerate(hist.bounds):
+                if value <= bound:
+                    series.buckets[i] += 1
+                    break
+            series.total += value
+            series.count += 1
 
 
 class _Timer:

@@ -11,6 +11,7 @@ interface so the engine code is identical across systems.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 from dataclasses import dataclass
 from typing import Callable, Sequence
@@ -57,6 +58,31 @@ def estimate_exec(spec: OperatorSpec, batch: int, dev: DeviceClass, *,
     return dur + overhead, load_s, flops
 
 
+#: (model_id, training, lora) -> model_vram_gb result. The hint path stays
+#: uncached — ``min_vram_gb`` is mutated at runtime on resource_shortage.
+_VRAM_CACHE: dict[tuple[str, bool, bool], float] = {}
+
+#: (op_type, model_id, tokens_in, tokens_out, train_tokens, lora, batch,
+#:  dev, hot) -> estimate_exec result. estimate_exec is pure in exactly
+#: these inputs; the cache returns the very floats computed on first call,
+#: so memoized utilities are bit-identical to recomputed ones.
+_EXEC_CACHE: dict[tuple, tuple[float, float, float]] = {}
+_EXEC_CACHE_MAX = 65536
+
+
+def _estimate_cached(spec: OperatorSpec, batch: int, dev: DeviceClass,
+                     hot: bool) -> tuple[float, float, float]:
+    key = (spec.op_type, spec.model_id, spec.tokens_in, spec.tokens_out,
+           spec.train_tokens, bool(spec.params.get("lora", False)),
+           batch, dev.name, hot)
+    r = _EXEC_CACHE.get(key)
+    if r is None:
+        if len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
+            _EXEC_CACHE.clear()
+        r = _EXEC_CACHE[key] = estimate_exec(spec, batch, dev, hot=hot)
+    return r
+
+
 def vram_needed_gb(spec: OperatorSpec) -> float:
     if not spec.model_id:
         return 0.0
@@ -64,9 +90,13 @@ def vram_needed_gb(spec: OperatorSpec) -> float:
     hint = spec.params.get("min_vram_gb")
     if hint is not None:
         return float(hint)
-    return model_vram_gb(spec.model_id,
-                         training=spec.op_type in TRAINING_TYPES,
-                         lora=bool(spec.params.get("lora", False)))
+    key = (spec.model_id, spec.op_type in TRAINING_TYPES,
+           bool(spec.params.get("lora", False)))
+    v = _VRAM_CACHE.get(key)
+    if v is None:
+        v = _VRAM_CACHE[key] = model_vram_gb(key[0], training=key[1],
+                                             lora=key[2])
+    return v
 
 
 def feasible(spec: OperatorSpec, worker: Worker) -> bool:
@@ -158,7 +188,11 @@ class FlowMeshScheduler(SchedulerPolicy):
                 + self.w_l * self.g_loc(spec, groups, w))
 
     # -- candidate enumeration -----------------------------------------------
-    def schedule(self, pending, workers, now):
+    def schedule_reference(self, pending, workers, now):
+        """Naive O(rounds * pools * workers) rescan. Kept verbatim as the
+        correctness oracle for the indexed ``schedule`` below — the
+        differential property test asserts both produce identical proposal
+        sequences on arbitrary pools/fleets."""
         proposals: list[Proposal] = []
         admittable = [w for w in workers if w.can_admit()]
         # mutable view of remaining capacity per worker this round
@@ -188,6 +222,105 @@ class FlowMeshScheduler(SchedulerPolicy):
             rem = remaining[best.h_exec]
             for g in best.groups:
                 rem.remove(g)
+        return proposals
+
+    def _utility_fast(self, spec: OperatorSpec, n: int, hashes: list[str],
+                      w: Worker, hx: str) -> float:
+        """Bit-identical to ``utility(spec, batch, w)`` with the per-bucket
+        invariants hoisted: ``n = len(batch)``, ``hashes`` pre-flattened,
+        ``hx = spec.h_exec()``. Every float op replicates the reference's
+        order of evaluation exactly, so memoization cannot perturb ties."""
+        hot = (not spec.model_id) or w.is_hot_for(spec.h_model)
+        dur, load_s, _ = _estimate_cached(spec, n, w.dev, hot)
+        ref_dur, _, _ = _estimate_cached(spec, n, self.ref, True)
+        total = dur + load_s
+        t = (ref_dur / total) if total > 0 else 1.0
+        gain = 0.0
+        if not spec.model_id or w.is_hot_for(spec.h_model):
+            gain += 1.0
+        if hashes:
+            lc = w.local_cache
+            cached = 0
+            for ih in hashes:
+                if ih in lc:
+                    cached += 1
+            gain += 0.25 * cached / len(hashes)
+        if hx in w.served_execs:
+            gain += 0.25
+        return (self.w_t * t
+                - self.w_c * (w.dev.price_hr / _MAX_PRICE)
+                + self.w_l * gain)
+
+    def schedule(self, pending, workers, now):
+        """Indexed best-candidate selection.
+
+        The reference rescans every (pool, worker) pair per proposal even
+        though a proposal only perturbs ONE pool's front slice and ONE
+        worker's slot count. Here each candidate is a max-heap entry
+        ``(-utility, exec_rank, worker_rank, version, h_exec, worker)``;
+        after a proposal, only the dirtied bucket is eagerly recomputed and
+        re-pushed under a bumped version (utility can rise when the front
+        slice changes, so lazy invalidation would strand too-low stale
+        entries). Stale versions and slot-exhausted workers are discarded
+        at pop. Tie-breaking matches the reference exactly: strict ``>``
+        keeps the first maximum in (pool dict order, admittable order) —
+        the heap realizes the same order via (exec_rank, worker_rank),
+        which is unique per pair, so comparison never reaches the
+        non-comparable trailing fields."""
+        cls = type(self)
+        if (cls.utility is not FlowMeshScheduler.utility
+                or cls.t_eff is not FlowMeshScheduler.t_eff
+                or cls.g_loc is not FlowMeshScheduler.g_loc
+                or cls.c is not FlowMeshScheduler.c
+                or cls.max_batch is not FlowMeshScheduler.max_batch):
+            # a subclass changed the objective — the index's hoisted
+            # arithmetic no longer mirrors it; fall back to the oracle
+            return self.schedule_reference(pending, workers, now)
+        admittable = [w for w in workers if w.can_admit()]
+        slots = {w.worker_id: (w.MAX_QUEUED_SLICES - w.queued_slices())
+                 for w in admittable}
+        remaining = {h: list(gs) for h, gs in pending.items()}
+        exec_rank = {h: i for i, h in enumerate(remaining)}
+        version = dict.fromkeys(remaining, 0)
+        feas: dict[tuple[str, str], bool] = {}
+        heap: list = []
+        proposals: list[Proposal] = []
+
+        def push_bucket(h: str) -> None:
+            groups = remaining[h]
+            if not groups:
+                return
+            spec = groups[0].spec
+            batch = groups[:self.max_batch(spec)]
+            n = len(batch)
+            hashes = [ih for g in batch for ih in g.input_hashes]
+            hx = spec.h_exec()
+            er, ver = exec_rank[h], version[h]
+            for wi, w in enumerate(admittable):
+                if slots[w.worker_id] <= 0:
+                    continue
+                key = (h, w.worker_id)
+                ok = feas.get(key)
+                if ok is None:
+                    ok = feas[key] = feasible(spec, w)
+                if not ok:
+                    continue
+                u = self._utility_fast(spec, n, hashes, w, hx)
+                heapq.heappush(heap, (-u, er, wi, ver, h, w))
+
+        for h in remaining:
+            push_bucket(h)
+        while heap:
+            nu, er, wi, ver, h, w = heapq.heappop(heap)
+            if ver != version[h] or slots[w.worker_id] <= 0:
+                continue            # stale bucket / exhausted worker
+            groups = remaining[h]
+            batch = groups[:self.max_batch(groups[0].spec)]
+            proposals.append(Proposal(w, h, batch, -nu))
+            slots[w.worker_id] -= 1
+            del groups[:len(batch)]
+            version[h] += 1
+            push_bucket(h)
         return proposals
 
 

@@ -39,18 +39,42 @@ from __future__ import annotations
 from .events import FabricEvent
 
 #: trace-state blob schema version (carried inside the journal snapshot)
-TRACE_FORMAT = 1
+#: v2: producer-map dedup hit counts travel with the blob (LFU eviction)
+TRACE_FORMAT = 2
+
+#: the event kinds the fold consumes — everything else returns immediately
+_TRACE_KINDS = frozenset((
+    "workflow_submitted", "job_rejected", "op_ready", "dedup_hit",
+    "dispatch", "group_completed", "op_completed", "group_requeued",
+    "workflow_completed", "workflow_cancelled"))
 
 #: span kind of the synthetic marker that reports windowed-away op spans
 TRACE_TRUNCATED_KIND = "trace_truncated"
 
+#: stale-window the LFU hybrid considers beyond the excess (kept equal to
+#: replay._LFU_WINDOW so the producer map evicts like the result index)
+_LFU_WINDOW = 8
 
-def _trim_oldest(d: dict, cap: int | None) -> None:
-    """Drop oldest (insertion-order) entries beyond ``cap`` in place."""
+
+def _trim_oldest(d: dict, cap: int | None,
+                 hits: dict[str, int] | None = None) -> None:
+    """Drop entries beyond ``cap`` in place. Without ``hits``: oldest
+    (insertion-order) first. With ``hits``: LFU/recency hybrid — among the
+    stalest ``excess + _LFU_WINDOW`` entries evict the least-hit first,
+    ties oldest-first (stable sort ⇒ all-zero hits degrade exactly to the
+    legacy order). Same discipline as ``replay.trim_result_index``."""
     if cap is None or len(d) <= cap:
         return
-    for key in list(d)[:len(d) - cap]:
+    excess = len(d) - cap
+    if not hits:
+        for key in list(d)[:excess]:
+            del d[key]
+        return
+    cand = list(d)[:excess + _LFU_WINDOW]
+    cand.sort(key=lambda k: hits.get(k, 0))
+    for key in cand[:excess]:
         del d[key]
+        hits.pop(key, None)
 
 
 class TraceState:
@@ -71,8 +95,12 @@ class TraceState:
         self.max_producers = max_producers
         #: job_id -> trace record (see _new_job)
         self.jobs: dict[str, dict] = {}
-        #: h_task -> [producer_job, producer_op], last-write order
+        #: h_task -> [producer_job, producer_op], last-use order
         self.producers: dict[str, list] = {}
+        #: h_task -> times a dedup edge resolved through the producer map;
+        #: drives LFU eviction so frequently-referenced producers outlive
+        #: merely-recent ones (lockstep with the result index's hit counts)
+        self.producer_hits: dict[str, int] = {}
         #: h_task -> [[job_id, op], ...] ready-but-undispatched instances
         self.pending: dict[str, list] = {}
 
@@ -85,6 +113,10 @@ class TraceState:
 
     def apply(self, e: FabricEvent) -> None:
         kind = e.kind
+        # one set probe instead of walking the whole dispatch chain for the
+        # kinds the trace plane ignores (batch/worker/lease events)
+        if kind not in _TRACE_KINDS:
+            return
         if kind == "workflow_submitted":
             self.jobs[e.dag_id] = self._new_job(e.tenant, e.time,
                                                 "running", e.seq)
@@ -120,6 +152,12 @@ class TraceState:
             if rec is None:
                 return
             producer = self.producers.get(e.h_task)
+            if producer is not None:
+                # the edge resolved through the map: hit bump + recency
+                # touch, so eviction favors producers nothing references
+                self.producer_hits[e.h_task] = \
+                    self.producer_hits.get(e.h_task, 0) + 1
+                self.producers[e.h_task] = self.producers.pop(e.h_task)
             dedup = {"source": e.source,
                      "producer_job": producer[0] if producer else None,
                      "producer_op": producer[1] if producer else None}
@@ -152,7 +190,8 @@ class TraceState:
                 # keeps the newest — same discipline as the result index)
                 self.producers.pop(e.h_task, None)
                 self.producers[e.h_task] = producer
-                _trim_oldest(self.producers, self.max_producers)
+                _trim_oldest(self.producers, self.max_producers,
+                             self.producer_hits)
                 for job_id, op, _tenant in consumers[1:]:
                     entry = self._op(job_id, op)
                     if entry is not None:
@@ -217,7 +256,7 @@ class TraceState:
         self.max_producers = max_producers
         for job_id, rec in self.jobs.items():
             self._window_spans(job_id, rec)
-        _trim_oldest(self.producers, max_producers)
+        _trim_oldest(self.producers, max_producers, self.producer_hits)
 
     # ------------------------------------------------------ serialization --
     #: positional row layouts — the snapshot stores rows, not dicts, so the
@@ -242,6 +281,7 @@ class TraceState:
                         list(rec["dropped"])]
                      for jid, rec in self.jobs.items()},
             "producers": {h: list(v) for h, v in self.producers.items()},
+            "producer_hits": dict(self.producer_hits),
             "pending": {h: [list(p) for p in v]
                         for h, v in self.pending.items()},
         }
@@ -252,10 +292,11 @@ class TraceState:
         chains restore with traces starting at the snapshot cut."""
         self.jobs = {}
         self.producers = {}
+        self.producer_hits = {}
         self.pending = {}
         if blob is None:
             return
-        if blob.get("format") != TRACE_FORMAT:
+        if blob.get("format") not in (1, TRACE_FORMAT):
             raise ValueError(
                 f"unsupported trace format {blob.get('format')!r}")
 
@@ -275,6 +316,10 @@ class TraceState:
             self.jobs[jid] = rec
         self.producers = {h: list(v)
                           for h, v in blob["producers"].items()}
+        # format-1 blobs predate hit counts: eviction degrades to legacy
+        # oldest-first until new dedup edges accrue hits
+        self.producer_hits = {h: int(n) for h, n
+                              in blob.get("producer_hits", {}).items()}
         self.pending = {h: [list(p) for p in v]
                         for h, v in blob["pending"].items()}
         # our caps, not the writer's: re-enforce like every other trim

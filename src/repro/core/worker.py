@@ -128,10 +128,12 @@ class Worker:
         self.backend = backend
         self.idle_since: float | None = None
         self.served_execs: set[str] = set()      # H_execs this lane is hot for
+        self._queued = 0                         # invariant: sum(len(q) for q)
 
     # -- admission -----------------------------------------------------------
     def queued_slices(self) -> int:
-        return sum(len(q) for q in self.queues.values()) + (1 if self.current else 0)
+        # O(1): the scheduler polls this per candidate per round
+        return self._queued + (1 if self.current else 0)
 
     def can_admit(self) -> bool:
         return (self.state is WorkerState.ACTIVE
@@ -139,6 +141,7 @@ class Worker:
 
     def admit(self, batch: DispatchBatch) -> None:
         self.queues.setdefault(batch.h_exec, deque()).append(batch)
+        self._queued += 1
         self.served_execs.add(batch.h_exec)
         self.idle_since = None
 
@@ -148,6 +151,7 @@ class Worker:
             q = self.queues[h_exec]
             if q:
                 batch = q.popleft()
+                self._queued -= 1
                 if not q:
                     del self.queues[h_exec]
                 return batch
@@ -159,6 +163,7 @@ class Worker:
         for q in self.queues.values():
             out.extend(q)
         self.queues.clear()
+        self._queued = 0
         return out
 
     # -- locality ------------------------------------------------------------

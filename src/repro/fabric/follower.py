@@ -125,6 +125,9 @@ class FollowerFabric:
         svc.engine.result_index = {h: k
                                    for h, k in self.state.result_index.items()
                                    if old.get(h) == k or k in self.cas}
+        svc.engine.result_index_hits = {
+            h: n for h, n in self.state.result_index_hits.items()
+            if h in svc.engine.result_index}
 
     def _maybe_reload_config(self) -> bool:
         """Adopt operator-document changes (quota weights, retention) the

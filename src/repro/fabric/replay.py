@@ -35,7 +35,9 @@ FEED_KINDS = {"workflow_submitted", "op_ready", "dedup_hit", "op_completed",
 #: v2: retention-trimmed folds (terminal-job eviction order + feed
 #: truncation watermarks travel with the snapshot)
 #: v3: trace fold state + archived-job tombstones travel with the snapshot
-SNAPSHOT_FORMAT = 3
+#: v4: result-index dedup hit counts travel with the snapshot (the
+#: LFU/recency eviction hybrid needs them to stay live/replay-identical)
+SNAPSHOT_FORMAT = 4
 
 #: kind of the synthetic feed entry that marks windowed-away history; never
 #: published on the bus or journaled — ``FabricService.events`` synthesizes
@@ -62,11 +64,12 @@ class RetentionPolicy:
       * ``feed_window`` — cap each per-job feed at the newest K events; a
         read whose cursor predates the window start sees one synthetic
         ``feed_truncated`` marker (never silent loss). ``None`` = unbounded.
-      * ``max_result_index`` — keep the newest N result-index entries
-        (last-write order). The index is a dedup cache, so eviction only
-        costs re-execution — but without a cap the dedup-disabled baseline
-        policies accrete one artifact-rooting entry per job forever, and
-        the CAS can never shrink. ``None`` = unbounded.
+      * ``max_result_index`` — cap the result index at N entries, evicted
+        by an LFU/recency hybrid (least-dedup-hit among the stalest; exact
+        oldest-first when no entry has hits). The index is a dedup cache,
+        so eviction only costs re-execution — but without a cap the
+        dedup-disabled baseline policies accrete one artifact-rooting entry
+        per job forever, and the CAS can never shrink. ``None`` = unbounded.
 
     The rest schedule *durable* retention: the serve loop triggers
     ``compact`` + ``gc`` once the un-folded journal tail exceeds
@@ -145,17 +148,39 @@ def window_feed(feeds: dict[str, list[dict]], trunc: dict[str, list[int]],
     del feed[:drop]
 
 
-def trim_result_index(index: dict[str, str], cap: int | None) -> None:
-    """Keep the newest ``cap`` result-index entries (insertion order —
-    the fold re-inserts on every write so order is last-write). Evicting a
-    dedup entry is always safe: the worst case is re-executing the op.
-    Like the other trims, "keep the newest N" composes across a snapshot
-    cut, so trimmed restores equal trimmed replays. At steady state the
-    excess is one entry, so the islice keeps the per-event cost O(1)."""
+#: how many entries beyond the excess the LFU hybrid considers per trim —
+#: a small fixed window keeps the per-event cost O(1) while still letting a
+#: frequently-re-derived entry outlive younger never-hit ones
+_LFU_WINDOW = 8
+
+
+def trim_result_index(index: dict[str, str], cap: int | None,
+                      hits: dict[str, int] | None = None) -> None:
+    """Evict result-index entries beyond ``cap``.
+
+    Without ``hits`` (or with an all-zero window): keep the newest ``cap``
+    entries (insertion order — the fold re-inserts on every write AND on
+    every index dedup hit, so order is last-use recency). With ``hits``
+    (H_task -> dedup hit count): an LFU/recency hybrid — among the stalest
+    ``excess + _LFU_WINDOW`` entries, evict the least-hit first, breaking
+    ties oldest-first. Because the sort is stable, zero hit counts degrade
+    EXACTLY to the legacy oldest-first order. Evicting a dedup entry is
+    always safe: the worst case is re-executing the op. Live service and
+    replay fold call this at identical event-stream points with identical
+    (index order, hits) state, so trimmed restores equal trimmed replays.
+    At steady state the excess is one entry, so the cost stays O(1)."""
     if cap is None or len(index) <= cap:
         return
-    for h in list(islice(iter(index), len(index) - cap)):
+    excess = len(index) - cap
+    if not hits:
+        for h in list(islice(iter(index), excess)):
+            del index[h]
+        return
+    cand = list(islice(iter(index), excess + _LFU_WINDOW))
+    cand.sort(key=lambda h: hits.get(h, 0))     # stable: ties stay stalest-first
+    for h in cand[:excess]:
         del index[h]
+        hits.pop(h, None)
 
 #: JobRecord fields carried by a snapshot (``dag`` is live-only state)
 _RECORD_FIELDS = ("job_id", "tenant", "submitted", "submitted_at", "error",
@@ -211,6 +236,10 @@ class ReplayState:
         self.terminal: deque[str] = deque()
         self._terminal_set: set[str] = set()
         self.result_index: dict[str, str] = {}   # unfiltered: h_task -> key
+        #: h_task -> dedup hit count (DedupHit source="index" events) —
+        #: mirrors the engine's ``result_index_hits`` so LFU eviction picks
+        #: the same victims live and on replay
+        self.result_index_hits: dict[str, int] = {}
         #: replay-derived span trees (DESIGN.md §11) — windowed in lockstep
         #: with the feed window and the result-index cap
         self.trace = TraceState(
@@ -253,8 +282,17 @@ class ReplayState:
                     "input_hashes": list(e.input_hashes),
                     "h_task": e.h_task, "t_complete": e.time,
                 })
-            elif kind == "dedup_hit" and rec is not None:
-                rec.op_states[e.op] = OpState.COMPLETED.value
+            elif kind == "dedup_hit":
+                if rec is not None:
+                    rec.op_states[e.op] = OpState.COMPLETED.value
+                if e.source == "index" and e.h_task in self.result_index:
+                    # mirror the engine: hit bump + recency touch (the entry
+                    # may be absent under a tighter restore-time policy —
+                    # then the live hit simply has nothing to touch here)
+                    self.result_index_hits[e.h_task] = \
+                        self.result_index_hits.get(e.h_task, 0) + 1
+                    self.result_index[e.h_task] = \
+                        self.result_index.pop(e.h_task)
             elif kind == "workflow_completed" and rec is not None:
                 rec.completed_at = e.time
             elif kind == "workflow_cancelled":
@@ -276,7 +314,8 @@ class ReplayState:
             self.result_index.pop(e.h_task, None)
             self.result_index[e.h_task] = e.output_hash
             trim_result_index(self.result_index,
-                              self.retention.max_result_index)
+                              self.retention.max_result_index,
+                              self.result_index_hits)
         self.admission.on_event(e)
         self.trace.apply(e)
         if kind in FEED_KINDS:
@@ -330,7 +369,8 @@ class ReplayState:
                             retention.max_result_index)
         self._enforce_terminal_cap()
         trim_result_index(self.archived, retention.max_terminal_jobs)
-        trim_result_index(self.result_index, retention.max_result_index)
+        trim_result_index(self.result_index, retention.max_result_index,
+                          self.result_index_hits)
 
     # -------------------------------------------------------- snapshotting --
     def to_blob(self) -> dict:
@@ -346,6 +386,7 @@ class ReplayState:
                            for jid, v in self.feed_trunc.items()},
             "terminal": list(self.terminal),
             "result_index": dict(self.result_index),
+            "result_index_hits": dict(self.result_index_hits),
             "trace": self.trace.to_blob(),
             "archived": {jid: dict(v) for jid, v in self.archived.items()},
             "admission": self.admission.dump_state(),
@@ -367,9 +408,11 @@ class ReplayState:
         (submission) order — this only affects *which* records a tighter cap
         evicts from an old chain, never accounting. Format 1/2 snapshots
         predate the trace fold and archived tombstones: both load empty, so
-        traces simply start at the snapshot cut.
+        traces simply start at the snapshot cut. Format <= 3 snapshots
+        predate dedup hit counts: they load empty, so eviction degrades to
+        the legacy oldest-first order until new hits accrue.
         """
-        if blob.get("format") not in (1, 2, SNAPSHOT_FORMAT):
+        if blob.get("format") not in (1, 2, 3, SNAPSHOT_FORMAT):
             raise ValueError(
                 f"unsupported snapshot format {blob.get('format')!r}")
         self.events = blob["events"]
@@ -388,6 +431,8 @@ class ReplayState:
         self.terminal = deque(jid for jid in terminal if jid in self.jobs)
         self._terminal_set = set(self.terminal)
         self.result_index = dict(blob["result_index"])
+        self.result_index_hits = {
+            h: int(n) for h, n in blob.get("result_index_hits", {}).items()}
         self.trace.load(blob.get("trace"))
         self.archived = {jid: dict(v)
                          for jid, v in blob.get("archived", {}).items()}
@@ -397,7 +442,8 @@ class ReplayState:
                         self.retention.feed_window)
         self._enforce_terminal_cap()
         trim_result_index(self.archived, self.retention.max_terminal_jobs)
-        trim_result_index(self.result_index, self.retention.max_result_index)
+        trim_result_index(self.result_index, self.retention.max_result_index,
+                          self.result_index_hits)
 
 
 def snapshot_fold(admission_template: AdmissionController | None = None,

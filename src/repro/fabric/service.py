@@ -123,14 +123,18 @@ class FabricService:
         self._m_events = self.metrics.counter(
             "fabric_events_total", "Events published on the engine bus",
             labels=("kind", "tenant"))
+        #: bound counter handles per (kind, tenant) — label resolution is
+        #: per-event cost; both label values come from closed sets so this
+        #: cache is as bounded as the metric's own cardinality
+        self._m_events_fast: dict[tuple[str, str], object] = {}
         self._m_pump = self.metrics.histogram(
             "fabric_pump_seconds", "Wall-clock duration of one pump() call")
         self._m_gc = self.metrics.histogram(
             "fabric_cas_gc_seconds",
             "Wall-clock duration of CAS mark-and-sweep")
+        # one merged subscriber for feeds + trace + metrics: per-publish
+        # fan-out cost is per-subscriber, and these three share the event
         self.engine.bus.subscribe(self._on_event)
-        self.engine.bus.subscribe(self._on_trace_event)
-        self.engine.bus.subscribe(self._on_metrics_event)
         self.journal = journal
         if journal is not None:
             journal.metrics = self.metrics
@@ -178,30 +182,42 @@ class FabricService:
 
     # ------------------------------------------------------- event plane ----
     def _on_event(self, e: E.FabricEvent) -> None:
-        """Bus subscriber: route job-scoped events into per-job feeds,
-        windowed under the retention policy (same trim the replay fold
-        applies, so restored feeds match live ones)."""
-        if e.kind not in FEED_KINDS:
+        """Bus subscriber: feeds + trace fold + metrics in one pass.
+
+        Routes job-scoped events into per-job feeds (windowed under the
+        retention policy — the same trim the replay fold applies, so
+        restored feeds match live ones), feeds the trace fold (attribute
+        indirection so restore/follower sync can swap the fold object),
+        counts the event, and holds the live dedup index at its policy cap
+        at the same event-stream point the fold trims (group_completed),
+        so LFU eviction picks identical victims live and on replay."""
+        kind = e.kind
+        self._trace.apply(e)
+        # cardinality stays ≤ tenants × event kinds: both label values come
+        # from closed sets ("-" covers system events with no tenant)
+        tenant = e.__dict__.get("tenant") or "-"
+        counter = self._m_events_fast.get((kind, tenant))
+        if counter is None:
+            counter = self._m_events_fast[(kind, tenant)] = \
+                self._m_events.child(kind=kind, tenant=tenant)
+        counter.inc()
+        if kind == "group_completed":
+            # the engine inserted into the index just before emitting, so
+            # trimming here mirrors the fold's per-apply trim exactly
+            trim_result_index(self.engine.result_index,
+                              self.retention_policy.max_result_index,
+                              self.engine.result_index_hits)
+        if kind not in FEED_KINDS:
             return
-        dag_id = getattr(e, "dag_id", None)
+        dag_id = e.__dict__.get("dag_id")
         if dag_id in self.jobs:
             self._feeds.setdefault(dag_id, []).append(e.to_dict())
             window_feed(self._feeds, self._feed_trunc, dag_id,
                         self.retention_policy.feed_window)
-            if e.kind in TERMINAL_EVENT_KINDS \
+            if kind in TERMINAL_EVENT_KINDS \
                     and dag_id not in self._terminal_seen:
                 self._terminal_seen.add(dag_id)
                 self._terminal_order.append(dag_id)
-
-    def _on_trace_event(self, e: E.FabricEvent) -> None:
-        # indirection so restore/follower sync can swap the fold object
-        self._trace.apply(e)
-
-    def _on_metrics_event(self, e: E.FabricEvent) -> None:
-        # cardinality stays ≤ tenants × event kinds: both label values come
-        # from closed sets ("-" covers system events with no tenant)
-        self._m_events.inc(kind=e.kind,
-                           tenant=getattr(e, "tenant", None) or "-")
 
     def events(self, job_id: str, since: int = -1,
                limit: int | None = None) -> dict | None:
@@ -292,6 +308,11 @@ class FabricService:
             if key in self.engine.cas:
                 # dedup across restarts: the artifact survived in the CAS
                 self.engine.result_index[h_task] = key
+                hits = state.result_index_hits.get(h_task)
+                if hits:
+                    # hit counts follow surviving entries so LFU eviction
+                    # keeps ranking them after the restart
+                    self.engine.result_index_hits[h_task] = hits
         self.engine.bus.advance_past(state.max_seq)
         self.engine.now = max(self.engine.now,
                               max((r.completed_at or r.submitted_at
@@ -346,9 +367,10 @@ class FabricService:
         out = {"at": self.engine.now,
                "compact": self.compact(keep_segments=p.keep_segments)}
         # the live dedup cache roots its artifacts through gc — trim it to
-        # the policy cap (oldest-written first) or the store never shrinks
+        # the policy cap (LFU/recency hybrid) or the store never shrinks
         # under dedup-disabled baselines
-        trim_result_index(self.engine.result_index, p.max_result_index)
+        trim_result_index(self.engine.result_index, p.max_result_index,
+                          self.engine.result_index_hits)
         if p.gc_on_compact:
             out["gc"] = self.gc()
         self.auto_compactions += 1
@@ -462,7 +484,8 @@ class FabricService:
         evicted live cannot resurrect after a restart. Also holds the live
         dedup index at its policy cap."""
         trim_result_index(self.engine.result_index,
-                          self.retention_policy.max_result_index)
+                          self.retention_policy.max_result_index,
+                          self.engine.result_index_hits)
         cap = self.retention_policy.max_terminal_jobs
         if cap is None:
             return

@@ -26,7 +26,9 @@ traffic share one compilation path.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Mapping
+import json
+from collections.abc import Mapping   # abc fast-path isinstance (hot path)
+from typing import Any, Callable
 
 from repro.core.cost_model import RESOURCE_CLASSES
 from repro.core.dag import OperatorSpec, OpType, Ref, WorkflowDAG
@@ -34,6 +36,8 @@ from repro.core.dag import OperatorSpec, OpType, Ref, WorkflowDAG
 SPEC_VERSION = 1
 
 _OP_TYPES = {t.value for t in OpType}
+#: value -> member, skipping the Enum __call__ machinery per compiled op
+_OP_TYPE_MEMBERS = {t.value: t for t in OpType}
 _TRAINING = {"sft", "dpo", "ppo"}
 
 
@@ -163,42 +167,83 @@ def _as_literal(inp: Any) -> Any:
 # ---------------------------------------------------------------------------
 # compilation
 # ---------------------------------------------------------------------------
+#: compiled-plan cache: canonical doc JSON -> (tenant, metadata, op protos).
+#: A fabric sees the same few document *shapes* thousands of times (template
+#: renders, workload generators, resubmissions); validation and parsing are
+#: pure functions of the document content, so one content key skips both.
+#: Each hit still instantiates FRESH OperatorSpec/WorkflowDAG objects —
+#: engine-side state (params mutation, op states) never leaks across jobs.
+#: Only plans that produced a valid DAG are cached, so error paths always
+#: re-run full validation. Unserializable docs bypass the cache entirely.
+_PLAN_CACHE_MAX = 1024
+_PLAN_CACHE: dict[str, tuple] = {}
+
+
+def _plan_key(doc: Mapping) -> str | None:
+    try:
+        return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    except (TypeError, ValueError):
+        return None
+
+
+def _instantiate(plan: tuple, dag_id: str | None) -> WorkflowDAG:
+    tenant, metadata, protos = plan
+    ops = [OperatorSpec(
+        name=p[0], op_type=p[1], model_id=p[2], revision=p[3], adapters=p[4],
+        params=dict(p[5]), inputs=list(p[6]), resource_class=p[7],
+        tokens_in=p[8], tokens_out=p[9], train_tokens=p[10])
+        for p in protos]
+    return WorkflowDAG(ops, tenant=tenant, dag_id=dag_id, metadata=metadata,
+                       validate=False)
+
+
 def compile_spec(doc: Mapping, *, dag_id: str | None = None) -> WorkflowDAG:
     """Validate ``doc`` and compile it into a ``WorkflowDAG``.
 
     Raises ``SpecError`` on any problem (including dependency cycles, which
     surface from the DAG's own topological check).
     """
+    key = _plan_key(doc)
+    if key is not None:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            return _instantiate(plan, dag_id)
     errors = validate_spec(doc)
     if errors:
         raise SpecError(errors)
-    ops: list[OperatorSpec] = []
+    protos: list[tuple] = []
     for op in doc["ops"]:
-        op_type = OpType(op["op_type"])
+        op_type = _OP_TYPE_MEMBERS[op["op_type"]]
         model_id = op.get("model_id", "")
-        inputs = [Ref(r) if (r := _as_ref(i)) is not None else _as_literal(i)
-                  for i in op.get("inputs", [])]
-        ops.append(OperatorSpec(
-            name=op["name"], op_type=op_type, model_id=model_id,
-            revision=op.get("revision", "main"),
-            adapters=tuple(op.get("adapters", ())),
-            params=dict(op.get("params", {})),
-            inputs=inputs,
-            resource_class=op.get("resource_class") or default_resource_class(
+        inputs = tuple(
+            Ref(r) if (r := _as_ref(i)) is not None else _as_literal(i)
+            for i in op.get("inputs", []))
+        protos.append((
+            op["name"], op_type, model_id, op.get("revision", "main"),
+            tuple(op.get("adapters", ())), dict(op.get("params", {})),
+            inputs,
+            op.get("resource_class") or default_resource_class(
                 model_id, training=op["op_type"] in _TRAINING),
-            tokens_in=op.get("tokens_in", 256),
-            tokens_out=op.get("tokens_out", 128),
-            train_tokens=op.get("train_tokens", 0)))
+            op.get("tokens_in", 256), op.get("tokens_out", 128),
+            op.get("train_tokens", 0)))
     metadata = dict(doc.get("metadata", {}))
     if "name" in doc:
         metadata.setdefault("name", doc["name"])
     if "deadline_s" in doc:
         metadata["deadline_s"] = float(doc["deadline_s"])
+    plan = (doc.get("tenant", "default"), metadata, tuple(protos))
     try:
-        return WorkflowDAG(ops, tenant=doc.get("tenant", "default"),
-                           dag_id=dag_id, metadata=metadata)
+        dag = _instantiate(plan, dag_id)
+        # the plan's DAG validated on THIS instantiation (validate=False
+        # only applies to cache hits re-using a proven shape)
+        dag._validate()
     except ValueError as e:          # cycles, duplicate names
         raise SpecError([str(e)]) from e
+    if key is not None:
+        if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+            _PLAN_CACHE.clear()
+        _PLAN_CACHE[key] = plan
+    return dag
 
 
 # ---------------------------------------------------------------------------

@@ -78,6 +78,10 @@ class CrashingCAS:
         self._boundary("put")
         return self.inner.put(obj)
 
+    def put_sized(self, obj):
+        self._boundary("put")
+        return self.inner.put_sized(obj)
+
     def publish(self, data):
         self._boundary("put")
         return self.inner.publish(data)

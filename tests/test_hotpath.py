@@ -1,0 +1,255 @@
+"""Control-plane hot-path contracts (PR 7):
+
+  * single-serialization event fan-out — ``FabricEvent.to_dict`` returns one
+    shared dict per (event, seq), invalidated if the bus re-stamps the seq,
+    and ``event_from_dict`` inverts it;
+  * adaptive group commit — ``commit_latency_s`` coalesces bursts into one
+    segment under a wall-clock bound with a ``max_buffer`` hard cap, while
+    the default (None) keeps the legacy fixed-batch segment boundaries;
+  * flush writes each segment with exactly ONE store touch (``put_sized``),
+    and the reported bytes equal the stored size;
+  * the journal append histogram times buffer appends only — a segment
+    flush is observed by ``fabric_journal_flush_seconds``, never by
+    ``fabric_journal_append_seconds``;
+  * LFU/recency result-index eviction: dedup-hit counts keep re-derived
+    entries over merely-recent ones, degrade exactly to the legacy
+    oldest-first order when no entry has hits, stay live/replay-identical,
+    and travel with the snapshot (format 4) and the trace blob (format 2).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import events as E
+from repro.core.cas import CAS
+from repro.core.events import EventBus, event_from_dict
+from repro.core.journal import EventJournal
+from repro.core.metrics import MetricsRegistry
+from repro.core.tracing import TraceState
+from repro.fabric.replay import (ReplayState, RetentionPolicy,
+                                 SNAPSHOT_FORMAT, trim_result_index)
+
+from harness import build_service, spec_doc
+
+
+def _ev(i: int = 0) -> E.FabricEvent:
+    return E.OpReady(time=float(i), dag_id=f"d{i}", tenant="acme",
+                     op="gen", h_task=f"t{i}", h_exec=f"x{i}")
+
+
+# ---------------------------------------------------------------------------
+# single serialization
+# ---------------------------------------------------------------------------
+def test_to_dict_returns_shared_instance():
+    e = _ev()
+    assert e.to_dict() is e.to_dict()
+
+
+def test_to_dict_cache_invalidates_on_seq_restamp():
+    e = _ev()
+    d0 = e.to_dict()
+    assert d0["seq"] == e.seq
+    e.seq = 42                      # what EventBus.publish does
+    d1 = e.to_dict()
+    assert d1 is not d0
+    assert d1["seq"] == 42
+    assert e.to_dict() is d1
+
+
+def test_fanout_subscribers_share_one_dict():
+    bus = EventBus()
+    seen: list[dict] = []
+    for _ in range(3):
+        bus.subscribe(lambda ev, s=seen: s.append(ev.to_dict()))
+    bus.publish(_ev())
+    assert len(seen) == 3
+    assert seen[0] is seen[1] is seen[2]
+    assert seen[0]["seq"] == 0 and seen[0]["kind"] == "op_ready"
+
+
+def test_to_dict_matches_event_fields_and_roundtrips():
+    e = _ev(3)
+    e.seq = 7
+    d = e.to_dict()
+    assert d["kind"] == "op_ready" and d["dag_id"] == "d3" and d["seq"] == 7
+    back = event_from_dict(dict(d))
+    assert type(back) is E.OpReady
+    assert back.to_dict() == d
+    # unknown keys are dropped, not passed to the constructor
+    assert event_from_dict({**d, "bogus": 1}).to_dict() == d
+
+
+# ---------------------------------------------------------------------------
+# group commit + put_sized
+# ---------------------------------------------------------------------------
+def test_default_journal_keeps_fixed_batch_boundaries():
+    j = EventJournal(CAS(), batch_size=4)
+    for i in range(9):
+        j.on_event(_ev(i))
+    assert j.segments_written == 2 and j.pending == 1
+
+
+def test_group_commit_max_buffer_cap():
+    j = EventJournal(CAS(), batch_size=4, commit_latency_s=60.0,
+                     max_buffer=8)
+    for i in range(20):
+        j.on_event(_ev(i))
+    # the latency bound never expires; only the hard cap cuts segments —
+    # bursts coalesce into 8-event segments despite batch_size=4
+    assert j.segments_written == 2 and j.pending == 4
+
+
+def test_group_commit_zero_latency_flushes_every_event():
+    j = EventJournal(CAS(), commit_latency_s=0.0)
+    for i in range(5):
+        j.on_event(_ev(i))
+    assert j.segments_written == 5 and j.pending == 0
+
+
+def test_group_commit_latency_bound():
+    j = EventJournal(CAS(), commit_latency_s=0.05, max_buffer=1000)
+    for i in range(3):
+        j.on_event(_ev(i))
+    assert j.segments_written == 0 and j.pending == 3
+    time.sleep(0.06)
+    j.on_event(_ev(3))              # buffer age exceeded the bound
+    assert j.segments_written == 1 and j.pending == 0
+
+
+class _CountingCAS(CAS):
+    def __init__(self):
+        super().__init__()
+        self.size_of_calls = 0
+
+    def size_of(self, key):
+        self.size_of_calls += 1
+        return super().size_of(key)
+
+
+def test_flush_touches_store_once_per_segment():
+    cas = _CountingCAS()
+    j = EventJournal(cas, batch_size=2)
+    for i in range(6):
+        j.on_event(_ev(i))
+    assert j.segments_written == 3
+    # put_sized reports the stored size at write time: no stat-after-put
+    assert cas.size_of_calls == 0
+    assert j.bytes_flushed == sum(
+        cas.size_of(k) for k in cas.keys())
+
+
+def test_append_histogram_excludes_flush():
+    reg = MetricsRegistry()
+    j = EventJournal(CAS(), batch_size=3)
+    j.metrics = reg
+    for i in range(7):
+        j.on_event(_ev(i))
+    text = reg.render()
+    assert 'fabric_journal_append_seconds_count 7' in text
+    assert 'fabric_journal_flush_seconds_count 2' in text
+
+
+# ---------------------------------------------------------------------------
+# LFU/recency eviction
+# ---------------------------------------------------------------------------
+def _index(n: int) -> dict[str, str]:
+    return {f"t{i}": f"k{i}" for i in range(n)}
+
+
+def test_trim_without_hits_is_legacy_oldest_first():
+    a, b = _index(6), _index(6)
+    trim_result_index(a, 4)
+    trim_result_index(b, 4, hits={})
+    assert a == b == {f"t{i}": f"k{i}" for i in range(2, 6)}
+
+
+def test_trim_all_zero_hits_degrades_to_legacy():
+    a, b = _index(6), _index(6)
+    trim_result_index(a, 3)
+    trim_result_index(b, 3, hits={f"t{i}": 0 for i in range(6)})
+    assert list(a) == list(b)
+
+
+def test_trim_keeps_frequently_hit_over_merely_recent():
+    idx = _index(6)
+    hits = {"t0": 5, "t1": 2}
+    trim_result_index(idx, 4, hits)
+    # t2/t3 (stale, zero hits) go; the hit entries survive despite their age
+    assert list(idx) == ["t0", "t1", "t4", "t5"]
+    assert hits == {"t0": 5, "t1": 2}
+
+
+def test_trim_pops_hits_of_evicted_entries():
+    idx = _index(4)
+    hits = {"t0": 1, "t1": 3, "t2": 2}
+    trim_result_index(idx, 1, hits)            # evict t3 (0), t0 (1), t2 (2)
+    assert list(idx) == ["t1"]
+    assert hits == {"t1": 3}                   # evicted entries' hits popped
+
+
+def test_dedup_hits_keep_index_entry_live_and_on_replay():
+    """Submitting the same spec repeatedly under a tiny index cap: the hit
+    counts must keep the re-derived entries resident, and the engine's
+    (index, hits) state must equal the replay fold's at every point."""
+    retention = RetentionPolicy(max_result_index=3)
+    svc = build_service(CAS(), retention=retention)
+    for k in range(4):                       # 4 distinct specs, 2 ops each
+        svc.submit(spec_doc("acme", f"hot{k % 2}"))
+        svc.run_until_idle()
+    # re-derivations: every resubmission is a pure index hit
+    for _ in range(3):
+        svc.submit(spec_doc("acme", "hot0"))
+        svc.run_until_idle()
+    assert sum(svc.engine.result_index_hits.values()) > 0
+    svc.journal.flush()
+    state = ReplayState(retention=retention)
+    base = svc.journal.base_state()
+    if base is not None:
+        state.load(base)
+    for e in svc.journal.replay():
+        state.apply(e)
+    assert state.result_index == svc.engine.result_index
+    assert state.result_index_hits == svc.engine.result_index_hits
+    assert len(svc.engine.result_index) <= 3
+
+
+def test_snapshot_format4_roundtrips_hits():
+    state = ReplayState(retention=RetentionPolicy(max_result_index=8))
+    state.result_index = _index(3)
+    state.result_index_hits = {"t1": 4}
+    blob = state.to_blob()
+    assert blob["format"] == SNAPSHOT_FORMAT == 4
+    fresh = ReplayState(retention=RetentionPolicy(max_result_index=8))
+    fresh.load(blob)
+    assert fresh.result_index_hits == {"t1": 4}
+    # pre-v4 snapshots load with empty hit counts
+    legacy = dict(blob, format=3)
+    legacy.pop("result_index_hits")
+    fresh2 = ReplayState()
+    fresh2.load(legacy)
+    assert fresh2.result_index_hits == {}
+
+
+def test_trace_producer_hits_follow_same_policy():
+    t = TraceState(max_producers=2)
+    for i in range(2):
+        t.apply(E.GroupCompleted(
+            time=float(i), h_task=f"t{i}", h_exec="x", output_hash=f"o{i}",
+            worker="w0", consumers=((f"d{i}", "op", "acme"),), seq=i))
+    # a dedup edge resolves through t0's producer: hit + recency touch
+    t.apply(E.WorkflowSubmitted(time=1.5, dag_id="d9", tenant="acme",
+                                ops=("op",), seq=2))
+    t.apply(E.DedupHit(time=2.0, dag_id="d9", tenant="acme", op="op",
+                       h_task="t0", source="index", seq=3))
+    assert t.producer_hits == {"t0": 1}
+    assert list(t.producers) == ["t1", "t0"]          # touched to newest
+    t.apply(E.GroupCompleted(
+        time=3.0, h_task="t2", h_exec="x", output_hash="o2",
+        worker="w0", consumers=(("d2", "op", "acme"),), seq=3))
+    # cap 2: the zero-hit t1 is evicted, the hit-carrying t0 survives
+    assert set(t.producers) == {"t0", "t2"}
+    blob = t.to_blob()
+    assert blob["format"] == 2 and blob["producer_hits"] == {"t0": 1}
+    fresh = TraceState(max_producers=2)
+    fresh.load(blob)
+    assert fresh.producer_hits == {"t0": 1}

@@ -1,0 +1,209 @@
+"""Differential tests: the indexed FlowMeshScheduler.schedule must produce
+proposal sequences IDENTICAL to the retained naive oracle
+(``schedule_reference``) — same (worker, bucket, groups) picks in the same
+order with bit-equal utilities — over randomized pools, fleets, warm state,
+and slot-exhaustion orders.
+
+The scenario space is driven by one integer seed so the same generator
+serves both the always-running seeded sweep and the hypothesis property
+(hypothesis is optional in this environment; when present it explores and
+shrinks seeds far beyond the fixed sweep).
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core.cost_model import DEVICE_CLASSES, MODEL_SIZES
+from repro.core.dag import OpType, OperatorSpec
+from repro.core.scheduler import (FlowMeshScheduler, _EXEC_CACHE,
+                                  estimate_exec, _estimate_cached)
+from repro.core.worker import DispatchBatch, ExecutionGroup, Worker, WorkerState
+
+_GPU_OPS = [OpType.GENERATE, OpType.SCORE, OpType.EVAL,
+            OpType.SFT, OpType.DPO, OpType.PPO]
+_CPU_OPS = [OpType.TOOL, OpType.DATA_PREP, OpType.AGGREGATE]
+_MODELS = sorted(MODEL_SIZES)
+_DEVS = sorted(DEVICE_CLASSES)
+
+
+def _spec(rng: random.Random, i: int) -> OperatorSpec:
+    if rng.random() < 0.25:
+        op = rng.choice(_CPU_OPS)
+        model, rc = "", "cpu"
+    else:
+        op = rng.choice(_GPU_OPS)
+        model = rng.choice(_MODELS)
+        rc = rng.choice(["gpu.small", "gpu.medium", "cpu"])
+    params: dict = {}
+    if rng.random() < 0.5:
+        params["max_batch"] = rng.randint(1, 24)
+    if op in (OpType.SFT, OpType.DPO, OpType.PPO) and rng.random() < 0.5:
+        params["lora"] = rng.random() < 0.5
+    if rng.random() < 0.2:
+        params["min_vram_gb"] = rng.choice([4.0, 16.0, 48.0, 200.0])
+    if rng.random() < 0.15:
+        params["affinity"] = tuple(rng.sample(_DEVS, rng.randint(1, 2)))
+    if rng.random() < 0.15:
+        params["anti_affinity"] = tuple(rng.sample(_DEVS, 1))
+    return OperatorSpec(
+        name=f"op{i}", op_type=op, model_id=model, params=params,
+        resource_class=rc,
+        tokens_in=rng.choice([64, 256, 1024]),
+        tokens_out=rng.choice([16, 128, 512]),
+        train_tokens=rng.choice([0, 2048, 65536]))
+
+
+def _scenario(seed: int):
+    """One random (pending, workers) pair plus pre-warmed fleet state."""
+    rng = random.Random(seed)
+    n_buckets = rng.randint(0, 10)
+    pending: dict[str, list[ExecutionGroup]] = {}
+    all_hashes: list[str] = []
+    for i in range(n_buckets):
+        spec = _spec(rng, i)
+        hx = spec.h_exec()
+        groups = []
+        for j in range(rng.randint(1, 30)):
+            ih = tuple(f"h{seed}-{i}-{j}-{k}" for k in range(rng.randint(0, 3)))
+            all_hashes.extend(ih)
+            groups.append(ExecutionGroup(
+                h_task=f"t{i}-{j}", h_exec=hx, spec=spec, input_hashes=ih,
+                ready_at=float(j)))
+        pending[hx] = groups
+    workers = []
+    for i in range(rng.randint(0, 5)):
+        dev = DEVICE_CLASSES[rng.choice(_DEVS)]
+        w = Worker(f"w{i}", dev, now=0.0)
+        w.state = (WorkerState.ACTIVE if rng.random() < 0.9
+                   else rng.choice([WorkerState.PROVISIONING,
+                                    WorkerState.DRAINING]))
+        # warm state: resident models, artifact cache, hot lanes
+        for hx, groups in pending.items():
+            spec = groups[0].spec
+            if spec.model_id and rng.random() < 0.4:
+                w.make_resident(spec.h_model, spec.model_id)
+            if rng.random() < 0.3:
+                w.served_execs.add(hx)
+        if all_hashes:
+            w.local_cache.update(
+                rng.sample(all_hashes,
+                           rng.randint(0, min(20, len(all_hashes)))))
+        # pre-consume slots so rounds start at varying remaining capacity
+        for _ in range(rng.randint(0, 2)):
+            w.admit(DispatchBatch(batch_id=-1, h_exec="warmup", groups=[],
+                                  worker_id=w.worker_id, admitted_at=0.0))
+        workers.append(w)
+    return pending, workers
+
+
+def _assert_identical(seed: int) -> None:
+    pending, workers = _scenario(seed)
+    sched = FlowMeshScheduler(
+        w_t=random.Random(seed ^ 0xBEEF).choice([1.0, 2.0]),
+        w_c=random.Random(seed ^ 0xCAFE).choice([0.0, 0.5, 2.0]),
+        w_l=0.5)
+    ref = sched.schedule_reference(
+        {h: list(gs) for h, gs in pending.items()}, workers, 0.0)
+    idx = sched.schedule(
+        {h: list(gs) for h, gs in pending.items()}, workers, 0.0)
+    assert len(idx) == len(ref), f"seed {seed}: {len(idx)} != {len(ref)}"
+    for n, (a, b) in enumerate(zip(ref, idx)):
+        assert b.worker.worker_id == a.worker.worker_id, (seed, n)
+        assert b.h_exec == a.h_exec, (seed, n)
+        assert b.utility == a.utility, (seed, n)   # bit-equal, not approx
+        assert [id(g) for g in b.groups] == [id(g) for g in a.groups], (seed, n)
+        assert b.speculative == a.speculative
+
+
+def test_differential_seeded_sweep():
+    """Always-on deterministic sweep (hypothesis is optional here)."""
+    for seed in range(300):
+        _assert_identical(seed)
+
+
+def test_differential_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    given, settings, st = hyp.given, hyp.settings, hyp.strategies
+
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    @settings(max_examples=200, deadline=None)
+    def prop(seed):
+        _assert_identical(seed)
+
+    prop()
+
+
+def test_slot_exhaustion_order():
+    """More buckets than total fleet slots: the round must stop exactly when
+    capacity runs out, picking the same winners in the same order."""
+    for seed in (7, 42, 1337):
+        pending, _ = _scenario(seed)
+        if not pending:
+            continue
+        dev = DEVICE_CLASSES["rtx4090-48g"]
+        w = Worker("only", dev, now=0.0)
+        w.state = WorkerState.ACTIVE
+        sched = FlowMeshScheduler()
+        ref = sched.schedule_reference(
+            {h: list(gs) for h, gs in pending.items()}, [w], 0.0)
+        idx = sched.schedule(
+            {h: list(gs) for h, gs in pending.items()}, [w], 0.0)
+        assert [(p.h_exec, p.utility) for p in idx] \
+            == [(p.h_exec, p.utility) for p in ref]
+        assert len(idx) <= w.MAX_QUEUED_SLICES
+
+
+def test_subclass_override_falls_back_to_reference():
+    """A policy subclass that changes the objective must bypass the index
+    (whose hoisted arithmetic mirrors the stock Eq. 1 only)."""
+    class Inverted(FlowMeshScheduler):
+        def utility(self, spec, groups, w):
+            return -super().utility(spec, groups, w)
+
+    pending, workers = _scenario(11)
+    sched = Inverted()
+    ref = sched.schedule_reference(
+        {h: list(gs) for h, gs in pending.items()}, workers, 0.0)
+    idx = sched.schedule(
+        {h: list(gs) for h, gs in pending.items()}, workers, 0.0)
+    assert [(p.h_exec, p.utility) for p in idx] \
+        == [(p.h_exec, p.utility) for p in ref]
+
+
+def test_estimate_cache_is_transparent():
+    """Memoized estimates return the exact floats of the uncached call."""
+    _EXEC_CACHE.clear()
+    spec = OperatorSpec(name="g", op_type=OpType.GENERATE,
+                        model_id="llama-3.2-1b")
+    dev = DEVICE_CLASSES["h100-nvl-94g"]
+    for hot in (False, True):
+        for batch in (1, 8, 24):
+            assert _estimate_cached(spec, batch, dev, hot) \
+                == estimate_exec(spec, batch, dev, hot=hot)
+            # second call hits the cache; must be identical, not just close
+            assert _estimate_cached(spec, batch, dev, hot) \
+                == estimate_exec(spec, batch, dev, hot=hot)
+
+
+def test_worker_queued_counter_invariant():
+    """The O(1) queued-slices counter tracks the queue contents exactly."""
+    w = Worker("w", DEVICE_CLASSES["rtx4090-24g"], now=0.0)
+    w.state = WorkerState.ACTIVE
+
+    def truth():
+        return sum(len(q) for q in w.queues.values()) \
+            + (1 if w.current else 0)
+
+    rng = random.Random(3)
+    for step in range(200):
+        roll = rng.random()
+        if roll < 0.5:
+            w.admit(DispatchBatch(batch_id=step, h_exec=f"x{rng.randint(0, 3)}",
+                                  groups=[], worker_id="w", admitted_at=0.0))
+        elif roll < 0.8:
+            w.next_batch()
+        else:
+            w.drain()
+        assert w.queued_slices() == truth(), step
