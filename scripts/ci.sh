@@ -13,6 +13,10 @@
 #   compaction   DiskCAS journal fold + GC reclamation proof
 #   failover     serve -> follow -> kill -9 -> promote; byte-equal /jobs,
 #                zombie append fenced
+#   workers      serve --remote-workers + 2 worker processes over HTTP
+#                long-poll; kill -9 the lessee mid-batch -> lease expiry
+#                requeues via GroupRequeued, job completes on the survivor,
+#                follower trace byte-identical
 #   bench        fabric_throughput.py scoreboard -> BENCH_fabric.json
 #                (timed but non-gating: a slow host must not fail CI)
 #   hygiene      git tree still clean (nothing generated into the repo)
@@ -280,6 +284,127 @@ PY
     wait "$follower_pid" 2>/dev/null || true
 }
 
+stage_workers() {
+    # the out-of-process data plane end to end (DESIGN.md §13): a primary
+    # served with --remote-workers, a follower tailing the same journal,
+    # and two real worker processes leasing batches over HTTP long-poll.
+    # kill -9 the worker holding the first lease mid-batch: the lease must
+    # lapse, the group must requeue through the journaled GroupRequeued
+    # path, and the job must complete on the survivor — with the follower's
+    # trace byte-identical to the primary's.
+    local dir="$ARTIFACTS/workers"
+    rm -rf "$dir" && mkdir -p "$dir"
+
+    python scripts/fabric_cli.py serve --port 0 --journal "$dir/cas" \
+        --remote-workers --lease-ttl 2 \
+        > "$ARTIFACTS/workers-primary.log" 2>&1 &
+    local primary_pid=$!
+    PIDS_TO_KILL+=("$primary_pid")
+    local purl
+    purl=$(wait_for_url "$ARTIFACTS/workers-primary.log")
+    SERVER_URLS+=("$purl")
+    echo "remote-worker primary up at $purl"
+
+    python scripts/fabric_cli.py follow --port 0 --journal "$dir/cas" \
+        > "$ARTIFACTS/workers-follower.log" 2>&1 &
+    local follower_pid=$!
+    PIDS_TO_KILL+=("$follower_pid")
+    local furl
+    furl=$(wait_for_url "$ARTIFACTS/workers-follower.log")
+    SERVER_URLS+=("$furl")
+
+    # --slow-ms holds each batch long enough for the kill to land while
+    # the lease is live (heartbeats keep renewing it until then)
+    python scripts/worker_main.py --url "$purl" --worker-id cw-a \
+        --device-class h100-nvl-94g --poll-s 1 --slow-ms 4000 \
+        > "$ARTIFACTS/worker-a.log" 2>&1 &
+    local wa_pid=$!
+    PIDS_TO_KILL+=("$wa_pid")
+    python scripts/worker_main.py --url "$purl" --worker-id cw-b \
+        --device-class h100-nvl-94g --poll-s 1 --slow-ms 4000 \
+        > "$ARTIFACTS/worker-b.log" 2>&1 &
+    local wb_pid=$!
+    PIDS_TO_KILL+=("$wb_pid")
+
+    python - "$purl" "$furl" "$dir" "cw-a=$wa_pid" "cw-b=$wb_pid" <<'PY'
+import json, os, signal, sys, time
+from repro.core.cas import DiskCAS
+from repro.core.journal import EventJournal
+from repro.fabric import RemoteAPI
+
+purl, furl, outdir = sys.argv[1:4]
+pids = dict(kv.split("=") for kv in sys.argv[4:])
+papi, fapi = RemoteAPI(purl, timeout_s=60), RemoteAPI(furl, timeout_s=60)
+
+def wait_for(what, fn, timeout_s=60.0):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        value = fn()
+        if value:
+            return value
+    raise SystemExit(f"timed out waiting for {what}")
+
+wait_for("both lanes registered", lambda: len(
+    papi.handle("GET", "/admin/transport")[1].get("lanes", [])) == 2)
+
+code, job = papi.handle("POST", "/workflows",
+                        {"spec": {"tenant": "acme", "ops": [
+                            {"name": "gen", "op_type": "generate",
+                             "model_id": "llama-3.2-1b",
+                             "inputs": ["prompt:ci-workers"],
+                             "tokens_in": 256, "tokens_out": 64},
+                            {"name": "score", "op_type": "score",
+                             "model_id": "reward-1b",
+                             "inputs": [{"ref": "gen"}],
+                             "tokens_in": 256, "tokens_out": 8}]}})
+assert code == 201, (code, job)
+jid = job["job_id"]
+
+leases = wait_for("first lease granted", lambda: papi.handle(
+    "GET", "/admin/transport")[1].get("leases", []))
+victim = leases[0]["worker"]
+os.kill(int(pids[victim]), signal.SIGKILL)
+print(f"killed -9 lessee {victim} (pid {pids[victim]}) mid-batch")
+
+done = wait_for("job terminal", lambda: (
+    lambda d: d if d.get("status") in ("completed", "cancelled", "rejected")
+    else None)(papi.handle("GET", f"/jobs/{jid}")[1]))
+assert done["status"] == "completed", done
+print(f"{jid} completed on the surviving worker")
+
+# the recovery is journaled history, not in-memory state: the flushed
+# journal must narrate grant -> expiry -> requeue -> regrant
+kinds = wait_for("journal flush with requeue", lambda: (
+    lambda ks: ks if "group_requeued" in ks else None)(
+    [e.kind for e in EventJournal(DiskCAS(f"{outdir}/cas")).replay()]))
+for needed in ("lease_granted", "lease_expired", "worker_fail",
+               "group_requeued"):
+    assert needed in kinds, (needed, sorted(set(kinds)))
+assert kinds.count("lease_granted") >= 2   # regranted after the expiry
+print("journal narrates the lease failover:",
+      [k for k in kinds if k.startswith(("lease_", "group_", "worker_"))])
+
+# the tailing follower folds the same journal to the identical trace
+def follower_trace():
+    code, repl = fapi.handle("GET", "/admin/replication")
+    assert code == 200, repl
+    if not repl["caught_up"]:
+        return None
+    code, tr = fapi.handle("GET", f"/jobs/{jid}/trace")
+    return tr if code == 200 else None
+ftrace = wait_for("follower caught up", follower_trace)
+code, ptrace = papi.handle("GET", f"/jobs/{jid}/trace")
+assert code == 200
+got, want = (json.dumps(t, sort_keys=True) for t in (ftrace, ptrace))
+assert got == want, "follower trace diverged from primary"
+print(f"follower trace byte-identical ({len(got)} bytes)")
+PY
+
+    kill -9 "$wa_pid" "$wb_pid" 2>/dev/null || true
+    kill "$primary_pid" "$follower_pid" 2>/dev/null || true
+    wait "$primary_pid" "$follower_pid" 2>/dev/null || true
+}
+
 stage_bench() {
     # the BENCH trajectory (ROADMAP): end-to-end control-plane throughput,
     # APPENDED to the checked-in BENCH_fabric.json (machine-tagged, newest
@@ -318,6 +443,7 @@ stage smokes stage_smokes
 stage soak-quick stage_soak_quick
 stage compaction stage_compaction
 stage failover stage_failover
+stage workers stage_workers
 stage bench stage_bench
 stage hygiene stage_hygiene
 

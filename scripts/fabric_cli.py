@@ -79,6 +79,7 @@ import threading
 
 from repro.core.cas import DiskCAS
 from repro.core.journal import EventJournal
+from repro.core.transport import LeaseTransport
 from repro.fabric import (TERMINAL_STATUSES as _TERMINAL, FabricAPI,
                           FabricHTTPServer, FabricService, FollowerAPI,
                           FollowerFabric, RemoteAPI,
@@ -447,6 +448,16 @@ def main(argv: list[str] | None = None) -> int:
                    help="require this bearer token on mutating /admin/* "
                         "and quota routes (also honored before the "
                         "subcommand; unset = open)")
+    p.add_argument("--remote-workers", action="store_true",
+                   help="lease batches to out-of-process worker processes "
+                        "(scripts/worker_main.py) over POST /worker/* "
+                        "instead of executing in-process; no bootstrap "
+                        "lanes — workers join by registering")
+    p.add_argument("--lease-ttl", type=float, default=10.0,
+                   metavar="SECONDS",
+                   help="wall-clock lease TTL for remote workers; a lease "
+                        "not renewed within it requeues its batch "
+                        "(heartbeat interval is TTL/4)")
     serve_parser = p
 
     p = sub.add_parser("follow",
@@ -547,6 +558,9 @@ def main(argv: list[str] | None = None) -> int:
     if args.cmd == "metrics" and not args.url:
         ap.error("metrics reads a served fabric: pass --url")
 
+    transport = None
+    if getattr(args, "remote_workers", False):
+        transport = LeaseTransport(lease_ttl_s=args.lease_ttl)
     if args.url:
         api = RemoteAPI(args.url, token=args.admin_token)
     elif args.cmd in ("serve", "submit") and getattr(args, "journal", None):
@@ -556,7 +570,7 @@ def main(argv: list[str] | None = None) -> int:
         doc = load_operator_doc(cas)
         retention, source = _resolve_retention(args, doc)
         svc = FabricService(seed=args.seed, cas=cas, journal=journal,
-                            retention=retention)
+                            retention=retention, transport=transport)
         svc.retention_source = source
         # apply the persisted quota config BEFORE restoring: the replay
         # fold charges fair-share vtime under these weights, and the
@@ -582,7 +596,8 @@ def main(argv: list[str] | None = None) -> int:
         # no journal: nothing durable to compact, but in-memory retention
         # (job cap, feed window, index cap) still honors the flags
         retention, source = _resolve_retention(args, None)
-        svc = FabricService(seed=args.seed, retention=retention)
+        svc = FabricService(seed=args.seed, retention=retention,
+                            transport=transport)
         svc.retention_source = source
         api = FabricAPI(svc, admin_token=args.admin_token)
     return {"templates": cmd_templates, "validate": cmd_validate,

@@ -30,8 +30,9 @@ from .cost_model import DEVICE_CLASSES, model_vram_gb
 from .dag import OpState, OperatorSpec, OpType, TRAINING_TYPES, WorkflowDAG
 from .events import EventBus
 from .scheduler import (FlowMeshScheduler, SchedulerPolicy, estimate_exec,
-                        feasible, vram_needed_gb)
+                        feasible, next_batch_id, vram_needed_gb)
 from .telemetry import Telemetry
+from .transport import InProcessTransport, Transport
 from .worker import (DispatchBatch, ExecResult, ExecutionGroup, Executor,
                      Worker, WorkerState)
 
@@ -74,9 +75,18 @@ class FlowMeshEngine:
                  backend: Provisioner | None = None,
                  autoscaler: AutoscalerConfig | None = None,
                  config: EngineConfig | None = None,
-                 admission: Any | None = None) -> None:
+                 admission: Any | None = None,
+                 transport: Transport | None = None) -> None:
         self.policy = policy or FlowMeshScheduler()
         self.executor = executor
+        #: where dispatched batches execute (DESIGN.md §13). The default
+        #: in-process transport calls ``executor.execute`` synchronously —
+        #: byte-identical to the pre-transport engine; a remote transport
+        #: returns None from dispatch and calls back ``remote_batch_done``
+        #: / ``remote_lane_lost`` when the lessee reports (or vanishes)
+        self.transport = transport if transport is not None \
+            else InProcessTransport(executor)
+        self.transport.bind(self)
         # identity check, not truthiness: an *empty* CAS is falsy (len == 0),
         # and `cas or CAS()` would silently swap a fresh DiskCAS for an
         # in-memory store — artifacts (and the journal's replay contract)
@@ -115,6 +125,15 @@ class FlowMeshEngine:
         self._service_times: dict[str, list[float]] = {}   # h_exec -> durations
         self._unfinished = 0
         self._inflight_batches = 0                 # batch_done events queued
+        #: worker ids whose current batch is held by a remote lessee (no
+        #: batch_done queued yet) + matching counters: ``_awaiting_remote``
+        #: keeps ``step`` from spinning recurring timers up to the stall
+        #: limit while the only pending work runs on a wall clock, and
+        #: ``_real_events`` counts queued non-timer events so anything that
+        #: *can* make progress still does
+        self._remote_waiting: set[str] = set()
+        self._awaiting_remote = 0
+        self._real_events = 0
         self._armed: set[str] = set()              # recurring timers in-flight
         self._arrival_horizon = 0.0
         self._dispatch_pending = False
@@ -123,7 +142,12 @@ class FlowMeshEngine:
         self.cancelled: set[str] = set()           # dag_ids cancelled
 
     # ------------------------------------------------------------- events --
+    _TIMER_KINDS = frozenset({"heartbeat", "watchdog", "spec_check",
+                              "autoscale"})
+
     def _push(self, t: float, kind: str, payload: Any = None) -> None:
+        if kind not in self._TIMER_KINDS:
+            self._real_events += 1
         heapq.heappush(self._events, _Event(t, next(self._seq), kind, payload))
 
     def _emit(self, event: E.FabricEvent) -> E.FabricEvent:
@@ -197,7 +221,11 @@ class FlowMeshEngine:
     def _arm_recurring(self) -> None:
         self._arm("heartbeat")
         self._arm("watchdog")
-        self._arm("autoscale")
+        # with a remote data plane, capacity is real worker processes
+        # joining by registration — the autoscaler's simulated backend
+        # leases would park offers on lanes no process will ever serve
+        if not self.transport.remote:
+            self._arm("autoscale")
         if self.cfg.speculation:
             self._arm("spec_check")
 
@@ -225,6 +253,15 @@ class FlowMeshEngine:
         ev = self._events[0]
         if until is not None and ev.time > until:
             return False
+        if not self._real_events and (
+                self._awaiting_remote
+                or (self.transport.remote and self._unfinished)):
+            # every queued event is a recurring timer and the pending work
+            # waits on the wall clock — a remote lessee executing, an offer
+            # parked for a long-poll, or no lane registered yet. Hold
+            # virtual time still (progress arrives via the transport)
+            # instead of spinning timers up to the stall limit.
+            return False
         if (self._unfinished and
                 ev.time - self._last_progress > self.cfg.stall_limit_s):
             if not self.stalled:           # emit once per stall onset
@@ -232,6 +269,8 @@ class FlowMeshEngine:
                 self._emit(E.StallDetected(pending=self._unfinished))
             return False
         heapq.heappop(self._events)
+        if ev.kind not in self._TIMER_KINDS:
+            self._real_events -= 1
         self.now = max(self.now, ev.time)
         if ev.kind in self._RECURRING or ev.kind == "autoscale":
             self._armed.discard(ev.kind)
@@ -276,7 +315,42 @@ class FlowMeshEngine:
         self._last_progress = self.now
         self.stalled = False       # real progress clears a prior starvation
         self._emit(E.WorkflowCancelled(dag_id=dag_id, tenant=dag.tenant))
+        self._revoke_orphans()
         return True
+
+    def _revoke_orphans(self) -> None:
+        """After a cancel, take back *running* batches no consumer wants
+        anymore. Only a transport that can revoke does (the lease transport
+        fences the lessee; its late result is discarded) — the in-process
+        transport declines, keeping the historical run-to-completion
+        semantics and the billing fallback via ``dispatch_tenants``."""
+        for w in list(self.workers.values()):
+            batch = w.current
+            if batch is None or w.state is not WorkerState.ACTIVE:
+                continue
+            if any(g.done or g.consumers for g in batch.groups):
+                continue           # some group still has a live consumer
+            lease_id = self.transport.revoke(w)
+            if lease_id is None:
+                continue
+            if w.worker_id in self._remote_waiting:
+                self._remote_waiting.discard(w.worker_id)
+                self._awaiting_remote -= 1
+                self._inflight_batches -= 1
+            self._emit(E.LeaseRevoked(
+                worker=w.worker_id, batch_id=batch.batch_id,
+                lease_id=lease_id, h_exec=batch.h_exec))
+            for g in batch.groups:
+                g.running_on.discard(w.worker_id)
+                if not g.done and not g.running_on:
+                    # nobody left to serve: finish (not requeue) and release
+                    # the tenants' in-flight admission slots
+                    self.pool.finish(g)
+                    self._emit(E.GroupRequeued(
+                        h_task=g.h_task, h_exec=g.h_exec,
+                        worker=w.worker_id, requeued=False))
+            w.current = None
+            self._start_next(w)
 
     # ------------------------------------------------------------ handlers --
     def _on_arrival(self, dag: WorkflowDAG) -> None:
@@ -438,7 +512,8 @@ class FlowMeshEngine:
             return
         w = max(cands, key=lambda w: w.dev.flops * (2.0 if w.is_hot_for(
             g.spec.h_model) else 1.0))
-        batch = DispatchBatch(batch_id=-1, h_exec=g.h_exec, groups=[g],
+        batch = DispatchBatch(batch_id=next_batch_id(), h_exec=g.h_exec,
+                              groups=[g],
                               worker_id=w.worker_id, admitted_at=self.now,
                               speculative=True)
         g.running_on.add(w.worker_id)
@@ -539,9 +614,25 @@ class FlowMeshEngine:
             w.idle_since = self.now
             return
         w.current = batch
+        result = self.transport.dispatch(batch, w, self.cas)
+        if result is None:
+            # handed to a remote lessee: the lane stays busy (idle stays
+            # False through _inflight_batches) until the transport calls
+            # back remote_batch_done or remote_lane_lost
+            self._remote_waiting.add(w.worker_id)
+            self._awaiting_remote += 1
+            self._inflight_batches += 1
+            return
+        self._begin_batch(w, batch, result)
+
+    def _begin_batch(self, w: Worker, batch: DispatchBatch,
+                     result: ExecResult) -> None:
+        """Fold an execution result into the virtual timeline: BatchStarted
+        now, ``batch_done`` queued at now + duration. Identical for local
+        and remote execution, which is what keeps every dispatch-side
+        invariant (billing fallback, speculation, dedup fan-out, watchdog)
+        transport-independent."""
         spec = batch.groups[0].spec
-        hot = (not spec.model_id) or w.is_hot_for(spec.h_model)
-        result = self.executor.execute(batch, w, self.cas)
         dur = (result.duration_s + result.load_s) * w.perf_noise
         self._emit(E.BatchStarted(
             worker=w.worker_id, h_exec=batch.h_exec,
@@ -555,6 +646,63 @@ class FlowMeshEngine:
         w.busy_until = self.now + dur
         self._inflight_batches += 1
         self._push(w.busy_until, "batch_done", (w.worker_id, batch, result, dur))
+
+    # ---------------------------------------------- remote data plane -------
+    def register_remote_worker(self, worker_id: str, device_class: str, *,
+                               backend: str = "remote") -> str:
+        """A remote worker process joined the data plane. Returns the lane
+        id actually assigned — a crashed lane's name stays on its DEAD
+        record (its meter still owes cost at finalize), so a reincarnation
+        gets a suffixed id the client must adopt."""
+        dev = DEVICE_CLASSES[device_class]
+        wid = worker_id
+        n = 0
+        while True:
+            existing = self.workers.get(wid)
+            if existing is None:
+                break
+            if existing.state is WorkerState.ACTIVE \
+                    and existing.backend == backend:
+                return wid         # idempotent re-register of a live lane
+            n += 1
+            wid = f"{worker_id}~{n}"
+        w = Worker(wid, dev, now=self.now, perf_noise=1.0, backend=backend)
+        w.state = WorkerState.ACTIVE
+        w.idle_since = self.now
+        self.workers[wid] = w
+        # fresh capacity IS progress: pending work declared starved while
+        # the data plane was empty becomes servable again
+        self._last_progress = self.now
+        self.stalled = False
+        self._emit(E.WorkerLeased(worker_id=wid, device_class=device_class,
+                                  backend=backend, ready_at=self.now))
+        self._schedule_dispatch()
+        return wid
+
+    def remote_batch_done(self, w: Worker, batch: DispatchBatch,
+                          result: ExecResult) -> None:
+        """Transport callback: the lessee reported its result (already
+        fence-checked). Rejoins the virtual timeline exactly where an
+        in-process execute would have."""
+        if w.worker_id in self._remote_waiting:
+            self._remote_waiting.discard(w.worker_id)
+            self._awaiting_remote -= 1
+            self._inflight_batches -= 1
+        self._begin_batch(w, batch, result)
+
+    def remote_lane_lost(self, wid: str) -> None:
+        """Transport callback: a lease lapsed or a lane went silent. Same
+        crash path as the virtual watchdog — RUNNING work returns to READY
+        via ``GroupRequeued``, journaled like any other failure."""
+        w = self.workers.get(wid)
+        if w is None or w.state is WorkerState.DEAD:
+            return
+        if wid in self._remote_waiting:
+            self._remote_waiting.discard(wid)
+            self._awaiting_remote -= 1
+            self._inflight_batches -= 1
+        self._fail_worker(w)
+        self._schedule_dispatch()
 
     def _on_batch_done(self, payload) -> None:
         wid, batch, result, dur = payload

@@ -311,6 +311,52 @@ class WorkerLeased(FabricEvent):
 
 @register
 @dataclass(kw_only=True)
+class LeaseGranted(FabricEvent):
+    """A remote worker claimed an offered batch under a fenced lease
+    (lease transport only, DESIGN.md §13). ``epoch`` is the transport-wide
+    monotone grant counter — any heartbeat/complete carrying a superseded
+    lease id is refused, so a worker that vanished and came back cannot
+    publish a result for work the control plane already re-dispatched."""
+    kind: ClassVar[str] = "lease_granted"
+    worker: str
+    batch_id: int = 0
+    lease_id: str = ""
+    epoch: int = 0
+    h_exec: str = ""
+    n_groups: int = 1
+
+
+@register
+@dataclass(kw_only=True)
+class LeaseExpired(FabricEvent):
+    """A live lease lapsed without renewal: the holder is presumed dead and
+    the batch's groups return to READY through the ``GroupRequeued`` crash
+    path. ``held_s`` is wall-clock grant→lapse time (virtual ``time`` on
+    the event does not advance while the fabric waits on a remote)."""
+    kind: ClassVar[str] = "lease_expired"
+    worker: str
+    batch_id: int = 0
+    lease_id: str = ""
+    epoch: int = 0
+    held_s: float = 0.0
+
+
+@register
+@dataclass(kw_only=True)
+class LeaseRevoked(FabricEvent):
+    """The control plane took a placed batch back from a live lane —
+    cancellation finally reaching *running* work. The lessee observes the
+    revoke on its next heartbeat/complete; a result it still reports is
+    discarded under the fence."""
+    kind: ClassVar[str] = "lease_revoked"
+    worker: str
+    batch_id: int = 0
+    lease_id: str = ""
+    h_exec: str = ""
+
+
+@register
+@dataclass(kw_only=True)
 class WorkerFailed(FabricEvent):
     """Watchdog declared the worker dead; RUNNING work returned to READY."""
     kind: ClassVar[str] = "worker_fail"

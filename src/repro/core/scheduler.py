@@ -25,6 +25,13 @@ from .worker import DispatchBatch, ExecutionGroup, Worker
 _batch_seq = itertools.count()
 
 
+def next_batch_id() -> int:
+    """Allocate a globally-unique ``DispatchBatch`` id. The lease transport
+    keys leases on batch id, so *every* admitted batch — speculative
+    replicas included — must be distinguishable on the wire."""
+    return next(_batch_seq)
+
+
 # ---------------------------------------------------------------------------
 # Shared work estimator (also used by SimExecutor as simulation ground truth)
 # ---------------------------------------------------------------------------
@@ -124,7 +131,7 @@ class Proposal:
     speculative: bool = False
 
     def to_batch(self, now: float) -> DispatchBatch:
-        return DispatchBatch(batch_id=next(_batch_seq), h_exec=self.h_exec,
+        return DispatchBatch(batch_id=next_batch_id(), h_exec=self.h_exec,
                              groups=self.groups, worker_id=self.worker.worker_id,
                              admitted_at=now, speculative=self.speculative)
 

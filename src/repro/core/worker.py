@@ -9,7 +9,6 @@ plane continuously streams compatible slices of work.
 from __future__ import annotations
 
 import enum
-import itertools
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Any, Sequence
@@ -62,9 +61,6 @@ class ExecutionGroup:
         return len(self.consumers)
 
 
-_batch_ids = itertools.count()
-
-
 @dataclass
 class DispatchBatch:
     """One admitted slice: groups sharing H_exec, microbatched on a worker."""
@@ -86,25 +82,36 @@ class ResidentSet:
     def __init__(self, vram_gb: float) -> None:
         self.vram_gb = vram_gb
         self._models: OrderedDict[str, float] = OrderedDict()  # h_model -> GB
+        self._used = 0.0                     # running total of resident GB
 
     def has(self, h_model: str) -> bool:
         return h_model in self._models
 
     def touch(self, h_model: str, size_gb: float) -> list[str]:
-        """Make resident; returns evicted h_models."""
-        evicted = []
+        """Make resident; returns evicted h_models. A model larger than the
+        weight budget is refused outright — evicting everything would still
+        not fit, and admitting it anyway would push ``used_gb`` past the
+        budget and let ``G_loc`` reward an impossible placement."""
+        evicted: list[str] = []
         if h_model in self._models:
             self._models.move_to_end(h_model)
             return evicted
-        while self._models and self.used_gb + size_gb > self.vram_gb * 0.9:
-            old, _ = self._models.popitem(last=False)
+        budget = self.vram_gb * 0.9
+        if size_gb > budget:
+            return evicted
+        while self._models and self._used + size_gb > budget:
+            old, gb = self._models.popitem(last=False)
+            self._used -= gb
             evicted.append(old)
+        if not self._models:
+            self._used = 0.0                 # kill float drift at empty
         self._models[h_model] = size_gb
+        self._used += size_gb
         return evicted
 
     @property
     def used_gb(self) -> float:
-        return sum(self._models.values())
+        return self._used
 
 
 class Worker:
@@ -129,6 +136,9 @@ class Worker:
         self.idle_since: float | None = None
         self.served_execs: set[str] = set()      # H_execs this lane is hot for
         self._queued = 0                         # invariant: sum(len(q) for q)
+        #: round-robin cursor over ``queues`` — keys in service order; the
+        #: lane at the front serves next and rotates to the back
+        self._lane_order: deque[str] = deque()
 
     # -- admission -----------------------------------------------------------
     def queued_slices(self) -> int:
@@ -140,30 +150,45 @@ class Worker:
                 and self.queued_slices() < self.MAX_QUEUED_SLICES)
 
     def admit(self, batch: DispatchBatch) -> None:
-        self.queues.setdefault(batch.h_exec, deque()).append(batch)
+        q = self.queues.get(batch.h_exec)
+        if q is None:
+            q = self.queues[batch.h_exec] = deque()
+            self._lane_order.append(batch.h_exec)
+        q.append(batch)
         self._queued += 1
         self.served_execs.add(batch.h_exec)
         self.idle_since = None
 
     def next_batch(self) -> DispatchBatch | None:
-        # round-robin across lanes; FIFO within a lane
-        for h_exec in list(self.queues):
-            q = self.queues[h_exec]
-            if q:
-                batch = q.popleft()
-                self._queued -= 1
-                if not q:
-                    del self.queues[h_exec]
-                return batch
-        return None
+        # true round-robin across lanes (FIFO within a lane): the serving
+        # lane rotates to the back, so sustained load on one H_exec cannot
+        # starve later-admitted lanes
+        order = self._lane_order
+        if not order:
+            return None
+        h_exec = order[0]
+        order.rotate(-1)
+        q = self.queues[h_exec]
+        batch = q.popleft()
+        self._queued -= 1
+        if not q:
+            del self.queues[h_exec]
+            order.pop()                      # h_exec just rotated to the back
+        return batch
 
     def drain(self) -> list[DispatchBatch]:
-        """Remove all queued (not yet running) slices — used when retiring."""
+        """Remove all queued (not yet running) slices — used when retiring.
+        Lane-affinity state goes with them: a draining/retired lane is no
+        longer hot for anything, and stale ``served_execs`` / ``idle_since``
+        would keep it ranking in G_loc and the autoscaler's idle scan."""
         out: list[DispatchBatch] = []
         for q in self.queues.values():
             out.extend(q)
         self.queues.clear()
+        self._lane_order.clear()
         self._queued = 0
+        self.served_execs.clear()
+        self.idle_since = None
         return out
 
     # -- locality ------------------------------------------------------------

@@ -53,6 +53,7 @@ import hmac
 from typing import Any, Callable
 from urllib.parse import parse_qsl, urlsplit
 
+from ..core.transport import FencedLease, UnknownWorker
 from .admission import TenantQuota
 from .replay import RetentionPolicy
 from .service import FabricService
@@ -88,6 +89,15 @@ class FabricAPI:
             ("PUT", ("tenants", "{id}", "quota"), self._put_quota),
             ("GET", ("admin", "replication"), self._replication),
             ("POST", ("admin", "promote"), self._promote),
+            # worker data plane (lease transport only; 409 without one).
+            # Deliberately unauthenticated like the tenant surface — and
+            # the service-fenced gate above applies: workers must stop
+            # feeding results to a zombie primary
+            ("POST", ("worker", "register"), self._worker_register),
+            ("POST", ("worker", "lease"), self._worker_lease),
+            ("POST", ("worker", "heartbeat"), self._worker_heartbeat),
+            ("POST", ("worker", "complete"), self._worker_complete),
+            ("GET", ("admin", "transport"), self._transport_status),
         ]
 
     # ------------------------------------------------------------ routing --
@@ -368,6 +378,86 @@ class FabricAPI:
         self.service.set_quota(params["id"], quota)
         return 200, {"tenant": params["id"],
                      "quota": dataclasses.asdict(quota)}
+
+    # ------------------------------------------------- worker data plane ----
+    def _lease_transport(self):
+        """The engine's transport when it leases to remote workers, else
+        None (in-process transports have no worker-facing surface)."""
+        t = getattr(self.service.engine, "transport", None)
+        return t if getattr(t, "remote", False) else None
+
+    def _worker_register(self, params, query, body) -> tuple[int, Any]:
+        t = self._lease_transport()
+        if t is None:
+            return 409, {"error": "no_remote_transport",
+                         "detail": ["this fabric executes in-process; "
+                                    "serve with --remote-workers"]}
+        wid = body.get("worker_id")
+        cls = body.get("device_class")
+        if not isinstance(wid, str) or not wid or not isinstance(cls, str):
+            return 400, {"error": "invalid_body",
+                         "detail": ["'worker_id' and 'device_class' must be "
+                                    "non-empty strings"]}
+        try:
+            return 200, t.register(wid, cls)
+        except KeyError:
+            return 400, {"error": "unknown_device_class",
+                         "device_class": cls}
+
+    def _worker_lease(self, params, query, body) -> tuple[int, Any]:
+        t = self._lease_transport()
+        if t is None:
+            return 409, {"error": "no_remote_transport"}
+        wid = body.get("worker_id")
+        if not isinstance(wid, str) or not wid:
+            return 400, {"error": "invalid_body",
+                         "detail": ["'worker_id' must be a non-empty string"]}
+        try:
+            # None = no work yet; the HTTP shim long-polls this route
+            # (re-probing also refreshes lane liveness)
+            return 200, {"lease": t.poll(wid)}
+        except UnknownWorker:
+            return 410, {"error": "unknown_worker", "worker_id": wid,
+                         "detail": ["lane expired or was never registered; "
+                                    "re-register and adopt the returned id"]}
+
+    def _worker_heartbeat(self, params, query, body) -> tuple[int, Any]:
+        t = self._lease_transport()
+        if t is None:
+            return 409, {"error": "no_remote_transport"}
+        wid, lease_id = body.get("worker_id"), body.get("lease_id")
+        if not isinstance(wid, str) or not isinstance(lease_id, str):
+            return 400, {"error": "invalid_body",
+                         "detail": ["'worker_id'/'lease_id' required"]}
+        try:
+            return 200, t.heartbeat(wid, lease_id)
+        except FencedLease:
+            return 410, {"error": "fenced_lease", "lease_id": lease_id}
+
+    def _worker_complete(self, params, query, body) -> tuple[int, Any]:
+        t = self._lease_transport()
+        if t is None:
+            return 409, {"error": "no_remote_transport"}
+        wid, lease_id = body.get("worker_id"), body.get("lease_id")
+        result = body.get("result")
+        if not isinstance(wid, str) or not isinstance(lease_id, str) \
+                or not isinstance(result, dict):
+            return 400, {"error": "invalid_body",
+                         "detail": ["'worker_id', 'lease_id' and a 'result' "
+                                    "object are required"]}
+        try:
+            out = t.complete(wid, lease_id, result)
+        except FencedLease:
+            # the lease lapsed or was superseded: the result is discarded —
+            # its groups were requeued and may already run elsewhere
+            return 410, {"error": "fenced_lease", "lease_id": lease_id}
+        except (KeyError, TypeError, ValueError) as e:
+            # malformed result wire dict (missing field, bad base64)
+            return 400, {"error": "invalid_result", "detail": [repr(e)]}
+        return 200, out
+
+    def _transport_status(self, params, query, body) -> tuple[int, Any]:
+        return 200, self.service.engine.transport.status()
 
     # ----------------------------------------------------------- replication --
     def _replication(self, params, query, body) -> tuple[int, Any]:

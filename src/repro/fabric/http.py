@@ -158,22 +158,40 @@ class FabricHTTPServer:
                 return self.api.handle(method, path, body, headers)
 
     def _handle(self, method: str, path: str, body, headers=None):
-        """One request; events GETs honor ``wait_s`` by re-probing with the
-        lock released so the pump thread keeps making progress."""
+        """One request; events GETs and worker lease polls honor ``wait_s``
+        by re-probing with the lock released so the pump thread keeps
+        making progress."""
         url = urlsplit(path)
         query = dict(parse_qsl(url.query))
         wait_s = 0.0
+        lease_poll = False
         if method == "GET" and url.path.rstrip("/").endswith("/events"):
             try:
                 wait_s = min(float(query.get("wait_s", 0.0)), MAX_WAIT_S)
             except (TypeError, ValueError):
                 return 400, {"error": "invalid_query",
                              "detail": ["'wait_s' must be a number"]}
+        elif method == "POST" \
+                and url.path.rstrip("/").endswith("/worker/lease"):
+            # worker long-poll: hold until an offer is granted (each probe
+            # also refreshes the lane's liveness in the transport)
+            lease_poll = True
+            try:
+                wait_s = min(float((body or {}).get("wait_s", 0.0)),
+                             MAX_WAIT_S)
+            except (TypeError, ValueError):
+                return 400, {"error": "invalid_body",
+                             "detail": ["'wait_s' must be a number"]}
         deadline = time.monotonic() + wait_s
         while True:
             code, payload = self._handle_locked(method, path, body, headers)
+            if lease_poll:
+                if (code != 200 or not isinstance(payload, dict)
+                        or payload.get("lease") is not None
+                        or time.monotonic() >= deadline):
+                    return code, payload
             # non-dict payloads (the /metrics text) can't be a feed poll
-            if (code != 200 or not isinstance(payload, dict)
+            elif (code != 200 or not isinstance(payload, dict)
                     or payload.get("events")
                     or payload.get("status") in _TERMINAL
                     or time.monotonic() >= deadline):

@@ -49,6 +49,16 @@ TRUNCATED_KIND = "feed_truncated"
 TERMINAL_EVENT_KINDS = ("workflow_completed", "workflow_cancelled",
                         "job_rejected")
 
+#: lease-transport narration (DESIGN.md §13). Journaled like every other
+#: event — history must show *why* a group requeued — but deliberately
+#: excluded from job feeds, traces, and every replay fold: the engine-side
+#: consequences of a lease (requeue on lapse, finish on revoke) are already
+#: carried by ``GroupRequeued``/``WorkerFailed``, so folding lease events
+#: too would double-count, and a journal written by a lease fabric must
+#: restore byte-identically on a fabric that has never seen a lease.
+LEASE_KINDS = frozenset(("lease_granted", "lease_expired", "lease_revoked"))
+assert not (LEASE_KINDS & FEED_KINDS)
+
 
 @dataclass(frozen=True)
 class RetentionPolicy:

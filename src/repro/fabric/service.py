@@ -68,7 +68,8 @@ class FabricService:
                  device_classes: tuple[str, ...] = DEFAULT_DEVICE_CLASSES,
                  seed: int = 0,
                  retention: "RetentionPolicy | int | None" = None,
-                 cas=None, journal: EventJournal | None = None) -> None:
+                 cas=None, journal: EventJournal | None = None,
+                 transport=None) -> None:
         #: retention governs the fabric's footprint (DESIGN.md §9): terminal
         #: job records beyond ``max_terminal_jobs`` are evicted (usage
         #: accounting is unaffected), feeds are windowed to ``feed_window``
@@ -94,8 +95,12 @@ class FabricService:
             engine = FlowMeshEngine(
                 policy=policy, executor=executor or SimExecutor(seed=seed),
                 cas=cas, config=cfg or EngineConfig(seed=seed),
-                autoscaler=autoscaler, admission=self.admission)
-            engine.bootstrap_workers(list(device_classes))
+                autoscaler=autoscaler, admission=self.admission,
+                transport=transport)
+            # a remote transport has no bootstrap lanes: worker processes
+            # join the data plane by registering (DESIGN.md §13)
+            if not getattr(engine.transport, "remote", False):
+                engine.bootstrap_workers(list(device_classes))
         else:
             engine.attach_admission(self.admission)
         self.engine = engine
@@ -466,6 +471,9 @@ class FabricService:
                 if self.engine.idle or not self.engine.step(until):
                     break
                 steps += 1
+            # wall-clock liveness for remote lessees (lease expiry, silent
+            # lanes) — a no-op on the in-process transport
+            self.engine.transport.tick()
             self.maybe_retain()
         return steps
 

@@ -1,0 +1,527 @@
+"""Transport seam + lease lifecycle (DESIGN.md §13) and worker-lane fixes.
+
+Deterministic coverage drives a ``LeaseTransport`` with an injectable fake
+clock through the real ``FabricService`` (journaled), playing the worker
+process inline: register -> poll -> heartbeat -> complete, plus expiry and
+revoke paths — then proves the journal restores to the same observation
+(lease events are journaled but excluded from every fold). A final matrix
+spawns two real worker processes over HTTP long-poll and kill -9s one
+mid-batch: the job must complete on the survivor via ``GroupRequeued``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from harness import DEVICES, QUOTAS, observe, restore_fresh, spec_doc
+from repro.core.cas import CAS
+from repro.core.cost_model import DEVICE_CLASSES
+from repro.core.dag import OperatorSpec, OpType
+from repro.core.journal import EventJournal
+from repro.core.scheduler import next_batch_id
+from repro.core.simulator import SimExecutor
+from repro.core.transport import (FencedLease, InProcessTransport,
+                                  LeaseTransport, UnknownWorker,
+                                  batch_from_wire, batch_to_wire,
+                                  result_from_wire, result_to_wire,
+                                  spec_from_wire, spec_to_wire)
+from repro.core.worker import (DispatchBatch, ExecResult, ExecutionGroup,
+                               ResidentSet, Worker, WorkerState)
+from repro.fabric import FabricService
+from repro.fabric.api import FabricAPI
+from repro.fabric.http import FabricHTTPServer, RemoteAPI
+from repro.fabric.service import TERMINAL_STATUSES
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# satellite: ResidentSet budget + running-total accounting
+# ---------------------------------------------------------------------------
+class TestResidentSet:
+    def test_oversize_model_is_refused(self):
+        rs = ResidentSet(10.0)                     # weight budget: 9.0 GB
+        rs.touch("a", 4.0)
+        assert rs.touch("big", 9.5) == []          # NOT everything-evicted
+        assert not rs.has("big")
+        assert rs.has("a") and rs.used_gb == 4.0   # set untouched
+
+    def test_oversize_into_empty_set_stays_empty(self):
+        rs = ResidentSet(10.0)
+        assert rs.touch("big", 9.5) == []
+        assert rs.used_gb == 0.0 and not rs.has("big")
+
+    def test_lru_eviction_and_running_total(self):
+        rs = ResidentSet(10.0)
+        rs.touch("a", 4.0)
+        rs.touch("b", 4.0)
+        assert rs.used_gb == 8.0
+        assert rs.touch("c", 4.0) == ["a"]         # LRU out, total stays 8
+        assert rs.used_gb == 8.0
+        rs.touch("b", 4.0)                         # refresh b
+        assert rs.touch("d", 4.0) == ["c"]         # c is now LRU
+        assert rs.has("b") and rs.has("d")
+        # the running total always matches a fresh sum
+        assert rs.used_gb == sum(rs._models.values())
+
+    def test_used_never_exceeds_budget(self):
+        rs = ResidentSet(10.0)
+        for i in range(20):
+            rs.touch(f"m{i}", 2.5)
+            assert rs.used_gb <= 9.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# satellite: round-robin lane rotation + drain clears affinity state
+# ---------------------------------------------------------------------------
+def _shell(worker_id="w", device="rtx4090-24g", now=0.0):
+    w = Worker(worker_id, DEVICE_CLASSES[device], now=now)
+    w.state = WorkerState.ACTIVE
+    return w
+
+
+def _slice(h_exec, batch_id):
+    return DispatchBatch(batch_id=batch_id, h_exec=h_exec, groups=[],
+                         worker_id="w", admitted_at=0.0)
+
+
+class TestLaneRotation:
+    def test_round_robin_does_not_starve_later_lanes(self):
+        w = _shell()
+        for i, h in enumerate(("A", "A", "B", "B")):
+            w.admit(_slice(h, i))
+        served = [w.next_batch().h_exec for _ in range(4)]
+        # the old scan-from-first-key drained lane A completely first
+        assert served == ["A", "B", "A", "B"]
+        assert w.next_batch() is None and w.queued_slices() == 0
+
+    def test_emptied_lane_leaves_rotation(self):
+        w = _shell()
+        w.admit(_slice("A", 0))
+        w.admit(_slice("B", 1))
+        w.admit(_slice("B", 2))
+        assert [w.next_batch().batch_id for _ in range(3)] == [0, 1, 2]
+        assert not w.queues and not w._lane_order
+
+    def test_drain_clears_lane_affinity(self):
+        w = _shell()
+        w.admit(_slice("A", 0))
+        w.admit(_slice("B", 1))
+        w.idle_since = None
+        dropped = w.drain()
+        assert [b.batch_id for b in dropped] == [0, 1]
+        assert not w.queues and not w._lane_order
+        assert w.served_execs == set()      # a retired lane is hot for nothing
+        assert w.idle_since is None and w.queued_slices() == 0
+        # a drained worker can be re-admitted cleanly
+        w.admit(_slice("C", 2))
+        assert w.next_batch().batch_id == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: speculative replicas get globally-unique batch ids
+# ---------------------------------------------------------------------------
+def test_batch_ids_are_globally_unique():
+    ids = [next_batch_id() for _ in range(5)]
+    assert len(set(ids)) == 5
+    assert ids == sorted(ids)
+
+
+# ---------------------------------------------------------------------------
+# wire format round-trips
+# ---------------------------------------------------------------------------
+def _spec(name="gen"):
+    return OperatorSpec(name=name, op_type=OpType.GENERATE,
+                        model_id="llama-3.2-1b", adapters=("lora-x",),
+                        params={"temperature": 0.5}, inputs=["prompt:x"],
+                        tokens_in=128, tokens_out=16)
+
+
+class TestWireFormat:
+    def test_spec_round_trip_preserves_identity(self):
+        spec = _spec()
+        rt = spec_from_wire(spec_to_wire(spec))
+        assert rt.h_exec() == spec.h_exec()
+        assert rt.h_model == spec.h_model
+        assert rt.tokens_out == spec.tokens_out
+        assert rt.inputs == []          # identity travels on the group
+
+    def test_batch_round_trip(self):
+        spec = _spec()
+        g = ExecutionGroup(h_task="ht", h_exec=spec.h_exec(), spec=spec,
+                           input_hashes=("i1", "i2"))
+        batch = DispatchBatch(batch_id=7, h_exec=spec.h_exec(), groups=[g],
+                              worker_id="w9", admitted_at=1.5,
+                              speculative=True)
+        rt = batch_from_wire(json.loads(json.dumps(batch_to_wire(batch))))
+        assert (rt.batch_id, rt.worker_id, rt.admitted_at,
+                rt.speculative) == (7, "w9", 1.5, True)
+        assert rt.groups[0].h_task == "ht"
+        assert rt.groups[0].input_hashes == ("i1", "i2")
+        assert rt.groups[0].spec.h_exec() == spec.h_exec()
+
+    def test_result_round_trip(self):
+        r = ExecResult(outputs=[b"blob", "txt"], duration_s=1.25, load_s=0.5,
+                       flops=3e9, energy_j=None, failed=True,
+                       failure="resource_shortage")
+        rt = result_from_wire(json.loads(json.dumps(result_to_wire(r))))
+        assert rt.outputs == [b"blob", b"txt"]   # bytes both ways
+        assert (rt.duration_s, rt.load_s, rt.flops) == (1.25, 0.5, 3e9)
+        assert rt.energy_j is None
+        assert rt.failed and rt.failure == "resource_shortage"
+
+
+# ---------------------------------------------------------------------------
+# deterministic lease lifecycle (fake clock, worker played inline)
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def remote_service(*, ttl=10.0, clock=None):
+    cas = CAS()
+    transport = LeaseTransport(lease_ttl_s=ttl, clock=clock or FakeClock())
+    svc = FabricService(seed=7, cas=cas, device_classes=DEVICES,
+                        journal=EventJournal(cas, batch_size=3),
+                        transport=transport)
+    for tenant, quota in QUOTAS.items():
+        svc.set_quota(tenant, quota)
+    kinds: list[str] = []
+    svc.engine.bus.subscribe(lambda e: kinds.append(e.kind))
+    return svc, transport, cas, kinds
+
+
+def execute_lease(lease, shell):
+    """What scripts/worker_main.py does with a granted lease, inline."""
+    batch = batch_from_wire(lease["batch"])
+    result = SimExecutor(seed=0).execute(batch, shell, None)
+    spec = batch.groups[0].spec
+    if spec.model_id and not result.failed:
+        shell.make_resident(spec.h_model, spec.model_id)
+    return result_to_wire(result)
+
+
+def replay_view(svc):
+    """The journal-derived surface as one JSON string: everything
+    ``observe`` covers except the usage snapshot, whose latency/pool
+    counters live in process-local engine telemetry that a restore never
+    rebuilds (the established restore contract compares restored twins;
+    here we hold the stronger claim live-vs-restored on every journal-
+    folded surface)."""
+    o = observe(svc)
+    o.pop("usage")
+    return json.dumps(o, sort_keys=True, default=str)
+
+
+def drive_to_terminal(svc, transport, jid, wid, shell, *, rounds=20):
+    """Pump + serve leases on ``wid`` until the job goes terminal."""
+    for _ in range(rounds):
+        svc.pump()
+        if svc.job(jid)["status"] in TERMINAL_STATUSES:
+            return svc.job(jid)["status"]
+        lease = transport.poll(wid)
+        if lease is not None:
+            transport.complete(wid, lease["lease_id"],
+                               execute_lease(lease, shell))
+    raise AssertionError(f"job {jid} never went terminal: {svc.job(jid)}")
+
+
+class TestLeaseLifecycle:
+    def test_remote_service_skips_bootstrap_lanes(self):
+        svc, transport, _, _ = remote_service()
+        assert svc.engine.transport is transport
+        assert svc.engine.workers == {}     # lanes join by registration
+
+    def test_grant_heartbeat_renewal_complete_and_replay(self):
+        clock = FakeClock()
+        svc, t, cas, kinds = remote_service(ttl=10.0, clock=clock)
+        assert t.register("w1", "h100-nvl-94g")["worker_id"] == "w1"
+        jid = svc.submit(spec_doc("acme", "life"))["job_id"]
+        svc.pump()
+        assert "w1" in t.offers             # dispatch parked as an offer
+        lease = t.poll("w1")
+        assert lease is not None and "lease_granted" in kinds
+        assert lease["epoch"] == 1
+
+        # 8s in: still within TTL, tick keeps the lease
+        clock.advance(8.0)
+        t.tick()
+        assert "w1" in t.leases
+        assert t.heartbeat("w1", lease["lease_id"]) == {"ok": True,
+                                                        "revoked": False}
+        # 16s in: past the original deadline — only the renewal keeps it
+        clock.advance(8.0)
+        t.tick()
+        assert "w1" in t.leases and "lease_expired" not in kinds
+
+        shell = _shell("w1", "h100-nvl-94g")
+        out = t.complete("w1", lease["lease_id"], execute_lease(lease, shell))
+        assert out == {"ok": True, "revoked": False}
+        status = drive_to_terminal(svc, t, jid, "w1", shell)
+        assert status == "completed"
+        assert "group_requeued" not in kinds    # clean path: no requeues
+
+        # journal replay: a restored fabric reports the identical surface,
+        # byte for byte — lease events replay as no-ops in every fold
+        svc.journal.flush()
+        assert replay_view(svc) == replay_view(restore_fresh(cas))
+
+    def test_heartbeat_with_stale_lease_id_is_fenced(self):
+        svc, t, _, _ = remote_service()
+        t.register("w1", "h100-nvl-94g")
+        svc.submit(spec_doc("acme", "fence"))
+        svc.pump()
+        lease = t.poll("w1")
+        with pytest.raises(FencedLease):
+            t.heartbeat("w1", lease["lease_id"] + "/stale")
+
+    def test_poll_unregistered_worker_raises(self):
+        svc, t, _, _ = remote_service()
+        with pytest.raises(UnknownWorker):
+            t.poll("ghost")
+
+    def test_expiry_requeues_and_survivor_completes(self):
+        clock = FakeClock()
+        svc, t, cas, kinds = remote_service(ttl=5.0, clock=clock)
+        t.register("w1", "h100-nvl-94g")
+        jid = svc.submit(spec_doc("acme", "expire"))["job_id"]
+        svc.pump()
+        lease = t.poll("w1")
+        assert lease is not None
+
+        # the worker goes silent; one TTL later the lease lapses
+        clock.advance(5.1)
+        svc.pump()                          # pump drives transport.tick()
+        assert "lease_expired" in kinds
+        assert "worker_fail" in kinds     # same crash path as the watchdog
+        assert "group_requeued" in kinds
+        assert "w1" not in t.lanes and "w1" not in t.leases
+        # the fenced holder can neither renew nor publish its stale result
+        with pytest.raises(FencedLease):
+            t.heartbeat("w1", lease["lease_id"])
+        with pytest.raises(FencedLease):
+            t.complete("w1", lease["lease_id"], {"outputs": []})
+
+        # a replacement registers; the DEAD record keeps the old name
+        wid = t.register("w1", "h100-nvl-94g")["worker_id"]
+        assert wid == "w1~1"
+        status = drive_to_terminal(svc, t, jid, wid,
+                                   _shell(wid, "h100-nvl-94g"))
+        assert status == "completed"
+
+        svc.journal.flush()
+        assert replay_view(svc) == replay_view(restore_fresh(cas))
+
+    def test_silent_idle_lane_is_dropped(self):
+        clock = FakeClock()
+        svc, t, _, kinds = remote_service(ttl=2.0, clock=clock)
+        t.register("w1", "h100-nvl-94g")
+        clock.advance(3.1)                  # > lane_ttl (1.5 * ttl)
+        t.tick()
+        assert "w1" not in t.lanes
+        assert "lease_expired" not in kinds     # no lease was ever granted
+
+    def test_revoke_cancels_running_batch(self):
+        svc, t, _, kinds = remote_service()
+        t.register("w1", "h100-nvl-94g")
+        jid = svc.submit(spec_doc("acme", "revoke"))["job_id"]
+        svc.pump()
+        lease = t.poll("w1")
+        assert lease is not None
+
+        svc.cancel(jid)
+        assert "lease_revoked" in kinds
+        assert svc.job(jid)["status"] == "cancelled"
+        # the next heartbeat is the ack: the lease dies, the lane survives
+        assert t.heartbeat("w1", lease["lease_id"]) == {"ok": False,
+                                                        "revoked": True}
+        assert "w1" not in t.leases and "w1" in t.lanes
+
+        # the freed lane serves new work immediately
+        jid2 = svc.submit(spec_doc("acme", "after-revoke"))["job_id"]
+        status = drive_to_terminal(svc, t, jid2, "w1",
+                                   _shell("w1", "h100-nvl-94g"))
+        assert status == "completed"
+
+    def test_revoked_lease_result_is_discarded_on_complete(self):
+        svc, t, _, _ = remote_service()
+        t.register("w1", "h100-nvl-94g")
+        jid = svc.submit(spec_doc("acme", "revoke2"))["job_id"]
+        svc.pump()
+        lease = t.poll("w1")
+        svc.cancel(jid)
+        # worker missed the heartbeat ack and reports anyway: discarded
+        shell = _shell("w1", "h100-nvl-94g")
+        out = t.complete("w1", lease["lease_id"], execute_lease(lease, shell))
+        assert out == {"ok": False, "revoked": True}
+        assert svc.job(jid)["status"] == "cancelled"
+
+    def test_cancel_takes_back_unclaimed_offer(self):
+        svc, t, _, kinds = remote_service()
+        t.register("w1", "h100-nvl-94g")
+        jid = svc.submit(spec_doc("acme", "offer"))["job_id"]
+        svc.pump()
+        assert "w1" in t.offers
+        svc.cancel(jid)
+        assert "w1" not in t.offers         # never granted: just taken back
+        assert "lease_revoked" in kinds
+        assert t.poll("w1") is None
+        assert svc.job(jid)["status"] == "cancelled"
+
+    def test_poll_while_leased_means_worker_lost_state(self):
+        svc, t, _, kinds = remote_service()
+        t.register("w1", "h100-nvl-94g")
+        jid = svc.submit(spec_doc("acme", "amnesia"))["job_id"]
+        svc.pump()
+        assert t.poll("w1") is not None
+        # the process restarted without re-registering: fail the lane so the
+        # batch requeues, and force a fresh registration
+        with pytest.raises(UnknownWorker):
+            t.poll("w1")
+        svc.pump()
+        assert "group_requeued" in kinds
+        wid = t.register("w1", "h100-nvl-94g")["worker_id"]
+        status = drive_to_terminal(svc, t, jid, wid,
+                                   _shell(wid, "h100-nvl-94g"))
+        assert status == "completed"
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface: the worker endpoints refuse a non-remote fabric
+# ---------------------------------------------------------------------------
+class TestWorkerEndpoints:
+    def test_register_refused_without_remote_transport(self):
+        svc = FabricService(seed=7, cas=CAS(), device_classes=DEVICES)
+        assert isinstance(svc.engine.transport, InProcessTransport)
+        api = FabricAPI(svc)
+        code, out = api.handle("POST", "/worker/register",
+                               {"worker_id": "w1",
+                                "device_class": "h100-nvl-94g"})
+        assert code == 409 and out["error"] == "no_remote_transport"
+
+    def test_register_rejects_unknown_device_class(self):
+        svc, _, _, _ = remote_service()
+        code, out = FabricAPI(svc).handle(
+            "POST", "/worker/register",
+            {"worker_id": "w1", "device_class": "tpu-v9"})
+        assert code == 400 and out["error"] == "unknown_device_class"
+
+    def test_lease_poll_unknown_worker_is_410(self):
+        svc, _, _, _ = remote_service()
+        code, out = FabricAPI(svc).handle("POST", "/worker/lease",
+                                          {"worker_id": "ghost"})
+        assert code == 410 and out["error"] == "unknown_worker"
+
+    def test_in_process_transport_cannot_revoke(self):
+        svc = FabricService(seed=7, cas=CAS(), device_classes=DEVICES)
+        w = next(iter(svc.engine.workers.values()))
+        assert svc.engine.transport.revoke(w) is None
+
+
+# ---------------------------------------------------------------------------
+# two-worker kill -9 matrix over real HTTP long-poll
+# ---------------------------------------------------------------------------
+def _spawn_worker(url, wid, *, slow_ms=0.0):
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+    return subprocess.Popen(
+        [sys.executable, str(ROOT / "scripts" / "worker_main.py"),
+         "--url", url, "--worker-id", wid, "--device-class", "h100-nvl-94g",
+         "--poll-s", "1.0", "--slow-ms", str(slow_ms)],
+        env=env, cwd=str(ROOT),
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+
+
+def _wait(predicate, *, timeout_s=30.0, interval_s=0.05, what="condition"):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        value = predicate()
+        if value:
+            return value
+        time.sleep(interval_s)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+class TestKillMatrix:
+    def test_kill9_lessee_mid_batch_then_idle_survivor(self):
+        transport = LeaseTransport(lease_ttl_s=1.0)
+        cas = CAS()
+        svc = FabricService(seed=7, cas=cas, device_classes=DEVICES,
+                            journal=EventJournal(cas, batch_size=3),
+                            transport=transport)
+        for tenant, quota in QUOTAS.items():
+            svc.set_quota(tenant, quota)
+        kinds: list[str] = []
+        svc.engine.bus.subscribe(lambda e: kinds.append(e.kind))
+        server = FabricHTTPServer(FabricAPI(svc), auto_pump=True)
+        procs: dict[str, subprocess.Popen] = {}
+        try:
+            with server:
+                client = RemoteAPI(server.url, timeout_s=10.0)
+                # slow-ms holds each batch long enough for the kill to land
+                # mid-lease (heartbeats renew it until then)
+                procs["ka"] = _spawn_worker(server.url, "ka", slow_ms=2500)
+                procs["kb"] = _spawn_worker(server.url, "kb", slow_ms=2500)
+                _wait(lambda: len(client.handle(
+                    "GET", "/admin/transport")[1]["lanes"]) == 2,
+                    what="both lanes registered")
+
+                code, job = client.handle("POST", "/workflows",
+                                          {"spec": spec_doc("acme", "kill9")})
+                assert code == 201, job
+                jid = job["job_id"]
+
+                # case (a): kill -9 the worker holding the first lease
+                leases = _wait(lambda: client.handle(
+                    "GET", "/admin/transport")[1]["leases"],
+                    what="first lease granted")
+                victim = leases[0]["worker"]
+                os.kill(procs[victim].pid, signal.SIGKILL)
+                procs[victim].wait(timeout=5)
+
+                done = _wait(lambda: (lambda d: d if d["status"]
+                             in TERMINAL_STATUSES else None)(
+                             client.handle("GET", f"/jobs/{jid}")[1]),
+                             timeout_s=60.0, what="job terminal")
+                assert done["status"] == "completed"
+                # the dead lessee's batch came back via the journaled
+                # requeue path and reran on the survivor
+                assert "lease_expired" in kinds
+                assert "group_requeued" in kinds
+                assert "worker_fail" in kinds
+
+                # case (b): kill -9 the now-idle survivor — lane death only,
+                # nothing to requeue
+                survivor = next(w for w in procs if w != victim)
+                requeues = kinds.count("group_requeued")
+                os.kill(procs[survivor].pid, signal.SIGKILL)
+                procs[survivor].wait(timeout=5)
+                _wait(lambda: not client.handle(
+                    "GET", "/admin/transport")[1]["lanes"],
+                    what="idle lane expired")
+                assert kinds.count("group_requeued") == requeues
+
+                # the restored twin tells the same story as the primary
+                trace = client.handle("GET", f"/jobs/{jid}/trace")[1]
+            svc.journal.flush()
+            restored = restore_fresh(cas)
+            assert json.dumps(trace, sort_keys=True) \
+                == json.dumps(restored.trace(jid), sort_keys=True)
+            assert restored.job(jid)["status"] == "completed"
+        finally:
+            for p in procs.values():
+                if p.poll() is None:
+                    p.kill()
