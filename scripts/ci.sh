@@ -17,6 +17,10 @@
 #                long-poll; kill -9 the lessee mid-batch -> lease expiry
 #                requeues via GroupRequeued, job completes on the survivor,
 #                follower trace byte-identical
+#   ha           self-healing failover: leased primary + --auto-promote
+#                standby + ClusterAPI worker; kill -9 the primary -> the
+#                standby elects itself within the TTL, the worker
+#                re-attaches, /jobs byte-equal to a full replay
 #   bench        fabric_throughput.py scoreboard -> BENCH_fabric.json
 #                (timed but non-gating: a slow host must not fail CI)
 #   hygiene      git tree still clean (nothing generated into the repo)
@@ -405,6 +409,166 @@ PY
     wait "$primary_pid" "$follower_pid" 2>/dev/null || true
 }
 
+stage_ha() {
+    # self-healing HA end to end (DESIGN.md §14): a heartbeat-leased primary
+    # served with remote workers, an --auto-promote standby, and one worker
+    # process talking through the cluster client (comma-separated --url).
+    # kill -9 the primary: with NO operator action the standby must observe
+    # the lease expiry and elect itself within the TTL, the worker must
+    # re-attach to the new primary through ClusterAPI, and a job submitted
+    # after the takeover must complete — with GET /jobs on the new primary
+    # byte-equal to a fresh full replay of the journal (nothing lost,
+    # nothing double-completed, nothing invented).
+    local dir="$ARTIFACTS/ha"
+    rm -rf "$dir" && mkdir -p "$dir"
+
+    python scripts/fabric_cli.py serve --port 0 --journal "$dir/cas" \
+        --remote-workers --lease-ttl 2 --head-lease-ttl 2 \
+        > "$ARTIFACTS/ha-primary.log" 2>&1 &
+    local primary_pid=$!
+    PIDS_TO_KILL+=("$primary_pid")
+    local purl
+    purl=$(wait_for_url "$ARTIFACTS/ha-primary.log")
+    SERVER_URLS+=("$purl")
+    echo "leased primary up at $purl"
+
+    python scripts/fabric_cli.py follow --port 0 --journal "$dir/cas" \
+        --auto-promote --head-lease-ttl 2 --remote-workers --lease-ttl 2 \
+        > "$ARTIFACTS/ha-follower.log" 2>&1 &
+    local follower_pid=$!
+    PIDS_TO_KILL+=("$follower_pid")
+    local furl
+    furl=$(wait_for_url "$ARTIFACTS/ha-follower.log")
+    SERVER_URLS+=("$furl")
+    echo "auto-promote standby up at $furl"
+
+    python scripts/worker_main.py --url "$purl,$furl" --worker-id ha-w \
+        --device-class h100-nvl-94g --poll-s 1 \
+        > "$ARTIFACTS/ha-worker.log" 2>&1 &
+    PIDS_TO_KILL+=("$!")
+
+    python - "$purl" "$furl" "$primary_pid" <<'PY'
+import os, signal, sys, time
+from repro.fabric import ClusterAPI, RemoteAPI
+
+purl, furl, primary_pid = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cluster = ClusterAPI(f"{purl},{furl}", timeout_s=60)
+fapi = RemoteAPI(furl, timeout_s=60)
+
+def wait_for(what, fn, timeout_s=60.0):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        value = fn()
+        if value:
+            return value
+        time.sleep(0.2)
+    raise SystemExit(f"timed out waiting for {what}")
+
+def spec(tag):
+    return {"tenant": "acme", "ops": [
+        {"name": "gen", "op_type": "generate", "model_id": "llama-3.2-1b",
+         "inputs": [f"prompt:{tag}"], "tokens_in": 128, "tokens_out": 32}]}
+
+# job 1 through the cluster client, completed by the remote worker lane
+code, job1 = cluster.handle("POST", "/workflows", {"spec": spec("ha-pre")})
+assert code == 201, (code, job1)
+jid1 = job1["job_id"]
+wait_for("job1 completed", lambda: (
+    lambda v: v.get("status") == "completed")(
+    cluster.handle("GET", f"/jobs/{jid1}")[1]))
+print(f"{jid1} completed pre-kill")
+
+# only durable (flushed) history survives a kill -9: wait until the
+# standby has folded the job, and confirm the lease is visibly beating
+wait_for("standby caught up", lambda: (
+    lambda r: r.get("caught_up") and r.get("applied", {}).get("jobs", 0) >= 1
+    )(fapi.handle("GET", "/admin/replication")[1]))
+code, repl = fapi.handle("GET", "/admin/replication")
+assert repl["lease"]["held"] and not repl["lease"]["expired"], repl
+assert repl["auto_promote"] is True, repl
+
+t_kill = time.time()
+os.kill(primary_pid, signal.SIGKILL)
+print("primary killed (-9); NO operator action follows")
+
+promoted = wait_for("self-promotion", lambda: (
+    lambda r: r if r.get("role") == "primary" else None)(
+    fapi.handle("GET", "/admin/replication")[1]), timeout_s=30.0)
+elapsed = time.time() - t_kill
+# serve claimed epoch 1 at startup; the election bumped it to 2
+assert promoted["journal"]["epoch"] == 2, promoted
+assert promoted["journal"]["lease"]["held"], promoted   # winner heartbeats
+print(f"standby self-promoted {elapsed:.1f}s after the kill "
+      f"(lease TTL 2s + tail wake)")
+assert elapsed < 15.0, elapsed
+
+# job 2 through the SAME client object: the write re-resolves to the new
+# primary; the SAME worker process re-attaches via its cluster client
+code, job2 = cluster.handle("POST", "/workflows", {"spec": spec("ha-post")})
+assert code == 201, (code, job2)
+jid2 = job2["job_id"]
+assert cluster.primary_url == furl, cluster.primary_url
+wait_for("job2 completed on the new primary", lambda: (
+    lambda v: v.get("status") == "completed")(
+    fapi.handle("GET", f"/jobs/{jid2}")[1]), timeout_s=90.0)
+print(f"{jid2} completed post-failover (worker re-attached via ClusterAPI)")
+
+# no job lost, none double-completed
+code, jobs = fapi.handle("GET", "/jobs")
+assert code == 200
+statuses = {j["job_id"]: j["status"] for j in jobs["jobs"]}
+assert statuses == {jid1: "completed", jid2: "completed"}, statuses
+
+# the election is observable: the counter CI (and dashboards) key on
+code, metrics = fapi.handle("GET", "/metrics")
+assert code == 200, metrics
+assert 'fabric_elections_total{outcome="won"} 1' in metrics, "no election metric"
+PY
+
+    # the promotion narrates itself in the standby's log
+    grep -q "lease expired" "$ARTIFACTS/ha-follower.log"
+    grep -q "self-promoted" "$ARTIFACTS/ha-follower.log"
+    echo "standby log narrates the election:"
+    grep -h "lease expired\|self-promoted" "$ARTIFACTS/ha-follower.log" \
+        | head -2
+
+    # GET /jobs on the new primary must equal a fresh full replay of the
+    # journal byte for byte — the takeover lost nothing, invented nothing
+    python - "$furl" "$dir" <<'PY'
+import json, sys, time
+from repro.core.cas import DiskCAS
+from repro.core.journal import EventJournal
+from repro.fabric import FabricAPI, FabricService, RemoteAPI
+
+furl, outdir = sys.argv[1:3]
+api = RemoteAPI(furl, timeout_s=60)
+
+deadline = time.time() + 30
+while time.time() < deadline:      # auto-pump idle-flushes the tail
+    code, repl = api.handle("GET", "/admin/replication")
+    if code == 200 and repl["journal"]["pending"] == 0:
+        break
+    time.sleep(0.2)
+else:
+    raise SystemExit(f"journal never drained: {repl}")
+
+code, live = api.handle("GET", "/jobs")
+assert code == 200
+cas = DiskCAS(f"{outdir}/cas")
+restored = FabricService(seed=0, cas=cas, journal=EventJournal(cas))
+restored.restore_from_journal()
+code, replayed = FabricAPI(restored).handle("GET", "/jobs")
+assert code == 200
+got, want = (json.dumps(x, sort_keys=True) for x in (live, replayed))
+assert got == want, f"post-failover /jobs diverged from replay:\n got={got}\nwant={want}"
+print(f"new primary's /jobs byte-equal to full replay "
+      f"({len(live['jobs'])} jobs, {len(got)} bytes)")
+PY
+
+    kill "$follower_pid" 2>/dev/null || true
+    wait "$follower_pid" 2>/dev/null || true
+}
+
 stage_bench() {
     # the BENCH trajectory (ROADMAP): end-to-end control-plane throughput,
     # APPENDED to the checked-in BENCH_fabric.json (machine-tagged, newest
@@ -444,6 +608,7 @@ stage soak-quick stage_soak_quick
 stage compaction stage_compaction
 stage failover stage_failover
 stage workers stage_workers
+stage ha stage_ha
 stage bench stage_bench
 stage hygiene stage_hygiene
 

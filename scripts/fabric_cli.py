@@ -80,7 +80,8 @@ import threading
 from repro.core.cas import DiskCAS
 from repro.core.journal import EventJournal
 from repro.core.transport import LeaseTransport
-from repro.fabric import (TERMINAL_STATUSES as _TERMINAL, FabricAPI,
+from repro.fabric import (TERMINAL_STATUSES as _TERMINAL, ClusterAPI,
+                          FabricAPI,
                           FabricHTTPServer, FabricService, FollowerAPI,
                           FollowerFabric, RemoteAPI,
                           RetentionPolicy, configured_admission,
@@ -239,7 +240,14 @@ def cmd_follow(api, args) -> int:
     retention = None
     if _retention_overrides(args):      # pin: flags > doc > default
         retention, _ = _resolve_retention(args, load_operator_doc(cas))
-    follower = FollowerFabric(cas, seed=args.seed, retention=retention)
+    follower = FollowerFabric(cas, seed=args.seed, retention=retention,
+                              auto_promote=args.auto_promote,
+                              lease_ttl_s=args.head_lease_ttl)
+    if args.remote_workers:
+        # the promoted primary serves remote lanes (fresh transport per
+        # takeover: lease tables are process-local, never replayed)
+        follower.transport_factory = (
+            lambda: LeaseTransport(lease_ttl_s=args.lease_ttl))
     stats = follower.catch_up()
     fapi = FollowerAPI(follower, admin_token=args.admin_token)
     server = FabricHTTPServer(fapi, host=args.host, port=args.port,
@@ -458,6 +466,13 @@ def main(argv: list[str] | None = None) -> int:
                    help="wall-clock lease TTL for remote workers; a lease "
                         "not renewed within it requeues its batch "
                         "(heartbeat interval is TTL/4)")
+    p.add_argument("--head-lease-ttl", type=float, default=None,
+                   metavar="SECONDS", dest="head_lease_ttl",
+                   help="heartbeat a liveness lease on the journal head "
+                        "ref with this TTL: followers running "
+                        "`follow --auto-promote` take over within one TTL "
+                        "of this process going silent (unset = no lease; "
+                        "manual promotion only)")
     serve_parser = p
 
     p = sub.add_parser("follow",
@@ -473,6 +488,24 @@ def main(argv: list[str] | None = None) -> int:
                    help="require this bearer token on mutating /admin/* "
                         "and quota routes once promoted (and on promote "
                         "itself; unset = open)")
+    p.add_argument("--auto-promote", action="store_true",
+                   help="self-heal: when the primary's head-ref liveness "
+                        "lease (serve --head-lease-ttl) expires, promote "
+                        "this follower automatically — no operator action; "
+                        "N followers racing is safe (epoch CAS, losers "
+                        "resume tailing)")
+    p.add_argument("--head-lease-ttl", type=float, default=None,
+                   metavar="SECONDS", dest="head_lease_ttl",
+                   help="lease TTL this follower heartbeats with AFTER "
+                        "winning an election (defaults to no lease: the "
+                        "new primary would then need manual failover)")
+    p.add_argument("--remote-workers", action="store_true",
+                   help="after promotion, lease batches to out-of-process "
+                        "workers (same as serve --remote-workers)")
+    p.add_argument("--lease-ttl", type=float, default=10.0,
+                   metavar="SECONDS",
+                   help="worker lease TTL used after promotion with "
+                        "--remote-workers")
     follow_parser = p
 
     sub.add_parser("promote",
@@ -562,11 +595,16 @@ def main(argv: list[str] | None = None) -> int:
     if getattr(args, "remote_workers", False):
         transport = LeaseTransport(lease_ttl_s=args.lease_ttl)
     if args.url:
-        api = RemoteAPI(args.url, token=args.admin_token)
+        # a comma-separated endpoint list drives the whole cluster: reads
+        # fan out, writes chase the current primary across failovers
+        api = (ClusterAPI(args.url, token=args.admin_token)
+               if "," in args.url
+               else RemoteAPI(args.url, token=args.admin_token))
     elif args.cmd in ("serve", "submit") and getattr(args, "journal", None):
         cas = DiskCAS(args.journal)     # artifacts + journal share one store
         journal = EventJournal(
-            cas, commit_latency_s=getattr(args, "commit_latency", None))
+            cas, commit_latency_s=getattr(args, "commit_latency", None),
+            lease_ttl_s=getattr(args, "head_lease_ttl", None))
         doc = load_operator_doc(cas)
         retention, source = _resolve_retention(args, doc)
         svc = FabricService(seed=args.seed, cas=cas, journal=journal,

@@ -6,10 +6,19 @@ Registers with a fabric served with ``--remote-workers``, long-polls
 executor while a background thread heartbeats the lease, and reports the
 result to ``POST /worker/complete``. A fenced or revoked lease means the
 control plane moved on — the result is dropped and the lane keeps serving.
+A *transient* heartbeat failure (503 blip, 409 mid-failover) is NOT a lost
+lease: the server-side lease stays live for a full TTL after the last
+successful renewal, so the loop keeps retrying inside that budget before
+giving the batch up.
+
+``--url`` accepts a comma-separated endpoint list (primary + standbys):
+the worker then talks through ``ClusterAPI`` and rides an auto-promotion
+without restarting — its writes re-resolve to whichever process owns the
+journal epoch.
 
     PYTHONPATH=src python scripts/worker_main.py \\
-        --url http://127.0.0.1:8123 --worker-id w1 \\
-        --device-class h100-nvl-94g
+        --url http://127.0.0.1:8123,http://127.0.0.1:8124 \\
+        --worker-id w1 --device-class h100-nvl-94g
 """
 from __future__ import annotations
 
@@ -23,20 +32,28 @@ from repro.core.cost_model import DEVICE_CLASSES
 from repro.core.simulator import SimExecutor
 from repro.core.transport import batch_from_wire, result_to_wire
 from repro.core.worker import Worker, WorkerState
+from repro.fabric.cluster import ClusterAPI
 from repro.fabric.http import RemoteAPI
 
 
 class WorkerProcess:
     def __init__(self, url: str, worker_id: str, device_class: str, *,
                  seed: int = 0, poll_s: float = 10.0,
-                 slow_ms: float = 0.0) -> None:
-        self.api = RemoteAPI(url, timeout_s=poll_s + 30.0)
+                 slow_ms: float = 0.0, api=None) -> None:
+        if api is not None:
+            self.api = api              # injected (tests)
+        elif "," in url:
+            # endpoint list: ride failovers through the cluster client
+            self.api = ClusterAPI(url, timeout_s=poll_s + 30.0)
+        else:
+            self.api = RemoteAPI(url, timeout_s=poll_s + 30.0)
         self.requested_id = worker_id
         self.worker_id = worker_id
         self.device_class = device_class
         self.poll_s = poll_s
         self.slow_ms = slow_ms
         self.heartbeat_s = 1.0          # replaced by the register response
+        self.lease_ttl_s = 4.0          # replaced by the register response
         self.executor = SimExecutor(seed=seed)
         #: local lane shell: a persistent ResidentSet across batches keeps
         #: hot/cold behavior on this lane realistic
@@ -56,6 +73,8 @@ class WorkerProcess:
         self.worker_id = out["worker_id"]
         self.shell.worker_id = self.worker_id
         self.heartbeat_s = float(out.get("heartbeat_s") or 1.0)
+        self.lease_ttl_s = float(out.get("lease_ttl_s")
+                                 or 4.0 * self.heartbeat_s)
         print(f"registered as {self.worker_id} "
               f"(heartbeat {self.heartbeat_s:.2f}s)", flush=True)
         return code
@@ -73,11 +92,37 @@ class WorkerProcess:
 
     def _heartbeat_loop(self, lease_id: str, stop: threading.Event,
                         lost: threading.Event) -> None:
+        """Renew the lease until the batch finishes or it is truly gone.
+
+        Only two answers mean the lease is lost: HTTP 410 (fenced — the
+        control plane re-granted or expired it) and an explicit
+        ``revoked`` (cancellation: abandoning the batch is the ack).
+        Everything else — 503 unreachable blip, 5xx, a 409 from a fenced
+        primary mid-failover — is transient: the *server-side* lease
+        stays live for a full TTL after our last successful renewal, so
+        we keep retrying inside that budget instead of discarding a
+        fully computed batch on the first hiccup."""
+        grace_deadline: float | None = None
         while not stop.wait(self.heartbeat_s):
             code, out = self.api.handle("POST", "/worker/heartbeat", {
                 "worker_id": self.worker_id, "lease_id": lease_id})
-            if code != 200 or not out.get("ok", False):
+            ok = code == 200 and isinstance(out, dict) and out.get("ok")
+            if ok:
+                grace_deadline = None
+                continue
+            revoked = (code == 200 and isinstance(out, dict)
+                       and out.get("revoked"))
+            if code == 410 or revoked:
                 lost.set()       # revoked or fenced: abandon the batch
+                return
+            now = time.monotonic()
+            if grace_deadline is None:
+                grace_deadline = now + self.lease_ttl_s
+            if now >= grace_deadline:
+                print(f"lease {lease_id}: no successful heartbeat for "
+                      f"{self.lease_ttl_s:.1f}s; assuming expired",
+                      file=sys.stderr, flush=True)
+                lost.set()
                 return
 
     # ------------------------------------------------------------- execute --
@@ -105,15 +150,24 @@ class WorkerProcess:
             print(f"lease {lease_id} revoked/fenced; result dropped",
                   flush=True)
             return
-        code, out = self.api.handle("POST", "/worker/complete", {
-            "worker_id": self.worker_id, "lease_id": lease_id,
-            "result": result_to_wire(result)})
-        if code == 200 and out.get("ok", False):
-            self.done += 1
-        else:
+        # the completion gets the same transient-vs-terminal treatment as
+        # heartbeats: an unreachable/fenced primary mid-failover is retried
+        # within the TTL budget (ClusterAPI re-resolves underneath us)
+        deadline = time.monotonic() + self.lease_ttl_s
+        while True:
+            code, out = self.api.handle("POST", "/worker/complete", {
+                "worker_id": self.worker_id, "lease_id": lease_id,
+                "result": result_to_wire(result)})
+            if code == 200 and isinstance(out, dict) and out.get("ok"):
+                self.done += 1
+                return
+            if code in (503, 409) and time.monotonic() < deadline:
+                time.sleep(min(self.heartbeat_s, 0.5))
+                continue
             # 410 = fenced (lease lapsed under us), revoked, or the engine
             # re-dispatched: either way the work is not ours anymore
             print(f"complete {lease_id}: HTTP {code} {out}", flush=True)
+            return
 
     # ---------------------------------------------------------------- loop --
     def loop(self, max_batches: int | None = None) -> int:
@@ -144,7 +198,9 @@ class WorkerProcess:
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="worker_main", description=__doc__)
     ap.add_argument("--url", required=True,
-                    help="fabric base URL (serve --remote-workers)")
+                    help="fabric base URL (serve --remote-workers); a "
+                         "comma-separated list enables the cluster client "
+                         "(failover-riding)")
     ap.add_argument("--worker-id", default=None,
                     help="requested lane id (default: worker-<pid>); the "
                          "fabric may assign a suffixed one")

@@ -83,6 +83,7 @@ class CAS:
         self._blobs: dict[str, bytes] = {}
         self._refs: dict[str, str] = {}
         self._ref_epochs: dict[str, int] = {}
+        self._ref_leases: dict[str, float] = {}
         self._lock = threading.Lock()
         #: ref watchers park here; ``set_ref`` notifies (callback-driven —
         #: no polling for the in-memory backend)
@@ -124,12 +125,24 @@ class CAS:
 
     def set_ref(self, name: str, key: str, *, epoch: int | None = None,
                 expect_epoch: int | None = None,
-                expect_key: str | None = None) -> None:
+                expect_key: str | None = None,
+                lease_until: float | None = None) -> None:
+        """Advance a named ref.
+
+        ``lease_until`` is a wall-clock (``time.time``) liveness lease: the
+        writer asserts "I am alive and own this ref until T". A write that
+        passes ``None`` clears any stored lease — a non-heartbeating writer
+        must not leave a predecessor's stale promise behind. A stored lease
+        of 0.0 means *no lease*: manual promotion only (DESIGN.md §14)."""
         with self._lock:
             self._ref_epochs[name] = self._fence(
                 name, self._refs.get(name), self._ref_epochs.get(name, 0),
                 epoch, expect_epoch, expect_key)
             self._refs[name] = key
+            if lease_until is None:
+                self._ref_leases.pop(name, None)
+            else:
+                self._ref_leases[name] = float(lease_until)
             self._ref_cond.notify_all()
 
     def get_ref(self, name: str) -> str | None:
@@ -141,6 +154,12 @@ class CAS:
         only ever written by epoch-unaware callers."""
         with self._lock:
             return self._refs.get(name), self._ref_epochs.get(name, 0)
+
+    def ref_lease(self, name: str) -> float:
+        """The stored liveness lease expiry (wall-clock seconds), 0.0 when
+        the ref is unset or its last writer did not lease."""
+        with self._lock:
+            return self._ref_leases.get(name, 0.0)
 
     def watch_ref(self, name: str, since: str | None = None, *,
                   timeout_s: float | None = None,
@@ -309,23 +328,37 @@ class DiskCAS(CAS):
         return os.path.join(self.root, key[:2], key)
 
     # -- named refs (cross-process: survive restarts) ------------------------
-    # File format: the head key on line 1, the fencing epoch on line 2
-    # (legacy single-line files read as epoch 0). Fenced writes take a
-    # per-ref flock so read-check-write is atomic *across processes* — the
-    # promotion CAS and a zombie primary's append cannot interleave.
+    # File format, versioned by line count (every parser accepts every
+    # older version; newer files degrade gracefully for older readers
+    # because extra tokens are simply ignored):
+    #   v1: <key>                                  (pre-epoch refs)
+    #   v2: <key>\n<epoch>                         (fencing, DESIGN.md §10)
+    #   v3: <key>\n<epoch>\n<lease_until>          (liveness, DESIGN.md §14)
+    # ``lease_until`` is a wall-clock expiry; 0.0 (or absent) = no lease.
+    # Fenced writes take a per-ref flock so read-check-write is atomic
+    # *across processes* — the promotion CAS and a zombie primary's append
+    # cannot interleave.
     def _ref_path(self, name: str) -> str:
         safe = name.replace("/", "_")
         return os.path.join(self.root, "refs", safe)
 
+    @classmethod
+    def _parse_ref(cls, content: str) -> tuple[str | None, int]:
+        return cls._parse_ref_full(content)[:2]
+
     @staticmethod
-    def _parse_ref(content: str) -> tuple[str | None, int]:
+    def _parse_ref_full(content: str) -> tuple[str | None, int, float]:
         lines = content.split()
         key = lines[0] if lines else None
         try:
             epoch = int(lines[1]) if len(lines) > 1 else 0
         except ValueError:
             epoch = 0
-        return key or None, epoch
+        try:
+            lease = float(lines[2]) if len(lines) > 2 else 0.0
+        except ValueError:
+            lease = 0.0
+        return key or None, epoch, lease
 
     @contextlib.contextmanager
     def _ref_flock(self, name: str):
@@ -345,7 +378,8 @@ class DiskCAS(CAS):
 
     def set_ref(self, name: str, key: str, *, epoch: int | None = None,
                 expect_epoch: int | None = None,
-                expect_key: str | None = None) -> None:
+                expect_key: str | None = None,
+                lease_until: float | None = None) -> None:
         path = self._ref_path(name)
         with self._lock, self._ref_flock(name):
             os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -354,22 +388,29 @@ class DiskCAS(CAS):
                                       epoch, expect_epoch, expect_key)
             tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
             with open(tmp, "w") as f:
-                f.write(f"{key}\n{write_epoch}\n")
+                f.write(f"{key}\n{write_epoch}\n{lease_until or 0.0}\n")
             os.replace(tmp, path)       # atomic head advance
 
     @classmethod
     def _read_ref(cls, path: str) -> tuple[str | None, int]:
+        return cls._read_ref_full(path)[:2]
+
+    @classmethod
+    def _read_ref_full(cls, path: str) -> tuple[str | None, int, float]:
         try:
             with open(path) as f:
-                return cls._parse_ref(f.read())
+                return cls._parse_ref_full(f.read())
         except FileNotFoundError:
-            return None, 0
+            return None, 0, 0.0
 
     def get_ref(self, name: str) -> str | None:
         return self._read_ref(self._ref_path(name))[0]
 
     def ref_entry(self, name: str) -> tuple[str | None, int]:
         return self._read_ref(self._ref_path(name))
+
+    def ref_lease(self, name: str) -> float:
+        return self._read_ref_full(self._ref_path(name))[2]
 
     def watch_ref(self, name: str, since: str | None = None, *,
                   timeout_s: float | None = None,

@@ -74,9 +74,20 @@ class EventJournal:
     def __init__(self, cas: CAS, *, batch_size: int = 256,
                  ref: str = HEAD_REF, epoch: int | None = None,
                  commit_latency_s: float | None = None,
-                 max_buffer: int | None = None) -> None:
+                 max_buffer: int | None = None,
+                 lease_ttl_s: float | None = None,
+                 clock: Callable[[], float] = time.time) -> None:
         self.cas = cas
         self.batch_size = max(1, batch_size)
+        #: liveness lease (opt-in, DESIGN.md §14): when set, every head
+        #: advance — and the idle-pump ``heartbeat_lease`` — stamps the ref
+        #: with a wall-clock expiry ``clock() + lease_ttl_s``. A follower
+        #: running with ``--auto-promote`` treats an *expired* lease as
+        #: "primary silent" and elects itself through the fenced CAS path.
+        #: ``None`` writes no lease (0.0 stored): manual promotion only.
+        self.lease_ttl_s = lease_ttl_s
+        self._clock = clock
+        self._lease_beat = 0.0          # clock() of the last lease write
         #: adaptive **group commit** (opt-in): when set, segment cuts are
         #: driven by wall-clock buffer age instead of a fixed event count —
         #: a burst coalesces into ONE segment provided no buffered event
@@ -158,12 +169,44 @@ class EventJournal:
         if key is None:
             root = self.cas.put({"prev": None, "events": []})
             self.cas.set_ref(self.ref, root, epoch=stored + 1,
-                             expect_epoch=stored)
+                             expect_epoch=stored,
+                             lease_until=self._lease_until())
         else:
             self.cas.set_ref(self.ref, key, epoch=stored + 1,
-                             expect_epoch=stored, expect_key=key)
+                             expect_epoch=stored, expect_key=key,
+                             lease_until=self._lease_until())
         self.epoch = stored + 1
         return self.epoch
+
+    # ------------------------------------------------------------- lease --
+    def _lease_until(self) -> float | None:
+        """The expiry to stamp on the next head advance (None = no lease).
+        Records the beat so ``heartbeat_lease`` can rate-limit itself."""
+        if self.lease_ttl_s is None:
+            return None
+        self._lease_beat = self._clock()
+        return self._lease_beat + self.lease_ttl_s
+
+    def heartbeat_lease(self, *, force: bool = False) -> bool:
+        """Re-assert liveness on the head ref *without* flushing: rewrite
+        the current head key with this journal's epoch and a fresh lease
+        expiry. Called from the serving pump each iteration; internally
+        rate-limited to one write per ``lease_ttl_s / 3`` so an idle pump
+        costs three ref writes per TTL, not one per tick. Raises
+        ``RefFencedError`` if the journal lost the head (zombie primary) —
+        same contract as ``flush``. Returns True when a write happened."""
+        if self.lease_ttl_s is None:
+            return False
+        now = self._clock()
+        if not force and now - self._lease_beat < self.lease_ttl_s / 3.0:
+            return False
+        key = self.head
+        if key is None:
+            return False        # nothing published yet: claim()/flush lease
+        self.cas.set_ref(self.ref, key, epoch=self.epoch,
+                         lease_until=now + self.lease_ttl_s)
+        self._lease_beat = now
+        return True
 
     # ------------------------------------------------------------- write --
     def on_event(self, e: FabricEvent) -> None:
@@ -217,7 +260,8 @@ class EventJournal:
                     {"prev": self.head, "events": self._buf})
             # blob first, then the head; a fenced (post-promotion) writer
             # dies here with the buffer intact and the chain untouched
-            self.cas.set_ref(self.ref, key, epoch=self.epoch)
+            self.cas.set_ref(self.ref, key, epoch=self.epoch,
+                             lease_until=self._lease_until())
         self.segments_written += 1
         self.events_written += len(self._buf)
         self.bytes_flushed += size
@@ -343,7 +387,8 @@ class EventJournal:
                 {"prev": head, "events": self.cas.get(key)["events"]})
             tail_bytes += size
         # single atomic head advance (fenced like flush)
-        self.cas.set_ref(self.ref, head, epoch=self.epoch)
+        self.cas.set_ref(self.ref, head, epoch=self.epoch,
+                         lease_until=self._lease_until())
         self.compactions += 1
         # the un-folded tail is now exactly the kept segments
         self.segments_since_compact = len(keys) - cut

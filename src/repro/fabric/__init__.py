@@ -14,6 +14,9 @@
 ``http``       — socket server + urllib client over the same handler table
 ``follower``   — warm-standby follower: snapshot bootstrap + journal
                  tailing over the shared fold, epoch-fenced promotion
+                 (+ lease-triggered auto-election, DESIGN.md §14)
+``cluster``    — cluster-aware client: write redirect to the current
+                 primary, read fan-out with sticky feed cursors
 
 Observability (DESIGN.md §11) lives in core and is re-exported here:
 ``repro.core.tracing.TraceState`` (replay-derived span trees + dedup
@@ -26,6 +29,7 @@ from repro.core.tracing import TRACE_TRUNCATED_KIND, TraceState
 from .admission import (AdmissionController, QuotaExceeded, TenantQuota,
                         TenantUsage)
 from .api import FabricAPI
+from .cluster import ClusterAPI
 from .follower import FollowerAPI, FollowerFabric
 from .http import FabricHTTPServer, RemoteAPI
 from .operator import (OPERATOR_REF, configured_admission,
@@ -39,7 +43,8 @@ from .spec import (SpecError, compile_spec, default_resource_class,
 
 __all__ = [
     "AdmissionController", "QuotaExceeded", "TenantQuota", "TenantUsage",
-    "FabricAPI", "FabricHTTPServer", "RemoteAPI", "FabricService",
+    "FabricAPI", "FabricHTTPServer", "RemoteAPI", "ClusterAPI",
+    "FabricService",
     "FollowerAPI", "FollowerFabric",
     "FEED_KINDS", "TRUNCATED_KIND", "JobRecord", "ReplayState",
     "RetentionPolicy", "snapshot_fold", "truncation_marker",

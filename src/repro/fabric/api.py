@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import hmac
+import time
 
 from typing import Any, Callable
 from urllib.parse import parse_qsl, urlsplit
@@ -462,13 +463,31 @@ class FabricAPI:
     # ----------------------------------------------------------- replication --
     def _replication(self, params, query, body) -> tuple[int, Any]:
         """This surface is a primary; a follower's ``FollowerAPI`` override
-        reports tail lag instead."""
-        out: dict[str, Any] = {"role": "primary"}
-        j = self.service.journal
+        reports tail lag instead. Alongside the head-ref entry this reports
+        the liveness lease (is this primary *heartbeating*, DESIGN.md §14)
+        and the auto-pump's health (is the engine being *driven*) — the
+        two signals that distinguish a healthy primary from a wedged one
+        that still answers HTTP."""
+        svc = self.service
+        out: dict[str, Any] = {"role": "primary",
+                               "fenced": bool(getattr(svc, "fenced", False))}
+        pump = getattr(svc, "pump_health", None)
+        if pump is not None:
+            out["pump"] = dict(pump)
+        j = svc.journal
         if j is not None:
             key, epoch = j.cas.ref_entry(j.ref)
+            lease = j.cas.ref_lease(j.ref)
+            now = time.time()
             out["journal"] = {"ref": j.ref, "head": key, "epoch": epoch,
                               "pending": j.pending}
+            out["journal"]["lease"] = {
+                "ttl_s": j.lease_ttl_s,
+                "held": lease > 0.0,
+                "until": lease if lease > 0.0 else None,
+                "remaining_s": (lease - now) if lease > 0.0 else None,
+                "expired": lease > 0.0 and now >= lease,
+            }
         return 200, out
 
     def _promote(self, params, query, body) -> tuple[int, Any]:

@@ -25,7 +25,9 @@ exactly what ``GET /jobs``, ``/jobs/{id}``, ``/jobs/{id}/events``, and
 """
 from __future__ import annotations
 
+import sys
 import threading
+import time
 
 from repro.core.cas import RefFencedError
 from repro.core.events import event_from_dict
@@ -49,11 +51,35 @@ class FollowerFabric:
     def __init__(self, cas, *, ref: str = HEAD_REF,
                  retention: RetentionPolicy | None = None,
                  seed: int = 0, batch_size: int = 256,
-                 device_classes: tuple[str, ...] | None = None) -> None:
+                 device_classes: tuple[str, ...] | None = None,
+                 auto_promote: bool = False,
+                 lease_ttl_s: float | None = None,
+                 clock=time.time) -> None:
         self.cas = cas
         self.ref = ref
         self.seed = seed
         self.batch_size = batch_size
+        self.device_classes = device_classes
+        #: self-healing HA (DESIGN.md §14): when True, the tail loop watches
+        #: the head-ref liveness lease and elects itself primary once the
+        #: lease is *held and expired*. A lease-less head (0.0) never
+        #: triggers — a primary that does not heartbeat opted out of
+        #: auto-failover and keeps requiring an operator `promote`.
+        self.auto_promote = auto_promote
+        #: TTL this follower will heartbeat with *after* winning an election
+        #: (and stamp on the takeover CAS, so rival followers instantly see
+        #: a fresh lease instead of re-electing over the winner)
+        self.lease_ttl_s = lease_ttl_s
+        self._clock = clock
+        #: factory for the promoted service's worker transport — set by the
+        #: CLI when the standby should serve remote lanes after takeover
+        self.transport_factory = None
+        #: callback run with the promoted service however promotion happens
+        #: (operator POST or auto-election); FollowerAPI hooks this to flip
+        #: itself read-write
+        self.on_promoted = None
+        self.elections_won = 0
+        self.elections_lost = 0
         self._retention_pinned = retention is not None
         self._operator_key = cas.get_ref(OPERATOR_REF)
         doc = load_operator_doc(cas)
@@ -100,6 +126,12 @@ class FollowerFabric:
         self._m_bootstraps = self.metrics.counter(
             "fabric_replication_bootstraps_total",
             "Snapshot re-bootstraps (the primary compacted past us)")
+        _elections = self.metrics.counter(
+            "fabric_elections_total",
+            "Auto-promotion attempts after an expired head-ref lease",
+            labels=("outcome",))
+        self._m_election_won = _elections.child(outcome="won")
+        self._m_election_lost = _elections.child(outcome="lost")
         self._sync_view()
 
     # ------------------------------------------------------------- tailing --
@@ -243,7 +275,9 @@ class FollowerFabric:
         """Follow the head ref until ``stop`` is set (or promotion): park on
         ``watch_ref`` and fold under ``lock`` — the same lock the HTTP shim
         serializes requests with, so reads never observe a half-applied
-        segment."""
+        segment. With ``auto_promote`` every wake-up (head movement *or*
+        ``wake_every_s`` timeout) also checks the liveness lease, so a
+        silent primary is detected within one wake interval of expiry."""
         while not stop.is_set() and self.promoted is None:
             head = self.cas.watch_ref(self.ref, since=self._applied_head,
                                       timeout_s=wake_every_s,
@@ -260,6 +294,63 @@ class FollowerFabric:
                     # journal head — an idle primary's PUT /admin/retention
                     # must still reach the standby on the timeout wake-up
                     self._sync_view()
+                self.maybe_elect()
+
+    # ------------------------------------------------------------ election --
+    def lease_status(self) -> dict:
+        """The head-ref liveness lease as this follower sees it — the
+        "caught up, but is the primary *alive*?" half of replication
+        status. ``held`` False means the last head writer did not
+        heartbeat (no auto-failover possible); ``expired`` True is the
+        election trigger."""
+        lease = self.cas.ref_lease(self.ref)
+        now = self._clock()
+        held = lease > 0.0
+        return {"held": held,
+                "until": lease if held else None,
+                "remaining_s": (lease - now) if held else None,
+                "expired": held and now >= lease}
+
+    def maybe_elect(self) -> FabricService | None:
+        """One election attempt, iff armed and the lease is held-and-expired.
+
+        The election itself is nothing but the existing fenced promotion,
+        conditioned on the epoch we observed *while the lease was expired*:
+        N followers racing all CAS against that same stored epoch, exactly
+        one lands the bump, and every loser's CAS is refused with
+        ``RefFencedError`` — split-brain stays structurally excluded, no
+        coordinator required. A loser logs, counts the loss, and simply
+        resumes tailing: the winner's takeover stamped a fresh lease, so
+        the next wake-up sees ``expired=False`` and stands down."""
+        if not self.auto_promote or self.promoted is not None:
+            return None
+        key, epoch = self.cas.ref_entry(self.ref)
+        lease = self.cas.ref_lease(self.ref)
+        now = self._clock()
+        if key is None or lease <= 0.0 or now < lease:
+            return None
+        print(f"follower: head-ref lease expired {now - lease:.2f}s ago "
+              f"(epoch {epoch}); attempting self-promotion",
+              file=sys.stderr, flush=True)
+        try:
+            svc = self.promote(expect_epoch=epoch)
+        except RefFencedError as exc:
+            self.elections_lost += 1
+            self._m_election_lost.inc()
+            print(f"follower: election lost ({exc}); resuming tail",
+                  file=sys.stderr, flush=True)
+            return None
+        self.elections_won += 1
+        self._m_election_won.inc()
+        # the promoted service serves /metrics from its own registry from
+        # now on — the election that created it must be scrapable there
+        svc.metrics.counter(
+            "fabric_elections_total",
+            "Auto-promotion attempts after an expired head-ref lease",
+            labels=("outcome",)).child(outcome="won").inc()
+        print(f"follower: self-promoted to epoch {svc.journal.epoch} "
+              f"({len(svc.jobs)} jobs restored)", file=sys.stderr, flush=True)
+        return svc
 
     # ------------------------------------------------------------ lag view --
     def replication_status(self) -> dict:
@@ -277,6 +368,10 @@ class FollowerFabric:
             "head": head,
             "applied_head": self._applied_head,
             "caught_up": head == self._applied_head,
+            "lease": self.lease_status(),
+            "auto_promote": self.auto_promote,
+            "elections": {"won": self.elections_won,
+                          "lost": self.elections_lost},
             "applied": {"segments": self.segments_applied,
                         "events": self.events_applied,
                         "max_seq": self.state.max_seq,
@@ -288,7 +383,8 @@ class FollowerFabric:
         }
 
     # ------------------------------------------------------------ takeover --
-    def promote(self, *, seed: int | None = None) -> FabricService:
+    def promote(self, *, seed: int | None = None,
+                expect_epoch: int | None = None) -> FabricService:
         """Become the primary: catch up, fence, restore, serve read-write.
 
         The fence is a compare-and-set on the head ref's ``(key, epoch)``
@@ -302,10 +398,18 @@ class FollowerFabric:
         out through the existing interrupt-on-restart path, and the result
         index makes re-submission pay only for unfinished ops.
 
-        Idempotent: a second call returns the already-promoted service."""
+        Idempotent: a second call returns the already-promoted service.
+
+        ``expect_epoch`` pins the takeover to one observed epoch: the CAS
+        must land against exactly that stored value or the call raises
+        ``RefFencedError``. This is what makes an *election* of N racing
+        followers safe — each conditions on the epoch it saw while the
+        lease was expired, so a rival's bump (which also stamps a fresh
+        lease) fences everyone else instead of being promoted over."""
         if self.promoted is not None:
             return self.promoted
-        first_epoch: int | None = None
+        pinned = expect_epoch is not None
+        first_epoch: int | None = expect_epoch
         while True:
             self.catch_up()
             head, epoch = self.cas.ref_entry(self.ref)
@@ -316,6 +420,8 @@ class FollowerFabric:
             new_epoch = epoch + 1
             if head != self._applied_head:
                 continue                   # head moved mid-pass: re-fold
+            lease_until = (None if self.lease_ttl_s is None
+                           else self._clock() + self.lease_ttl_s)
             try:
                 if head is None:
                     # empty journal: publish an empty root segment so the
@@ -324,24 +430,36 @@ class FollowerFabric:
                     # own epoch 1 (same materialization as claim())
                     root = self.cas.put({"prev": None, "events": []})
                     self.cas.set_ref(self.ref, root, epoch=new_epoch,
-                                     expect_epoch=epoch)
+                                     expect_epoch=epoch,
+                                     lease_until=lease_until)
                 else:
                     self.cas.set_ref(self.ref, head, epoch=new_epoch,
-                                     expect_epoch=epoch, expect_key=head)
+                                     expect_epoch=epoch, expect_key=head,
+                                     lease_until=lease_until)
                 break
             except RefFencedError:
+                if pinned:
+                    raise                  # pinned takeover: the loser path
                 continue                   # lost a race with a live append
         journal = EventJournal(self.cas, batch_size=self.batch_size,
-                               ref=self.ref, epoch=new_epoch)
+                               ref=self.ref, epoch=new_epoch,
+                               lease_ttl_s=self.lease_ttl_s,
+                               clock=self._clock)
         doc = load_operator_doc(self.cas)
+        kwargs = {} if self.device_classes is None else {
+            "device_classes": self.device_classes}
+        if self.transport_factory is not None:
+            kwargs["transport"] = self.transport_factory()
         svc = FabricService(seed=self.seed if seed is None else seed,
                             cas=self.cas, journal=journal,
-                            retention=self.retention)
+                            retention=self.retention, **kwargs)
         configured_admission(doc, svc.admission)
         if journal.head is not None:
             svc.restore_from_journal()
         svc._persist_operator_config()
         self.promoted = svc
+        if self.on_promoted is not None:
+            self.on_promoted(svc)
         return svc
 
 
@@ -359,6 +477,15 @@ class FollowerAPI(FabricAPI):
         #: callback run with the promoted service (the CLI uses it to start
         #: the HTTP server's auto-pump thread)
         self.on_promoted = on_promoted
+        # however promotion happens — operator POST or the tail loop's
+        # auto-election — the HTTP surface flips read-write through here
+        follower.on_promoted = self._adopt_promotion
+
+    def _adopt_promotion(self, svc) -> None:
+        self.service = svc
+        self.read_only = False
+        if self.on_promoted is not None:
+            self.on_promoted(svc)
 
     def handle(self, method: str, path: str, body: dict | None = None,
                headers: dict | None = None) -> tuple[int, object]:
@@ -378,11 +505,7 @@ class FollowerAPI(FabricAPI):
     def _promote(self, params, query, body) -> tuple[int, object]:
         if not self.read_only:
             return super()._promote(params, query, body)
-        svc = self.follower.promote()
-        self.service = svc
-        self.read_only = False
-        if self.on_promoted is not None:
-            self.on_promoted(svc)
+        svc = self.follower.promote()   # flips us via _adopt_promotion
         return 200, {"promoted": True, "epoch": svc.journal.epoch,
                      "jobs": len(svc.jobs),
                      "head": svc.journal.head}

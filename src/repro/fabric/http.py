@@ -62,29 +62,73 @@ class FabricHTTPServer:
         return f"http://{self.host}:{self.port}"
 
     # ------------------------------------------------------------- driving --
+    #: error backoff: first retry after this, doubling up to the cap — a
+    #: transient DiskCAS hiccup costs milliseconds, a broken store doesn't
+    #: spin the thread
+    PUMP_BACKOFF_S = 0.05
+    PUMP_BACKOFF_MAX_S = 5.0
+
     def _pump_loop(self) -> None:
         svc = self.api.service
+        health = {"running": True, "iterations": 0, "errors": 0,
+                  "consecutive_errors": 0, "last_error": None}
+        svc.pump_health = health
+        metrics = getattr(svc, "metrics", None)
+        m_errors = (None if metrics is None else metrics.counter(
+            "fabric_pump_errors_total",
+            "Exceptions survived by the auto-pump thread "
+            "(fencing excluded — that stops the pump)").child())
         while not self._stop.is_set():
-            with self.lock:
-                try:
+            try:
+                with self.lock:
                     stepped = svc.pump(max_steps=self.pump_steps)
-                    if stepped == 0 \
-                            and getattr(svc, "journal", None) is not None \
-                            and svc.journal.pending:
-                        svc.journal.flush()   # idle: make history durable
-                        svc.maybe_retain()    # flush may tip the thresholds
-                except RefFencedError as e:
-                    # another process took over the journal head (promotion
-                    # or a newer claim): this fabric no longer owns its
-                    # history — stop persisting, and flip the API surface
-                    # so writes are refused instead of acknowledged into
-                    # a void (a 201 from a zombie is lost work)
-                    svc.fenced = True
-                    print(f"journal fenced off; pump stopped: {e}",
-                          file=sys.stderr, flush=True)
-                    return
+                    journal = getattr(svc, "journal", None)
+                    if journal is not None:
+                        if stepped == 0 and journal.pending:
+                            journal.flush()  # idle: make history durable
+                            svc.maybe_retain()  # flush may tip thresholds
+                        # liveness lease (DESIGN.md §14): the pump IS the
+                        # primary's heartbeat — a wedged or dead pump stops
+                        # renewing, and auto-promote followers take over.
+                        # Rate-limited inside the journal (TTL/3).
+                        journal.heartbeat_lease()
+            except RefFencedError as e:
+                # another process took over the journal head (promotion
+                # or a newer claim): this fabric no longer owns its
+                # history — stop persisting, and flip the API surface
+                # so writes are refused instead of acknowledged into
+                # a void (a 201 from a zombie is lost work)
+                svc.fenced = True
+                health["running"] = False
+                health["last_error"] = f"fenced: {e}"
+                print(f"journal fenced off; pump stopped: {e}",
+                      file=sys.stderr, flush=True)
+                return
+            except Exception as e:
+                # anything else (a transient OSError from a DiskCAS flush,
+                # a bug in one operator's bookkeeping) must NOT kill the
+                # thread: a dead pump with a live HTTP surface acknowledges
+                # work that never progresses. Count it, log it, back off
+                # boundedly, try again.
+                health["errors"] += 1
+                health["consecutive_errors"] += 1
+                health["last_error"] = repr(e)
+                if m_errors is not None:
+                    m_errors.inc()
+                backoff = min(
+                    self.PUMP_BACKOFF_S * 2 ** (
+                        health["consecutive_errors"] - 1),
+                    self.PUMP_BACKOFF_MAX_S)
+                print(f"pump error ({health['errors']} total), retrying "
+                      f"in {backoff:.2f}s: {e!r}", file=sys.stderr,
+                      flush=True)
+                self._stop.wait(backoff)
+                continue
+            health["iterations"] += 1
+            health["consecutive_errors"] = 0
             if stepped == 0:        # idle or stalled: back off, don't spin
                 self._stop.wait(self.pump_interval_s)
+        health["running"] = False
 
     def _start_pump(self) -> None:
         if self.auto_pump:

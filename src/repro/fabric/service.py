@@ -151,6 +151,10 @@ class FabricService:
         #: then on — a zombie primary must not acknowledge work it can
         #: neither persist nor (with its pump stopped) run
         self.fenced = False
+        #: written by the HTTP shim's auto-pump thread (errors survived,
+        #: last error, liveness) — surfaced through health() and
+        #: GET /admin/replication so a wedged pump is visible from outside
+        self.pump_health: dict | None = None
         self._ref_dev = DEVICE_CLASSES["h100-nvl-94g"]
 
     # ------------------------------------------------------------ tenants --
@@ -537,8 +541,16 @@ class FabricService:
         if rec.cancelled:
             return JobStatus.CANCELLED
         if rec.dag is None:                      # journal-restored record
-            return (JobStatus.COMPLETED if rec.completed_at is not None
-                    else JobStatus.QUEUED)
+            if rec.completed_at is not None:
+                return JobStatus.COMPLETED
+            # synthesize RUNNING from the op events the fold has seen: a
+            # follower (or a not-yet-closed restore) knows work started the
+            # moment any op left `pending` — reporting `queued` until the
+            # terminal event made "caught up" indistinguishable from
+            # "primary silent" on the standby surface
+            if any(s != "pending" for s in rec.op_states.values()):
+                return JobStatus.RUNNING
+            return JobStatus.QUEUED
         if self._dag(rec).done:
             return JobStatus.COMPLETED
         if rec.job_id in self.engine.dags:
@@ -701,4 +713,6 @@ class FabricService:
             out["journal"] = {"head": self.journal.head,
                               "written": self.journal.events_written,
                               "pending": self.journal.pending}
+        if self.pump_health is not None:
+            out["pump"] = dict(self.pump_health)
         return out

@@ -24,12 +24,12 @@ import pytest
 from repro.core import events as E
 from repro.core.cas import CAS, DiskCAS, RefFencedError
 from repro.core.journal import HEAD_REF, EventJournal
-from repro.fabric import (FabricAPI, FollowerAPI, FollowerFabric,
-                          RetentionPolicy, TenantQuota)
+from repro.fabric import (FabricAPI, FabricService, FollowerAPI,
+                          FollowerFabric, RetentionPolicy, TenantQuota)
 
-from harness import (Crash, CrashingCAS, build_service, dual_service,
-                     observe, restore_fresh, run_schedule, spec_doc,
-                     assert_cursor_contract)
+from harness import (DEVICES, QUOTAS, Crash, CrashingCAS, build_service,
+                     dual_service, observe, restore_fresh, run_schedule,
+                     spec_doc, assert_cursor_contract)
 
 
 # ---------------------------------------------------------------------------
@@ -221,8 +221,14 @@ class TestFollowerTailing:
                 if primary_view["status"] in ("completed", "cancelled",
                                               "rejected"):
                     assert follower.view.job(jid) == primary_view, step
-                else:                        # live on the primary
-                    assert follower.view.job(jid)["status"] == "queued"
+                else:
+                    # live on the primary: the follower synthesizes the
+                    # same queued/running answer from op events alone — a
+                    # job is `running` the moment any op left `pending`,
+                    # which coincides with the primary's arrival-based view
+                    # at every flushed boundary
+                    assert follower.view.job(jid)["status"] == \
+                        primary_view["status"], step
             if step == ("drain",):
                 quiescent += 1
                 assert observe(follower.view) == observe(
@@ -511,3 +517,326 @@ class TestFollowerAPI:
         assert code == 200 and repl["role"] == "primary"
         code, err = api.handle("POST", "/admin/promote", {})
         assert code == 409 and err["error"] == "already_primary"
+
+
+# ---------------------------------------------------------------------------
+# head-ref liveness lease + auto-election (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+class FakeClock:
+    """Deterministic wall clock shared by a leased journal and its
+    followers — election timing becomes a pure function of ``advance``."""
+
+    def __init__(self, t: float = 1000.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class TestLeasePrimitives:
+    @pytest.fixture(params=["memory", "disk"])
+    def cas(self, request, tmp_path):
+        if request.param == "memory":
+            return CAS()
+        return DiskCAS(str(tmp_path / "cas"))
+
+    def test_ref_lease_round_trip(self, cas):
+        assert cas.ref_lease("r") == 0.0
+        cas.set_ref("r", "a" * 20, lease_until=123.5)
+        assert cas.ref_lease("r") == 123.5
+        assert cas.ref_entry("r") == ("a" * 20, 0)   # entry shape unchanged
+        # a lease-less rewrite *clears* the stored lease: a writer that does
+        # not heartbeat (offline tool, shadow journal) must not leave its
+        # predecessor's stale liveness claim behind
+        cas.set_ref("r", "b" * 20)
+        assert cas.ref_lease("r") == 0.0
+
+    def test_lease_rides_the_epoch_cas(self, cas):
+        cas.set_ref("r", "a" * 20, epoch=1, lease_until=50.0)
+        cas.set_ref("r", "a" * 20, epoch=2, expect_epoch=1, lease_until=99.0)
+        assert cas.ref_lease("r") == 99.0
+        with pytest.raises(RefFencedError):          # fenced write: no stamp
+            cas.set_ref("r", "a" * 20, epoch=1, lease_until=777.0)
+        assert cas.ref_lease("r") == 99.0
+        assert cas.ref_entry("r") == ("a" * 20, 2)
+
+    def test_legacy_disk_ref_files_read_lease_zero(self, tmp_path):
+        """v1 (<key>) and v2 (<key>\\n<epoch>) ref files predate the lease
+        line; both must parse as "no lease" — never auto-promotable."""
+        cas = DiskCAS(str(tmp_path / "cas"))
+        cas.set_ref("r", "a" * 20, epoch=3, lease_until=9.0)
+        path = cas._ref_path("r")
+        with open(path, "w") as f:
+            f.write("d" * 20)                        # v1
+        assert cas.ref_entry("r") == ("d" * 20, 0)
+        assert cas.ref_lease("r") == 0.0
+        with open(path, "w") as f:
+            f.write("e" * 20 + "\n7\n")              # v2
+        assert cas.ref_entry("r") == ("e" * 20, 7)
+        assert cas.ref_lease("r") == 0.0
+        assert cas.ref_lease("never-written") == 0.0
+
+
+class TestJournalLease:
+    def _leased(self, ttl=6.0):
+        cas, clock = CAS(), FakeClock()
+        j = EventJournal(cas, batch_size=1, lease_ttl_s=ttl, clock=clock)
+        return cas, clock, j
+
+    def test_flush_and_claim_stamp_the_lease(self):
+        cas, clock, j = self._leased(ttl=5.0)
+        j.on_event(E.WorkflowSubmitted(time=0.0, dag_id="d", tenant="t"))
+        assert cas.ref_lease(HEAD_REF) == clock.t + 5.0
+        clock.advance(2.0)
+        assert j.claim() == 1
+        assert cas.ref_lease(HEAD_REF) == clock.t + 5.0
+
+    def test_heartbeat_rate_limited_and_forceable(self):
+        cas, clock, j = self._leased(ttl=6.0)
+        j.on_event(E.WorkflowSubmitted(time=0.0, dag_id="d", tenant="t"))
+        stamped = cas.ref_lease(HEAD_REF)
+        assert j.heartbeat_lease() is False          # just wrote: < TTL/3
+        clock.advance(1.0)
+        assert j.heartbeat_lease() is False
+        assert cas.ref_lease(HEAD_REF) == stamped    # no write happened
+        assert j.heartbeat_lease(force=True) is True
+        assert cas.ref_lease(HEAD_REF) == clock.t + 6.0
+        clock.advance(2.5)                           # past TTL/3 again
+        assert j.heartbeat_lease() is True
+        assert cas.ref_lease(HEAD_REF) == clock.t + 6.0
+
+    def test_heartbeat_noops_without_ttl_or_head(self):
+        cas, clock = CAS(), FakeClock()
+        assert EventJournal(cas).heartbeat_lease(force=True) is False
+        j = EventJournal(cas, lease_ttl_s=5.0, clock=clock)
+        assert j.heartbeat_lease(force=True) is False   # nothing published
+        assert cas.ref_lease(HEAD_REF) == 0.0
+
+    def test_fenced_heartbeat_raises(self):
+        """A zombie primary's heartbeat must die with the same fence its
+        appends do — it must not keep looking alive to the followers."""
+        cas, clock, j = self._leased(ttl=5.0)
+        j.on_event(E.WorkflowSubmitted(time=0.0, dag_id="d", tenant="t"))
+        cas.set_ref(HEAD_REF, cas.get_ref(HEAD_REF), epoch=1, expect_epoch=0)
+        clock.advance(5.0)
+        with pytest.raises(RefFencedError):
+            j.heartbeat_lease(force=True)
+
+    def test_lease_less_journal_unchanged(self):
+        cas = CAS()
+        j = EventJournal(cas, batch_size=1)
+        j.on_event(E.WorkflowSubmitted(time=0.0, dag_id="d", tenant="t"))
+        assert cas.ref_lease(HEAD_REF) == 0.0        # opted out, no claim
+
+
+class TestAutoElection:
+    TTL = 6.0
+
+    def _leased_primary(self, cas, clock):
+        """A primary whose journal heartbeats a liveness lease."""
+        journal = EventJournal(cas, batch_size=3, lease_ttl_s=self.TTL,
+                               clock=clock)
+        svc = FabricService(seed=7, cas=cas, device_classes=DEVICES,
+                            journal=journal)
+        for tenant, quota in QUOTAS.items():
+            svc.set_quota(tenant, quota)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        svc.journal.flush()
+        return svc
+
+    def _follower(self, cas, clock, **kw):
+        kw.setdefault("auto_promote", True)
+        kw.setdefault("lease_ttl_s", self.TTL)
+        return FollowerFabric(cas, batch_size=3, clock=clock, **kw)
+
+    def test_fresh_lease_stands_down(self):
+        cas, clock = CAS(), FakeClock()
+        self._leased_primary(cas, clock)
+        f = self._follower(cas, clock)
+        f.catch_up()
+        status = f.lease_status()
+        assert status["held"] and not status["expired"]
+        assert status["remaining_s"] == pytest.approx(self.TTL)
+        assert f.maybe_elect() is None and f.promoted is None
+
+    def test_single_follower_self_promotes(self):
+        cas, clock = CAS(), FakeClock()
+        svc = self._leased_primary(cas, clock)
+        f = self._follower(cas, clock)
+        f.catch_up()
+        clock.advance(self.TTL + 1.0)        # the primary went silent
+        assert f.lease_status()["expired"]
+        new = f.maybe_elect()
+        assert new is not None and f.promoted is new
+        assert f.elections_won == 1 and f.elections_lost == 0
+        assert cas.ref_entry(HEAD_REF)[1] == 1 == new.journal.epoch
+        # the takeover stamped a fresh lease: rivals stand down instead of
+        # re-electing over the winner, and the winner itself can later be
+        # failed over by the same machinery
+        assert cas.ref_lease(HEAD_REF) == clock.t + self.TTL
+        # the silent primary is a zombie now: heartbeat and append fenced
+        with pytest.raises(RefFencedError):
+            svc.journal.heartbeat_lease(force=True)
+        svc.journal.on_event(E.WorkflowSubmitted(time=9.0, dag_id="z",
+                                                 tenant="acme"))
+        with pytest.raises(RefFencedError):
+            svc.journal.flush()
+        # the winner serves read-write under the new epoch
+        job = new.submit(spec_doc("acme", "post-election"))
+        new.run_until_idle()
+        assert new.job(job["job_id"])["status"] == "completed"
+        # observability: status + metrics carry the election
+        status = f.replication_status()
+        assert status["auto_promote"] is True
+        assert status["elections"] == {"won": 1, "lost": 0}
+        assert 'fabric_elections_total{outcome="won"} 1' in f.metrics.render()
+
+    def test_lease_less_head_never_auto_promoted(self):
+        """A primary that does not heartbeat (legacy deploy, offline tool)
+        opted out of auto-failover: only an operator promote moves it."""
+        cas, clock = CAS(), FakeClock()
+        svc = build_service(cas, batch_size=3)       # journal has no TTL
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        svc.journal.flush()
+        f = self._follower(cas, clock)
+        f.catch_up()
+        assert f.lease_status() == {"held": False, "until": None,
+                                    "remaining_s": None, "expired": False}
+        clock.advance(1e9)
+        assert f.maybe_elect() is None and f.promoted is None
+        assert f.promote().journal.epoch == 1        # manual path still open
+
+    def test_unarmed_follower_ignores_expiry(self):
+        cas, clock = CAS(), FakeClock()
+        self._leased_primary(cas, clock)
+        f = self._follower(cas, clock, auto_promote=False)
+        f.catch_up()
+        clock.advance(self.TTL * 3)
+        assert f.lease_status()["expired"]
+        assert f.maybe_elect() is None and f.promoted is None
+
+    def test_two_followers_exactly_one_wins(self):
+        """The election race: both observe the same expired (key, epoch)
+        and CAS concurrently — the fence admits exactly one."""
+        cas, clock = CAS(), FakeClock()
+        self._leased_primary(cas, clock)
+        f1, f2 = self._follower(cas, clock), self._follower(cas, clock)
+        f1.catch_up(), f2.catch_up()
+        clock.advance(self.TTL + 2.0)
+        _, epoch = cas.ref_entry(HEAD_REF)
+        results: dict[str, object] = {}
+        barrier = threading.Barrier(2)
+
+        def race(name, f):
+            barrier.wait()
+            try:
+                results[name] = f.promote(expect_epoch=epoch)
+            except RefFencedError as exc:
+                results[name] = exc
+
+        threads = [threading.Thread(target=race, args=(n, f))
+                   for n, f in (("f1", f1), ("f2", f2))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        wins = {n for n, v in results.items()
+                if not isinstance(v, RefFencedError)}
+        assert len(results) == 2 and len(wins) == 1, results
+        winner_f, loser_f = (f1, f2) if wins == {"f1"} else (f2, f1)
+        assert winner_f.promoted is not None and loser_f.promoted is None
+        assert cas.ref_entry(HEAD_REF)[1] == 1       # exactly one bump
+        # the loser simply resumes tailing the winner's appends...
+        winner = winner_f.promoted
+        winner.submit(spec_doc("acme", "after-election"))
+        winner.run_until_idle()
+        winner.journal.flush()
+        loser_f.catch_up()
+        assert _event_sourced_projection(loser_f.view) == \
+            _event_sourced_projection(winner)
+        # ...and stands down at its next wake: the winner's lease is fresh
+        assert loser_f.maybe_elect() is None
+
+    def test_election_lost_mid_observation_resumes_tailing(self, monkeypatch):
+        """A rival lands its takeover in the window between this follower's
+        lease observation and its own CAS: the pinned promote is refused,
+        the loss is counted, and the follower keeps tailing the winner."""
+        cas, clock = CAS(), FakeClock()
+        self._leased_primary(cas, clock)
+        f = self._follower(cas, clock)
+        f.catch_up()
+        clock.advance(self.TTL + 1.0)
+        _, epoch = cas.ref_entry(HEAD_REF)
+        rival = self._follower(cas, clock)
+        fired = []
+        real_ref_lease = cas.ref_lease
+
+        def racing_ref_lease(name):
+            out = real_ref_lease(name)       # observed: held and expired
+            if not fired:
+                fired.append(True)
+                rival.promote(expect_epoch=epoch)
+            return out
+
+        monkeypatch.setattr(cas, "ref_lease", racing_ref_lease)
+        assert f.maybe_elect() is None
+        assert f.elections_lost == 1 and f.promoted is None
+        assert rival.promoted is not None
+        assert 'fabric_elections_total{outcome="lost"} 1' in f.metrics.render()
+        winner = rival.promoted
+        winner.submit(spec_doc("acme", "rival-won"))
+        winner.run_until_idle()
+        winner.journal.flush()
+        f.catch_up()
+        assert _event_sourced_projection(f.view) == \
+            _event_sourced_projection(winner)
+        assert f.maybe_elect() is None       # fresh lease: stands down
+
+    def test_promote_forwards_device_classes(self):
+        """Regression: promote() used to drop the follower's pinned
+        ``device_classes`` and restore with the defaults — the promoted
+        engine's worker pool must be shaped like the standby was told."""
+        cas = CAS()
+        svc = build_service(cas, batch_size=3)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        svc.journal.flush()
+        follower = FollowerFabric(cas, batch_size=3,
+                                  device_classes=("rtx4090-24g",))
+        assert {w.dev.name for w in
+                follower.view.engine.workers.values()} == {"rtx4090-24g"}
+        promoted = follower.promote()
+        assert {w.dev.name for w in
+                promoted.engine.workers.values()} == {"rtx4090-24g"}
+
+    def test_tail_loop_auto_promotes_and_notifies(self):
+        """Real-time integration: a served standby's tail loop detects the
+        expired lease on a timeout wake-up and elects itself — no head
+        movement, no operator action."""
+        cas = CAS()
+        journal = EventJournal(cas, batch_size=3, lease_ttl_s=0.3)
+        svc = FabricService(seed=7, cas=cas, device_classes=DEVICES,
+                            journal=journal)
+        for tenant, quota in QUOTAS.items():
+            svc.set_quota(tenant, quota)
+        run_schedule(svc, [("submit", 0, 0), ("drain",)])
+        svc.journal.flush()                  # last heartbeat, then "kill -9"
+        promoted_cb = []
+        f = FollowerFabric(cas, batch_size=3, auto_promote=True,
+                           lease_ttl_s=0.3)
+        f.on_promoted = promoted_cb.append
+        stop, lock = threading.Event(), threading.RLock()
+        t = threading.Thread(target=f.tail_loop, args=(stop, lock),
+                             kwargs={"poll_interval_s": 0.01,
+                                     "wake_every_s": 0.05}, daemon=True)
+        t.start()
+        deadline = time.time() + 30
+        while f.promoted is None and time.time() < deadline:
+            time.sleep(0.02)
+        stop.set()
+        t.join(timeout=10)
+        assert f.promoted is not None and f.elections_won == 1
+        assert promoted_cb == [f.promoted]
+        assert cas.ref_entry(HEAD_REF)[1] == 1
