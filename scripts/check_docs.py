@@ -1,0 +1,203 @@
+#!/usr/bin/env python
+"""Docs hygiene: the runbooks must not drift from the CLI they document.
+
+Two checks, both against the *live* ``--help`` output (no hand-kept
+allowlist to rot):
+
+  1. every ``fabric_cli.py`` / ``worker_main.py`` invocation in README.md
+     and docs/*.md names only subcommands and flags that actually exist —
+     per subcommand, so a flag that moved (say ``--lease-ttl`` from
+     ``serve`` to ``follow``) fails even though it still exists somewhere;
+  2. every relative markdown link in README.md, DESIGN.md and docs/*.md
+     resolves to a real file.
+
+Exit 0 when clean; prints every violation (file:line) and exits 1
+otherwise. Run by the ``docs`` CI stage.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+FLAG_RE = re.compile(r"^--[A-Za-z][A-Za-z0-9-]*")
+# argparse usage/help lines: "--flag METAVAR" means the flag takes a value
+HELP_FLAG_RE = re.compile(r"--([A-Za-z][A-Za-z0-9-]*)(?:[ =]([A-Z][A-Z_]*))?")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+INLINE_CODE_RE = re.compile(r"`([^`\n]+)`")
+
+
+def cli_help(script: str, *args: str) -> str:
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / script), *args, "--help"],
+        capture_output=True, text=True, cwd=ROOT,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    if out.returncode != 0:
+        raise SystemExit(f"{script} {' '.join(args)} --help failed:\n"
+                         f"{out.stderr}")
+    return out.stdout
+
+
+def parse_flags(help_text: str) -> tuple[set[str], set[str]]:
+    """(all flags, flags that take a value) mentioned in a help text."""
+    flags, valued = set(), set()
+    for name, metavar in HELP_FLAG_RE.findall(help_text):
+        flags.add(f"--{name}")
+        if metavar:
+            valued.add(f"--{name}")
+    return flags, valued
+
+
+def load_cli_surface() -> tuple[dict, set[str], set[str], dict]:
+    top = cli_help("fabric_cli.py")
+    m = re.search(r"\{([a-z0-9_,-]+)\}", top)
+    if not m:
+        raise SystemExit("could not find subcommand list in fabric_cli "
+                         "--help")
+    subcommands = set(m.group(1).split(","))
+    global_flags, global_valued = parse_flags(top)
+    flags_by_sub: dict[str, set[str]] = {}
+    valued: set[str] = set(global_valued)
+    for sub in sorted(subcommands):
+        sub_flags, sub_valued = parse_flags(cli_help("fabric_cli.py", sub))
+        flags_by_sub[sub] = sub_flags | global_flags
+        valued |= sub_valued
+    worker_flags, worker_valued = parse_flags(cli_help("worker_main.py"))
+    valued |= worker_valued
+    return flags_by_sub, global_flags, worker_flags, {
+        "subcommands": subcommands, "valued": valued}
+
+
+def doc_files() -> list[Path]:
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def link_files() -> list[Path]:
+    return [ROOT / "README.md", ROOT / "DESIGN.md",
+            *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def iter_commands(text: str):
+    """Yield (first_line_no, joined_command) for shell-ish lines, with
+    backslash continuations folded and trailing comments stripped."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i].strip()
+        start = i + 1
+        while line.endswith("\\") and i + 1 < len(lines):
+            i += 1
+            line = line[:-1].rstrip() + " " + lines[i].strip()
+        i += 1
+        line = re.sub(r"(^|\s)#.*$", "", line).strip()
+        if line:
+            yield start, line
+
+
+def check_command(tokens: list[str], flags_by_sub: dict,
+                  global_flags: set[str], subcommands: set[str],
+                  valued: set[str]) -> list[str]:
+    """Validate one fabric_cli argv tail: subcommand exists, flags exist
+    for (global ∪ that subcommand)."""
+    problems = []
+    sub = next((t for t in tokens if t in subcommands), None)
+    allowed = flags_by_sub.get(sub, set.union(set(), global_flags,
+                                              *flags_by_sub.values()))
+    skip_value = False
+    saw_positional_before_sub = False
+    for tok in tokens[:tokens.index(sub)] if sub else tokens:
+        if FLAG_RE.match(tok):
+            skip_value = tok.split("=", 1)[0] in valued and "=" not in tok
+            continue
+        if skip_value:
+            skip_value = False
+            continue
+        saw_positional_before_sub = True
+    if sub is None and saw_positional_before_sub:
+        problems.append(f"no known fabric_cli subcommand in: "
+                        f"{' '.join(tokens[:6])} …")
+    for tok in tokens:
+        if not FLAG_RE.match(tok):
+            continue
+        flag = tok.split("=", 1)[0]
+        if flag not in allowed:
+            where = f"fabric_cli {sub}" if sub else "fabric_cli"
+            problems.append(f"unknown flag {flag} for {where}")
+    return problems
+
+
+def main() -> int:
+    flags_by_sub, global_flags, worker_flags, meta = load_cli_surface()
+    subcommands, valued = meta["subcommands"], meta["valued"]
+    all_known = set.union(global_flags, worker_flags, *flags_by_sub.values())
+    errors: list[str] = []
+
+    for path in doc_files():
+        rel = path.relative_to(ROOT)
+        text = path.read_text()
+        for lineno, cmd in iter_commands(text):
+            if "python" not in cmd:     # a path mention, not an invocation
+                continue
+            if "fabric_cli.py" in cmd:
+                tail = cmd.split("fabric_cli.py", 1)[1].split()
+                for p in check_command(tail, flags_by_sub, global_flags,
+                                       subcommands, valued):
+                    errors.append(f"{rel}:{lineno}: {p}")
+            elif "worker_main.py" in cmd:
+                tail = cmd.split("worker_main.py", 1)[1].split()
+                for tok in tail:
+                    if FLAG_RE.match(tok) \
+                            and tok.split("=", 1)[0] not in worker_flags:
+                        errors.append(f"{rel}:{lineno}: unknown "
+                                      f"worker_main flag {tok}")
+        # prose mentions: `--flag` or `subcmd --flag ...` inline spans
+        for lineno, line in enumerate(text.splitlines(), 1):
+            if line.strip().startswith(("```", "    ")):
+                continue
+            for span in INLINE_CODE_RE.findall(line):
+                tokens = span.split()
+                if not tokens:
+                    continue
+                if FLAG_RE.match(tokens[0]) and len(tokens) == 1:
+                    flag = tokens[0].split("=", 1)[0]
+                    if flag not in all_known:
+                        errors.append(f"{rel}:{lineno}: unknown CLI flag "
+                                      f"`{span}` in prose")
+                elif tokens[0] in subcommands \
+                        and any(FLAG_RE.match(t) for t in tokens[1:]):
+                    for t in tokens[1:]:
+                        if FLAG_RE.match(t) and t.split("=", 1)[0] \
+                                not in flags_by_sub[tokens[0]]:
+                            errors.append(
+                                f"{rel}:{lineno}: `{span}`: {t} is not a "
+                                f"flag of fabric_cli {tokens[0]}")
+
+    for path in link_files():
+        rel = path.relative_to(ROOT)
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                dest = (path.parent / target.split("#", 1)[0]).resolve()
+                if not dest.exists():
+                    errors.append(f"{rel}:{lineno}: broken link "
+                                  f"({target})")
+
+    if errors:
+        print(f"docs hygiene: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_cmds = len(subcommands)
+    print(f"docs hygiene OK: {len(doc_files())} docs checked against "
+          f"{n_cmds} fabric_cli subcommands, {len(all_known)} flags; "
+          f"links resolve in {len(link_files())} files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

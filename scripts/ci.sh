@@ -23,6 +23,13 @@
 #                re-attaches, /jobs byte-equal to a full replay
 #   bench        fabric_throughput.py scoreboard -> BENCH_fabric.json
 #                (timed but non-gating: a slow host must not fail CI)
+#   scenarios    digital-twin scenario suite (DESIGN.md §15) against live
+#                fabrics: steady mix / dedup-hostile / deadline bursts on
+#                plain serves, a worker SIGKILL mid-run on --remote-workers,
+#                and a primary SIGKILL under --auto-promote through
+#                ClusterAPI; every report appends to BENCH_fabric.json
+#   docs         check_docs.py: every CLI flag named in README/docs exists
+#                in --help, every relative markdown link resolves
 #   hygiene      git tree still clean (nothing generated into the repo)
 #
 # On any gating-stage failure the trap snapshots GET /metrics and the
@@ -587,6 +594,135 @@ stage_bench() {
     fi
 }
 
+stage_scenarios() {
+    # the digital-twin suite (DESIGN.md §15): every checked-in scenario
+    # replayed against a LIVE fabric, each report appended machine-tagged
+    # to the BENCH trajectory. Three traffic shapes get a fresh plain
+    # serve each (no cross-scenario dedup pollution); the two fault
+    # drills run against the topology they exercise, with the scenario's
+    # own timeline delivering the SIGKILL.
+    local dir="$ARTIFACTS/scenarios"
+    rm -rf "$dir" && mkdir -p "$dir"
+
+    local sc url pid
+    for sc in steady_mix dedup_hostile burst_deadline; do
+        python scripts/fabric_cli.py serve --port 0 \
+            > "$ARTIFACTS/sc-$sc.log" 2>&1 &
+        pid=$!
+        PIDS_TO_KILL+=("$pid")
+        url=$(wait_for_url "$ARTIFACTS/sc-$sc.log")
+        SERVER_URLS+=("$url")
+        python scripts/fabric_cli.py --url "$url" scenario run \
+            "scenarios/$sc.yaml" --trajectory BENCH_fabric.json \
+            --out "$dir/$sc.json" > /dev/null
+        python - "$dir/$sc.json" <<'PY'
+import json, sys
+r = json.load(open(sys.argv[1]))
+j = r["jobs"]
+assert j["submitted"] == j["completed"], j   # plain serve loses nothing
+print(f"{r['scenario']}: {j['completed']}/{j['submitted']} jobs, "
+      f"SLO {r['slo']['hit_rate']}, dedup {r['dedup']['ratio']}, "
+      f"${r['cost']['per_job_usd']}/job")
+PY
+        kill "$pid" 2>/dev/null || true
+        wait "$pid" 2>/dev/null || true
+    done
+
+    # dedup economics must hold live, not just in the virtual golden runs
+    python - "$dir/steady_mix.json" "$dir/dedup_hostile.json" <<'PY'
+import json, sys
+mix, hostile = (json.load(open(p)) for p in sys.argv[1:3])
+assert mix["dedup"]["ratio"] > 0.3, mix["dedup"]
+assert hostile["dedup"]["ratio"] < 0.2, hostile["dedup"]
+ratio = hostile["cost"]["per_job_usd"] / max(mix["cost"]["per_job_usd"],
+                                             1e-9)
+assert ratio > 1.5, (ratio, "consolidation stopped paying")
+print(f"consolidation saving live: {ratio:.1f}x $/job "
+      f"(hostile {hostile['cost']['per_job_usd']} vs "
+      f"mix {mix['cost']['per_job_usd']})")
+PY
+
+    # worker preemption: two real worker processes, the scenario timeline
+    # SIGKILLs worker-a at t=20; the survivor must drain everything
+    python scripts/fabric_cli.py serve --port 0 --remote-workers \
+        --lease-ttl 2 > "$ARTIFACTS/sc-wp-serve.log" 2>&1 &
+    local wp_pid=$!
+    PIDS_TO_KILL+=("$wp_pid")
+    url=$(wait_for_url "$ARTIFACTS/sc-wp-serve.log")
+    SERVER_URLS+=("$url")
+    python scripts/worker_main.py --url "$url" --worker-id worker-a \
+        --device-class h100-nvl-94g > "$ARTIFACTS/sc-wp-a.log" 2>&1 &
+    local wa_pid=$!
+    PIDS_TO_KILL+=("$wa_pid")
+    python scripts/worker_main.py --url "$url" --worker-id worker-b \
+        --device-class h100-nvl-94g > "$ARTIFACTS/sc-wp-b.log" 2>&1 &
+    PIDS_TO_KILL+=("$!")
+    python scripts/fabric_cli.py --url "$url" scenario run \
+        scenarios/worker_preemption.yaml --pid "worker-a=$wa_pid" \
+        --trajectory BENCH_fabric.json \
+        --out "$dir/worker_preemption.json" > /dev/null
+    python - "$dir/worker_preemption.json" <<'PY'
+import json, sys
+r = json.load(open(sys.argv[1]))
+assert r["faults"] == [{"t": 20.0, "kind": "worker_kill",
+                        "target": "worker-a", "fired": True}], r["faults"]
+j = r["jobs"]
+assert j["submitted"] == j["completed"], j   # survivor drained everything
+print(f"worker preemption: fault fired, {j['completed']}/{j['submitted']} "
+      f"jobs completed on the surviving lane")
+PY
+    kill "$wp_pid" 2>/dev/null || true
+    wait "$wp_pid" 2>/dev/null || true
+
+    # primary kill under self-healing HA: leased primary + auto-promote
+    # standby, traffic through ClusterAPI; the timeline SIGKILLs the
+    # primary at t=24 and the report must still account for every job
+    local hadir="$dir/ha-cas"
+    python scripts/fabric_cli.py serve --port 0 --journal "$hadir" \
+        --commit-latency 0.2 --head-lease-ttl 2 \
+        > "$ARTIFACTS/sc-pf-primary.log" 2>&1 &
+    local pf_pid=$!
+    PIDS_TO_KILL+=("$pf_pid")
+    local purl furl
+    purl=$(wait_for_url "$ARTIFACTS/sc-pf-primary.log")
+    python scripts/fabric_cli.py follow --port 0 --journal "$hadir" \
+        --auto-promote --head-lease-ttl 2 \
+        > "$ARTIFACTS/sc-pf-follower.log" 2>&1 &
+    local pf_fol=$!
+    PIDS_TO_KILL+=("$pf_fol")
+    furl=$(wait_for_url "$ARTIFACTS/sc-pf-follower.log")
+    SERVER_URLS+=("$furl")
+    python scripts/fabric_cli.py --url "$purl,$furl" scenario run \
+        scenarios/primary_failover.yaml --pid "primary=$pf_pid" \
+        --trajectory BENCH_fabric.json \
+        --out "$dir/primary_failover.json" > /dev/null
+    python - "$dir/primary_failover.json" <<'PY'
+import json, sys
+r = json.load(open(sys.argv[1]))
+assert r["faults"] == [{"t": 24.0, "kind": "primary_kill",
+                        "target": "primary", "fired": True}], r["faults"]
+j = r["jobs"]
+total = (j["completed"] + j["cancelled"] + j["rejected"] + j["lost"]
+         + j["unresolved"])
+assert total == j["submitted"], j            # report is COMPLETE
+assert j["unresolved"] == 0, j               # everything classified
+# losses are bounded by the unflushed group-commit window at the kill
+assert j["completed"] >= j["submitted"] - 3, j
+print(f"primary failover: fault fired, {j['completed']}/{j['submitted']} "
+      f"completed across the election ({j['lost']} lost in the commit "
+      f"window, {j['cancelled']} cancelled by the restore)")
+PY
+    grep -q "self-promoted" "$ARTIFACTS/sc-pf-follower.log"
+    echo "follower log confirms the election:"
+    grep -h "self-promoted" "$ARTIFACTS/sc-pf-follower.log" | head -1
+    kill "$pf_fol" 2>/dev/null || true
+    wait "$pf_fol" 2>/dev/null || true
+}
+
+stage_docs() {
+    python scripts/check_docs.py
+}
+
 stage_hygiene() {
     # nothing above may have dirtied the checkout (generated files belong
     # in $ARTIFACTS; bytecode is gitignored). BENCH_fabric.json is the one
@@ -610,6 +746,8 @@ stage failover stage_failover
 stage workers stage_workers
 stage ha stage_ha
 stage bench stage_bench
+stage scenarios stage_scenarios
+stage docs stage_docs
 stage hygiene stage_hygiene
 
 echo

@@ -262,8 +262,13 @@ class FlowMeshEngine:
             # virtual time still (progress arrives via the transport)
             # instead of spinning timers up to the stall limit.
             return False
-        if (self._unfinished and
+        if (self._unfinished and not self._real_events and
                 ev.time - self._last_progress > self.cfg.stall_limit_s):
+            # starvation means NOTHING real is coming: when a genuine event
+            # (e.g. a batch_done for a training batch longer than the stall
+            # limit) is queued behind the timers, declaring a stall here
+            # would wedge the engine forever — the timer at the heap head
+            # would never pop, so the real event could never be reached
             if not self.stalled:           # emit once per stall onset
                 self.stalled = True
                 self._emit(E.StallDetected(pending=self._unfinished))
@@ -798,12 +803,20 @@ class FlowMeshEngine:
         self._schedule_dispatch()
 
     # ------------------------------------------------------------ finalize --
-    def _finalize(self) -> None:
+    def cost_energy(self) -> tuple[float, float]:
+        """Current ($, joules) meter integrals across every worker lifetime,
+        up to virtual ``now``. Read-only: usable mid-flight by a pump-driven
+        service (``GET /health``), where ``run_until_idle``'s finalize
+        snapshot never fires."""
         cost = energy = 0.0
         for w in self.workers.values():
             d, j = w.meter.totals(self.now)
             cost += d
             energy += j
+        return cost, energy
+
+    def _finalize(self) -> None:
+        cost, energy = self.cost_energy()
         # $ and J are meter integrals, not transitions: snapshotted through
         # the bus so telemetry stays purely event-derived
         self._emit(E.CostSnapshot(total_cost=cost, total_energy_j=energy))

@@ -707,6 +707,11 @@ class FabricService:
             "executions": eng.telemetry.executions,
             "dedup_savings": eng.telemetry.dedup_savings,
         }
+        # live meter integrals (run_until_idle's CostSnapshot never fires
+        # under pump-driven operation, so the scenario engine reads them here)
+        cost, energy = eng.cost_energy()
+        out["cost"] = {"total_usd": round(cost, 6),
+                       "total_energy_j": round(energy, 3)}
         if self.journal is not None:
             # `written` counts this process only — after a restore the
             # durable history lives behind `head`, not in this counter
